@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference vs the Pallas
+kernel in interpret mode. NOTE: interpret mode runs the kernel body via the
+Python interpreter on CPU — numbers are for CSV completeness and correctness
+cross-checking, NOT TPU performance (see EXPERIMENTS.md §Roofline for the
+structural analysis)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def bench_flash() -> Dict:
+    from repro.kernels.flash.ref import attention_ref
+
+    key = jax.random.PRNGKey(0)
+    B, H, S, HD = 2, 4, 512, 64
+    q, k, v = (jax.random.normal(kk, (B, H, S, HD)) for kk in jax.random.split(key, 3))
+    ref = jax.jit(lambda a, b, c: attention_ref(a, b, c, True, 0))
+    us_ref = _time(ref, q, k, v)
+    return {"name": "flash_ref_jit", "us_per_call": us_ref,
+            "derived": f"B{B}H{H}S{S}D{HD}"}
+
+
+def bench_sdca() -> Dict:
+    from repro.core.losses import get_loss
+    from repro.core.sdca import local_sdca_block, sample_coords
+
+    key = jax.random.PRNGKey(1)
+    n, d, H = 2048, 512, 512
+    x = jax.random.normal(key, (n, d))
+    y = jnp.sign(jax.random.normal(key, (n,)))
+    alpha = jnp.zeros((n,))
+    w = jnp.zeros((d,))
+    coords = sample_coords(key, H, jnp.int32(n), n)
+    loss = get_loss("hinge")
+    fn = jax.jit(
+        lambda: local_sdca_block(
+            x, y, alpha, w, jnp.int32(n), jnp.float32(0.2), coords, 2.0, 1e-4, loss,
+            block=64,
+        )
+    )
+    us = _time(lambda: fn())
+    return {"name": "sdca_block_jit", "us_per_call": us,
+            "derived": f"n{n}d{d}H{H}B64"}
+
+
+def bench_ssd() -> Dict:
+    from repro.models.ssm import ssd_chunked
+
+    key = jax.random.PRNGKey(2)
+    B, L, Hh, P, N = 2, 512, 8, 32, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, L, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, Hh))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)))
+    Bm = jax.random.normal(ks[3], (B, L, Hh, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, L, Hh, N)) * 0.3
+    fn = jax.jit(lambda: ssd_chunked(x, dt, A, Bm, Cm, 64))
+    us = _time(lambda: fn())
+    return {"name": "ssd_chunked_jit", "us_per_call": us,
+            "derived": f"B{B}L{L}H{Hh}P{P}N{N}"}
+
+
+ALL = {"flash": bench_flash, "sdca": bench_sdca, "ssd": bench_ssd}

@@ -1,0 +1,86 @@
+"""Roofline table generator: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md §Dry-run and §Roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(out_dir: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_seconds(x) -> str:
+    if x is None:
+        return "-"
+    x = float(x)
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(rows: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS/HLO | HBM bytes/dev | coll bytes/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - | "
+                f"skipped ({r['reason'][:40]}...) |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - | "
+                f"ERROR |"
+            )
+            continue
+        lines.append(
+            "| {arch} | {shape} | {c} | {m} | {k} | **{dom}** | {ratio:.3f} | "
+            "{hbm:.1f} GB | {coll:.2f} GB | ok |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                c=fmt_seconds(r["compute_s"]),
+                m=fmt_seconds(r["memory_s"]),
+                k=fmt_seconds(r["collective_s"]),
+                dom=r["dominant"],
+                ratio=r["useful_flops_ratio"],
+                hbm=r["bytes_per_device"] / 1e9,
+                coll=r["collective_bytes_per_device"] / 1e9,
+            )
+        )
+    return "\n".join(lines)
+
+
+def summary(rows: List[Dict]) -> Dict:
+    n_ok = sum(1 for r in rows if r["status"] == "ok")
+    n_skip = sum(1 for r in rows if r["status"] == "skipped")
+    n_err = sum(1 for r in rows if r["status"] not in ("ok", "skipped"))
+    return {"ok": n_ok, "skipped": n_skip, "errors": n_err, "total": len(rows)}
+
+
+def main(out_dir: str = "results/dryrun"):
+    rows = load_rows(out_dir)
+    print("dry-run grid:", summary(rows))
+    for mesh in ("single", "multi"):
+        print(f"\n== mesh: {mesh} ==")
+        print(roofline_table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark driver. One benchmark per paper table/figure plus kernel
+micro-benches and the roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig2 table2
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the full metric
+dicts to results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import paper
+    from benchmarks import bench_kernels
+    from benchmarks import bench_roofline
+
+    selected = sys.argv[1:] or (
+        list(paper.ALL) + list(bench_kernels.ALL) + ["roofline"]
+    )
+    results = []
+    print("name,us_per_call,derived")
+    for name in selected:
+        if name in paper.ALL:
+            t0 = time.time()
+            row = paper.ALL[name]()
+            us = (time.time() - t0) * 1e6
+            derived = row.get("claim", "") + f" -> pass={row.get('pass')}"
+            print(f"{row['name']},{us:.0f},{derived}", flush=True)
+            results.append(row)
+        elif name in bench_kernels.ALL:
+            row = bench_kernels.ALL[name]()
+            print(f"{row['name']},{row['us_per_call']:.0f},{row['derived']}",
+                  flush=True)
+            results.append(row)
+        elif name == "roofline":
+            rows = bench_roofline.load_rows()
+            s = bench_roofline.summary(rows)
+            print(f"roofline_grid,0,{s}", flush=True)
+            results.append({"name": "roofline_grid", **s})
+        else:
+            print(f"{name},0,UNKNOWN BENCH", file=sys.stderr)
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    npass = sum(1 for r in results if r.get("pass") is True)
+    nfail = sum(1 for r in results if r.get("pass") is False)
+    print(f"# paper-claim benches: {npass} pass, {nfail} fail", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: DMTRL on the paper's Synthetic-1 dataset.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Learns 16 related binary tasks jointly with the distributed primal-dual
+algorithm, recovers the task-correlation structure, and compares against
+single-task learning.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DMTRLConfig, fit, correlation_from_sigma
+from repro.core import dual as dm
+from repro.core.baselines import fit_stl
+from repro.data.synthetic import synthetic
+
+
+def main():
+    print("generating Synthetic-1 (16 tasks, 3 parent groups, +- children)...")
+    sp = synthetic(1, m=16, d=100, n_train_avg=300, n_test_avg=150, seed=0)
+
+    cfg = DMTRLConfig(
+        loss="hinge",
+        lam=1e-4,
+        outer_iters=4,  # P: alternations of (W-step, Omega-step)
+        rounds=10,  # T: communication rounds per W-step
+        local_iters=512,  # H: local SDCA iterations per round
+        sdca_mode="block",  # block-Gram TPU-shaped local solver
+        block_size=64,
+        seed=0,
+    )
+    print("fitting DMTRL (Algorithm 1)...")
+    res = fit(cfg, sp.train)
+    print(f"  duality gap: {res.history['gap'][0]:.3f} -> {res.history['gap'][-1]:.4f}")
+    print(f"  rho per outer iteration: {[round(r,2) for r in res.rho_per_outer]}")
+
+    stl = fit_stl(cfg, sp.train)
+    err_mtl = float(dm.error_rate(sp.test, jnp.asarray(res.W)))
+    err_stl = float(dm.error_rate(sp.test, jnp.asarray(stl.W)))
+    print(f"  test error: DMTRL {err_mtl:.3f}  vs  STL {err_stl:.3f}")
+
+    learned = np.asarray(correlation_from_sigma(res.sigma))
+    iu = np.triu_indices(16, k=1)
+    align = np.corrcoef(learned[iu], sp.corr_true[iu])[0, 1]
+    print(f"  task-correlation recovery alignment: {align:.3f}")
+    print("\nlearned correlation matrix (rounded):")
+    with np.printoptions(precision=1, suppress=True, linewidth=200):
+        print(learned)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver: pretrain a small LM backbone, then fit DMTRL
+multi-task heads on its features — the full backbone <-> paper-technique
+bridge.
+
+    PYTHONPATH=src python examples/train_lm_mtl.py --steps 200 --arch gemma3-1b
+
+(reduced config on CPU; on a pod the same script scales via --no-reduced +
+repro.launch.train's sharded path.)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DMTRLConfig
+from repro.core import dual as dm
+from repro.data.tokens import SyntheticTokenPipeline, TokenPipelineConfig
+from repro.train import AdamW, TrainLogger, train
+from repro.train.mtl_head import build_mtl_data_from_backbone, fit_mtl_heads
+
+
+def make_task_datasets(cfg, m_tasks=6, n_per_task=48, seq=32, seed=0):
+    """Per-'tenant' token classification tasks: each task prefers a distinct
+    token-id band; labels = whether the sequence leans into that band."""
+    rng = np.random.RandomState(seed)
+    tokens, labels = [], []
+    V = cfg.vocab_size
+    for t in range(m_tasks):
+        lo = (t * V) // m_tasks
+        hi = ((t + 1) * V) // m_tasks
+        toks = np.zeros((n_per_task, seq), np.int32)
+        y = np.zeros((n_per_task,), np.float32)
+        for i in range(n_per_task):
+            pos = rng.rand() < 0.5
+            if pos:
+                toks[i] = rng.randint(lo, hi, size=seq)
+            else:
+                toks[i] = rng.randint(0, V, size=seq)
+            y[i] = 1.0 if pos else -1.0
+        tokens.append(toks), labels.append(y)
+    return tokens, labels
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"1) pretraining backbone {cfg.name} for {args.steps} steps...")
+    pipe = SyntheticTokenPipeline(
+        TokenPipelineConfig(cfg.vocab_size, args.seq, args.batch, seed=0)
+    )
+    opt = AdamW(lr=3e-3, warmup_steps=10, total_steps=args.steps)
+    params, _, hist = train(
+        cfg, opt, iter(pipe), steps=args.steps, logger=TrainLogger(every=25)
+    )
+    print(f"   loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    print("2) building per-task phi features from the backbone...")
+    toks, labs = make_task_datasets(cfg)
+    result = fit_mtl_heads(
+        cfg,
+        params,
+        toks,
+        labs,
+        DMTRLConfig(loss="hinge", lam=1e-3, outer_iters=3, rounds=8,
+                    local_iters=128, seed=0),
+    )
+    print(f"   phi dim = {result.features_dim}")
+
+    print("3) evaluating the DMTRL heads on held-out task data...")
+    toks_te, labs_te = make_task_datasets(cfg, seed=1)
+    te = build_mtl_data_from_backbone(cfg, params, toks_te, labs_te)
+    err = float(dm.error_rate(te, jnp.asarray(result.dmtrl.W)))
+    print(f"   multi-task head test error: {err:.3f} (chance = 0.5)")
+    print("   learned task covariance diag:",
+          np.round(np.diag(np.asarray(result.dmtrl.sigma)), 3))
+
+
+if __name__ == "__main__":
+    main()

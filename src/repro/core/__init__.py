@@ -1,0 +1,40 @@
+"""DMTRL core: the paper's contribution as composable JAX modules."""
+from .dmtrl import DMTRLConfig, DMTRLResult, fit, w_step, make_w_step_round
+from .distributed import MeshAxes, fit_distributed, make_distributed_round
+from .losses import Loss, get_loss, registered_losses
+from .mtl_data import MTLData, from_task_list, normalize_rows
+from .omega import (
+    correlation_from_sigma,
+    init_sigma,
+    omega_step,
+    rho_lemma10,
+    rho_spectral,
+)
+from . import baselines, convergence, dual, feature_maps, sdca
+
+__all__ = [
+    "DMTRLConfig",
+    "DMTRLResult",
+    "fit",
+    "w_step",
+    "make_w_step_round",
+    "MeshAxes",
+    "fit_distributed",
+    "make_distributed_round",
+    "Loss",
+    "get_loss",
+    "registered_losses",
+    "MTLData",
+    "from_task_list",
+    "normalize_rows",
+    "correlation_from_sigma",
+    "init_sigma",
+    "omega_step",
+    "rho_lemma10",
+    "rho_spectral",
+    "baselines",
+    "convergence",
+    "dual",
+    "feature_maps",
+    "sdca",
+]

@@ -1,0 +1,179 @@
+"""Convergence-theory quantities (paper Section 6).
+
+These are *measurable* implementations of the theorem quantities so the
+benchmarks can check the theory against observed behaviour:
+
+ * Theta (Assumption 1): observed local-subproblem approximation quality.
+ * H bounds: Thm 4 (smooth) and Thm 5 (Lipschitz) lower bounds on local
+   SDCA iterations for a target Theta.
+ * T bounds: Thm 8 (smooth, linear rate) / Thm 9 (Lipschitz, O(1/T)).
+ * rho_min estimation by power iteration on the generalized Rayleigh
+   quotient of Eq. (5) (exact up to iteration tolerance, vs the Lemma 10
+   closed-form upper bound).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dual as dual_mod
+from .losses import Loss, get_loss
+from .mtl_data import MTLData
+
+Array = jax.Array
+
+
+def q_max(data: MTLData) -> float:
+    """max_j ||phi(x_j)||^2 over real (unmasked) samples."""
+    sq = jnp.sum(data.x**2, axis=-1) * data.mask
+    return float(jnp.max(sq))
+
+
+def h_bound_smooth(
+    theta: float, rho: float, sigma_ii: float, qmax: float, mu: float, lam: float, n_i: int
+) -> float:
+    """Theorem 4: H >= log(1/Theta) (rho sigma_ii q_max + mu lam n_i)/(mu lam)."""
+    return math.log(1.0 / theta) * (rho * sigma_ii * qmax + mu * lam * n_i) / (mu * lam)
+
+
+def t_bound_smooth(
+    eps_d: float,
+    eta: float,
+    theta: float,
+    lam: float,
+    mu: float,
+    rho: float,
+    n_star: int,
+    pi_star: float,
+    m: int,
+) -> float:
+    """Theorem 8 dual-suboptimality bound on communication rounds."""
+    k = (lam * mu + rho * n_star * pi_star) / (lam * mu)
+    return k / (eta * (1.0 - theta)) * math.log(m / eps_d)
+
+
+def t_bound_lipschitz(
+    eps_g: float, eta: float, theta: float, lam: float, rho: float, L: float, pi_sum: float, m: int
+) -> float:
+    """Theorem 9 (leading term): T >= T0 + max(ceil(1/(eta(1-Theta))),
+    4 L^2 pi rho / (lam eps_G eta (1-Theta)))."""
+    lead = 4.0 * L**2 * pi_sum * rho / (lam * eps_g * eta * (1.0 - theta))
+    t0 = max(
+        0.0,
+        math.ceil(1.0 / (eta * (1.0 - theta)) * math.log(max(2.0 * lam * m / max(4.0 * L**2 * pi_sum * rho, 1e-30), 1.0))),
+    )
+    T0 = t0 + max(0.0, 2.0 / (eta * (1.0 - theta)) * (8.0 * L**2 * pi_sum * rho / (lam * eps_g) - 1.0))
+    return T0 + max(math.ceil(1.0 / (eta * (1.0 - theta))), lead)
+
+
+def pi_i(data: MTLData, sigma_ii: Array) -> Array:
+    """pi_i = max_alpha (alpha^T K_[ii] alpha)/||alpha||^2
+            = (sigma_ii/n_i^2) ||X_i||_2^2 (spectral norm squared of rows).
+
+    Lemma 7 bounds it by sigma_ii / n_i for normalized features; we compute
+    the exact value per task via SVD of each task's (masked) data block.
+    """
+    def per_task(x, msk, n, sii):
+        xm = x * msk[:, None]
+        s = jnp.linalg.norm(xm, 2)  # largest singular value
+        nf = jnp.maximum(n.astype(x.dtype), 1.0)
+        return sii * (s**2) / nf**2
+
+    return jax.vmap(per_task)(data.x, data.mask, data.n, sigma_ii)
+
+
+def rho_min_power_iteration(
+    data: MTLData, sigma: Array, eta: float = 1.0, iters: int = 50, seed: int = 0
+) -> float:
+    """Estimate rho_min of Eq. (5) by power iteration on the generalized
+    eigenproblem  K alpha = nu * Kblock alpha  restricted to range(Kblock).
+
+    We work in b-space: with b_i = (1/n_i) X_i^T alpha_[i],
+        alpha^T K alpha        = sum_{ii'} sigma_ii' b_i . b_i'
+        sum_i alpha^T Kblk alpha = sum_i sigma_ii ||b_i||^2.
+    The sup over alpha equals the sup over b in the product of task column
+    spaces; we run projected power iteration in b-space (projection onto
+    each task's column space via its data matrix).
+    """
+    key = jax.random.PRNGKey(seed)
+    m, d = data.m, data.d
+    dd = jnp.sqrt(jnp.maximum(jnp.diag(sigma), 1e-30))
+
+    # orthonormal bases of each task's column space (masked rows)
+    def basis(x, msk):
+        xm = x * msk[:, None]
+        qq, rr = jnp.linalg.qr(xm.T, mode="reduced")  # (d, n_max)
+        keep = (jnp.abs(jnp.diag(rr)) > 1e-7).astype(x.dtype)
+        return qq * keep[None, :]
+
+    Q = jax.vmap(basis)(data.x, data.mask)  # (m, d, n_max)
+
+    def project(b):  # (m, d) -> (m, d), task-wise projection onto col spaces
+        return jnp.einsum("mdk,mk->md", Q, jnp.einsum("mdk,md->mk", Q, b))
+
+    b = jax.random.normal(key, (m, d))
+    b = project(b)
+
+    # generalized power iteration: maximize (b^T S b)/(b^T D b) with
+    # S = sigma (x) I on task blocks, D = diag(sigma_ii) (x) I.
+    val = 0.0
+    for _ in range(iters):
+        # whitened operator: A = D^{-1/2} S D^{-1/2}, then project
+        bw = b * dd[:, None]
+        num = jnp.einsum("ij,jd->id", sigma, b)
+        b_new = project(num / (dd**2)[:, None])
+        nrm = jnp.sqrt(jnp.sum((b_new * dd[:, None]) ** 2))
+        b = b_new / jnp.maximum(nrm, 1e-30)
+        num_v = jnp.einsum("id,ij,jd->", b, sigma, b)
+        den_v = jnp.sum((b * dd[:, None]) ** 2)
+        val = num_v / jnp.maximum(den_v, 1e-30)
+    return float(eta * val)
+
+
+def measure_theta(
+    data: MTLData,
+    i: int,
+    alpha: Array,
+    W: Array,
+    sigma: Array,
+    rho: float,
+    lam: float,
+    loss_name: str,
+    dalpha_i: Array,
+    ref_steps: int = 20000,
+    seed: int = 1234,
+) -> Dict[str, float]:
+    """Empirically measure Theta of Assumption 1 for one task:
+    run a very long SDCA to approximate the local optimum D*, then
+      Theta_hat = (D* - D(dalpha)) / (D* - D(0)).
+    """
+    from .sdca import local_sdca_naive, sample_coords
+
+    loss = get_loss(loss_name)
+    key = jax.random.PRNGKey(seed)
+    coords = sample_coords(key, ref_steps, data.n[i], data.n_max)
+    dstar, _ = local_sdca_naive(
+        data.x[i],
+        data.y[i],
+        alpha[i],
+        W[i],
+        data.n[i],
+        sigma[i, i],
+        coords,
+        rho,
+        lam,
+        loss,
+    )
+    obj = lambda da: dual_mod.local_subproblem_objective(
+        data, i, da, alpha, W[i], sigma[i, i], rho, lam, loss, data.m
+    )
+    d_star = float(obj(dstar))
+    d_cur = float(obj(dalpha_i))
+    d_zero = float(obj(jnp.zeros_like(dalpha_i)))
+    denom = d_star - d_zero
+    theta = (d_star - d_cur) / denom if abs(denom) > 1e-12 else 0.0
+    return {"theta": theta, "d_star": d_star, "d_cur": d_cur, "d_zero": d_zero}

@@ -1,0 +1,194 @@
+"""DMTRL Algorithm 1 — single-process reference driver.
+
+Implements the alternating procedure exactly as in the paper:
+
+  for p in 1..P:                      (alternating iterations)
+    for t in 1..T:                    (W-step rounds == communication rounds)
+      for each task i in parallel:    (vmap == the paper's workers)
+        dalpha_[i] <- LocalSDCA(alpha_[i], w_i, sigma_ii)     (H inner iters)
+        alpha_[i] += eta * dalpha_[i]
+        delta_b_i  = (eta/n_i) X_i^T dalpha_[i]
+      server: w_i += (1/lambda) sum_i' delta_b_i' sigma_ii'   (the reduce)
+    server: Sigma, Omega <- omega_step(W); broadcast sigma rows
+    rho <- Lemma-10 bound on the new Sigma (paper Section 7.1)
+
+The distributed (shard_map) version in ``distributed.py`` reuses the same
+per-round math; this module is the semantic oracle it is tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dual as dual_mod
+from . import omega as omega_mod
+from .losses import get_loss
+from .mtl_data import MTLData
+from .sdca import make_local_solver
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DMTRLConfig:
+    loss: str = "hinge"
+    lam: float = 1e-3  # lambda in Eq. (1)
+    eta: float = 1.0  # aggregation parameter (paper uses 1.0)
+    outer_iters: int = 5  # P
+    rounds: int = 20  # T (communication rounds per W-step)
+    local_iters: int = 0  # H; 0 => n_max (one local epoch per round)
+    sdca_mode: str = "block"  # "naive" | "block"
+    block_size: int = 64
+    rho_mode: str = "lemma10"  # "lemma10" | "spectral" | "fixed"
+    rho_fixed: float = 1.0
+    omega_jitter: float = 1e-6
+    learn_omega: bool = True  # False => STL-style fixed Sigma
+    seed: int = 0
+    use_kernel: bool = False  # route block solver through the Pallas kernel
+    gram_bf16: bool = False  # bf16 MXU inputs in the distributed gram build
+    dist_block_hoisted: bool = False  # hoisted block-Gram distributed round
+    track_every: int = 1  # record objectives every k rounds
+
+
+@dataclasses.dataclass
+class DMTRLResult:
+    W: Array  # (m, d)
+    alpha: Array  # (m, n_max)
+    sigma: Array  # (m, m)
+    omega: Array  # (m, m)
+    history: Dict[str, np.ndarray]
+    rho_per_outer: List[float]
+
+
+def _rho_value(cfg: DMTRLConfig, sigma: Array, n_blocks_scale: float = 1.0) -> float:
+    if cfg.rho_mode == "fixed":
+        return float(cfg.rho_fixed)
+    if cfg.rho_mode == "spectral":
+        return float(omega_mod.rho_spectral(sigma, cfg.eta)) * n_blocks_scale
+    return float(omega_mod.rho_lemma10(sigma, cfg.eta)) * n_blocks_scale
+
+
+def make_w_step_round(cfg: DMTRLConfig, data: MTLData, rho: float):
+    """One communication round: local updates (vmap over tasks) + reduce.
+
+    Returns round(alpha, W, sigma, key) -> (alpha, W). jit-able.
+    """
+    loss = get_loss(cfg.loss)
+    H = cfg.local_iters or data.n_max
+    if cfg.sdca_mode == "block":
+        H = int(np.ceil(H / cfg.block_size)) * cfg.block_size
+    solver = make_local_solver(
+        loss,
+        rho,
+        cfg.lam,
+        H,
+        mode=cfg.sdca_mode,
+        block=cfg.block_size,
+        use_kernel=cfg.use_kernel,
+    )
+
+    def round_fn(alpha, W, sigma, key):
+        # same per-(task, pod=0) key derivation as distributed.py so the
+        # single-process reference and the mesh version produce bit-equal
+        # coordinate samples (tested).
+        tids = jnp.arange(data.m, dtype=jnp.int32)
+        keys = jax.vmap(
+            lambda t: jax.random.fold_in(jax.random.fold_in(key, t), 0)
+        )(tids)
+        sigma_diag = jnp.diag(sigma)
+        dalpha, r = jax.vmap(solver)(
+            data.x, data.y, alpha, W, data.n, sigma_diag, keys
+        )
+        alpha = alpha + cfg.eta * dalpha
+        # delta_b rows: (m, d); server reduce: W += (1/lam) Sigma @ dB
+        db = cfg.eta * r / data.n[:, None].astype(r.dtype)
+        W = W + (sigma @ db) / cfg.lam
+        return alpha, W
+
+    return round_fn
+
+
+def w_step(
+    cfg: DMTRLConfig,
+    data: MTLData,
+    alpha: Array,
+    W: Array,
+    sigma: Array,
+    rho: float,
+    key: Array,
+    track: bool = True,
+) -> tuple[Array, Array, Dict[str, np.ndarray]]:
+    """Run cfg.rounds communication rounds; returns updated alpha, W, history."""
+    loss = get_loss(cfg.loss)
+    round_fn = jax.jit(make_w_step_round(cfg, data, rho))
+
+    @jax.jit
+    def objectives(alpha):
+        d = dual_mod.dual_objective(data, alpha, sigma, cfg.lam, loss)
+        p = dual_mod.primal_objective_from_alpha(data, alpha, sigma, cfg.lam, loss)
+        return d, p
+
+    hist = {"round": [], "dual": [], "primal": [], "gap": []}
+    keys = jax.random.split(key, cfg.rounds)
+    for t in range(cfg.rounds):
+        alpha, W = round_fn(alpha, W, sigma, keys[t])
+        if track and (t % cfg.track_every == 0 or t == cfg.rounds - 1):
+            d, p = objectives(alpha)
+            hist["round"].append(t + 1)
+            hist["dual"].append(float(d))
+            hist["primal"].append(float(p))
+            hist["gap"].append(float(p - d))
+    return alpha, W, {k: np.asarray(v) for k, v in hist.items()}
+
+
+def fit(cfg: DMTRLConfig, data: MTLData, track: bool = True) -> DMTRLResult:
+    """Full Algorithm 1: P alternations of (W-step, Omega-step)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    m, n_max = data.m, data.n_max
+    alpha = jnp.zeros((m, n_max), data.x.dtype)
+    W = jnp.zeros((m, data.d), data.x.dtype)
+    sigma, omega = omega_mod.init_sigma(m, data.x.dtype)
+
+    history: Dict[str, List[np.ndarray]] = {
+        "round": [],
+        "dual": [],
+        "primal": [],
+        "gap": [],
+        "outer": [],
+    }
+    rhos: List[float] = []
+    rounds_seen = 0
+    for p in range(cfg.outer_iters):
+        rho = _rho_value(cfg, sigma)
+        rhos.append(rho)
+        key, sub = jax.random.split(key)
+        alpha, W, hist = w_step(cfg, data, alpha, W, sigma, rho, sub, track=track)
+        if track:
+            history["round"].append(hist["round"] + rounds_seen)
+            history["dual"].append(hist["dual"])
+            history["primal"].append(hist["primal"])
+            history["gap"].append(hist["gap"])
+            history["outer"].append(np.full_like(hist["round"], p))
+        rounds_seen += cfg.rounds
+        if cfg.learn_omega:
+            # Algorithm 1 row 11 runs after every W-step, including the last.
+            sigma, omega = omega_mod.omega_step(W, cfg.omega_jitter)
+            # Sigma changed => the dual problem (K) changed; W(alpha) must be
+            # recomputed under the new Sigma (B is Sigma-independent).
+            W = dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
+
+    hist_np = {
+        k: (np.concatenate(v) if v else np.zeros((0,))) for k, v in history.items()
+    }
+    return DMTRLResult(
+        W=W,
+        alpha=alpha,
+        sigma=sigma,
+        omega=omega,
+        history=hist_np,
+        rho_per_outer=rhos,
+    )

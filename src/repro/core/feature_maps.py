@@ -1,0 +1,64 @@
+"""Explicit feature maps phi(.) (paper Section 4).
+
+The paper recommends explicit feature maps over implicit kernels in the
+distributed setting (the n x n multi-task kernel matrix K is never
+materializable across workers). Provided maps:
+
+ * linear          -- identity (the paper's experimental choice)
+ * rff             -- random Fourier features approximating the RBF kernel
+                      (Rahimi & Recht 2007), drawn with a shared seed so all
+                      workers use the SAME map without communication.
+ * backbone        -- final-hidden-state features of any repro.models
+                      backbone (the bridge used by repro/train/mtl_head.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureMap:
+    name: str
+    dim_out: int
+    apply: Callable[[Array], Array]  # (n, d_in) -> (n, dim_out)
+
+
+def linear_map(d_in: int) -> FeatureMap:
+    return FeatureMap("linear", d_in, lambda x: x)
+
+
+def rff_map(
+    d_in: int, d_out: int, gamma: float = 1.0, seed: int = 0, dtype=jnp.float32
+) -> FeatureMap:
+    """phi(x) = sqrt(2/D) cos(x @ Omega + b), Omega ~ N(0, 2*gamma I).
+
+    Unbiased approximation of k(x,x') = exp(-gamma ||x - x'||^2); the map is
+    deterministic given the seed, so geo-distributed workers construct it
+    locally with zero communication.
+    """
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    Wm = jax.random.normal(k1, (d_in, d_out), dtype) * jnp.sqrt(2.0 * gamma)
+    b = jax.random.uniform(k2, (d_out,), dtype, 0.0, 2.0 * jnp.pi)
+    scale = jnp.sqrt(2.0 / d_out).astype(dtype)
+
+    def apply(x):
+        return scale * jnp.cos(x @ Wm + b)
+
+    return FeatureMap("rff", d_out, apply)
+
+
+def backbone_map(forward_fn: Callable[[Array], Array], dim_out: int) -> FeatureMap:
+    """Wrap a backbone's pooled final hidden state as phi."""
+    return FeatureMap("backbone", dim_out, forward_fn)
+
+
+def apply_to_tasks(fmap: FeatureMap, xs: list[np.ndarray]) -> list[np.ndarray]:
+    return [np.asarray(fmap.apply(jnp.asarray(x))) for x in xs]

@@ -1,0 +1,122 @@
+"""Padded multi-task dataset container.
+
+Tasks have unequal sample counts n_i; to vmap/shard over tasks we pad every
+task to ``n_max`` and carry a validity mask. Padded coordinates never get
+sampled by SDCA (indices are drawn in [0, n_i)) and carry zero weight in all
+objective evaluations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MTLData:
+    """m tasks padded to a common n_max.
+
+    x:    (m, n_max, d) float  features (phi already applied)
+    y:    (m, n_max)    float  labels (+-1 classification / real regression)
+    mask: (m, n_max)    float  1.0 on real samples, 0.0 on padding
+    n:    (m,)          int32  true per-task sample counts
+    """
+
+    x: Array
+    y: Array
+    mask: Array
+    n: Array
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.x, self.y, self.mask, self.n), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- accessors ----------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.x.shape[2]
+
+    def task(self, i: int) -> Tuple[Array, Array, int]:
+        ni = int(self.n[i])
+        return self.x[i, :ni], self.y[i, :ni], ni
+
+    def pad_tasks(self, m_new: int) -> "MTLData":
+        """Pad the task axis to ``m_new`` with empty (all-masked) tasks."""
+        if m_new == self.m:
+            return self
+        assert m_new > self.m
+        pad = m_new - self.m
+        z = lambda a: jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
+        )
+        # n=1 on padded tasks keeps 1/n_i finite; mask stays 0 so they are inert.
+        n_pad = jnp.concatenate([self.n, jnp.ones((pad,), self.n.dtype)])
+        return MTLData(z(self.x), z(self.y), z(self.mask), n_pad)
+
+
+def from_task_list(
+    xs: Sequence[np.ndarray], ys: Sequence[np.ndarray], n_max: int | None = None
+) -> MTLData:
+    """Build padded MTLData from per-task (n_i, d) / (n_i,) numpy arrays."""
+    m = len(xs)
+    assert m == len(ys) and m > 0
+    d = xs[0].shape[1]
+    ns = [int(x.shape[0]) for x in xs]
+    n_max = n_max or max(ns)
+    X = np.zeros((m, n_max, d), np.float32)
+    Y = np.zeros((m, n_max), np.float32)
+    M = np.zeros((m, n_max), np.float32)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        ni = ns[i]
+        assert ni <= n_max, f"task {i} has {ni} > n_max={n_max}"
+        X[i, :ni] = x
+        Y[i, :ni] = np.asarray(y).reshape(-1)
+        M[i, :ni] = 1.0
+    return MTLData(
+        jnp.asarray(X), jnp.asarray(Y), jnp.asarray(M), jnp.asarray(ns, jnp.int32)
+    )
+
+
+def normalize_rows(data: MTLData, max_norm: float = 1.0) -> MTLData:
+    """Scale every sample to ||x|| <= max_norm (the theory in Lemma 7 assumes
+    normalized features; the algorithm itself does not require it)."""
+    norms = jnp.linalg.norm(data.x, axis=-1, keepdims=True)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
+    return MTLData(data.x * scale, data.y, data.mask, data.n)
+
+
+def train_test_split_tasks(
+    xs: List[np.ndarray],
+    ys: List[np.ndarray],
+    frac_train: float,
+    seed: int,
+) -> Tuple[List[np.ndarray], List[np.ndarray], List[np.ndarray], List[np.ndarray]]:
+    rng = np.random.RandomState(seed)
+    xtr, ytr, xte, yte = [], [], [], []
+    for x, y in zip(xs, ys):
+        n = x.shape[0]
+        perm = rng.permutation(n)
+        k = max(1, int(round(frac_train * n)))
+        k = min(k, n - 1) if n > 1 else 1
+        tr, te = perm[:k], perm[k:]
+        xtr.append(x[tr]), ytr.append(y[tr])
+        xte.append(x[te]), yte.append(y[te])
+    return xtr, ytr, xte, yte

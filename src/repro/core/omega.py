@@ -1,0 +1,82 @@
+"""Omega-step: closed-form update of the task precision matrix.
+
+Zhang & Yeung (2010) show that with W fixed, the minimizer of
+    tr(W Omega W^T)  s.t.  Omega^{-1} >= 0, tr(Omega^{-1}) = 1
+is
+    Sigma = Omega^{-1} = (W^T W)^{1/2} / tr((W^T W)^{1/2}).
+
+We compute it via the m x m eigendecomposition (the paper notes distributed
+SVD could be used for very large m; here m x m is host-trivial up to ~8k
+tasks). A jitter keeps Sigma invertible when W is rank-deficient (e.g. the
+very first alternation where W may be near 0); trace is renormalized to 1 so
+the constraint still holds exactly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def omega_step(W: Array, jitter: float = 1e-6) -> Tuple[Array, Array]:
+    """W: (m, d) rows = task weight vectors. Returns (sigma, omega).
+
+    sigma = Omega^{-1} (covariance), omega = precision; both (m, m),
+    symmetric PD, tr(sigma) == 1.
+    """
+    m = W.shape[0]
+    M = W @ W.T  # (m, m) = W^T W in the paper's (d, m) column convention
+    M = 0.5 * (M + M.T)
+    evals, evecs = jnp.linalg.eigh(M)
+    s = jnp.sqrt(jnp.maximum(evals, 0.0))
+    tr = jnp.sum(s)
+    # degenerate W (all zeros) -> fall back to Sigma = I/m (the init).
+    safe = tr > 1e-30
+    s_n = jnp.where(safe, s / jnp.maximum(tr, 1e-30), jnp.ones_like(s) / m)
+    s_n = s_n + jitter
+    s_n = s_n / jnp.sum(s_n)  # renormalize trace to exactly 1
+    sigma = (evecs * s_n) @ evecs.T
+    omega = (evecs * (1.0 / s_n)) @ evecs.T
+    sigma = 0.5 * (sigma + sigma.T)
+    omega = 0.5 * (omega + omega.T)
+    return sigma, omega
+
+
+def init_sigma(m: int, dtype=jnp.float32) -> Tuple[Array, Array]:
+    """Paper's Algorithm 1 init: Omega = m I, Sigma = I/m."""
+    sigma = jnp.eye(m, dtype=dtype) / m
+    omega = jnp.eye(m, dtype=dtype) * m
+    return sigma, omega
+
+
+def correlation_from_sigma(sigma: Array) -> Array:
+    """Task correlation matrix from the covariance Sigma (for Fig. 2)."""
+    dd = jnp.sqrt(jnp.maximum(jnp.diag(sigma), 1e-30))
+    return sigma / (dd[:, None] * dd[None, :])
+
+
+def rho_lemma10(sigma: Array, eta: float = 1.0) -> Array:
+    """Paper Lemma 10 upper bound: eta * max_i sum_i' |sigma_ii'| / sigma_ii.
+
+    This is what the paper's experiments use for rho (Section 7.1).
+    """
+    dd = jnp.maximum(jnp.diag(sigma), 1e-30)
+    return eta * jnp.max(jnp.sum(jnp.abs(sigma), axis=1) / dd)
+
+
+def rho_spectral(sigma: Array, eta: float = 1.0) -> Array:
+    """Tighter bound: eta * lambda_max(D^{-1/2} Sigma D^{-1/2}), D = diag(Sigma).
+
+    alpha^T K alpha = sum_{ii'} sigma_ii' b_i . b_i' and the block-diagonal
+    denominator is sum_i sigma_ii ||b_i||^2; the sup over independent b_i of the ratio
+    equals the max eigenvalue of the diagonally-rescaled Sigma (attained with
+    collinear b_i). Always <= Lemma 10's bound; still an upper bound on
+    rho_min of Eq. (5). Beyond-paper refinement used by the optimized path.
+    """
+    dd = jnp.sqrt(jnp.maximum(jnp.diag(sigma), 1e-30))
+    S = sigma / (dd[:, None] * dd[None, :])
+    ev = jnp.linalg.eigvalsh(0.5 * (S + S.T))
+    return eta * ev[-1]

@@ -1,0 +1,317 @@
+"""Local SDCA (paper Algorithm 2) — naive and block-Gram forms.
+
+Both act on ONE task's (padded) arrays and are vmapped over tasks by the
+driver. Given the task's current dual block ``alpha_i`` and weight vector
+``w_i``, they produce the approximate subproblem solution ``dalpha`` and the
+un-normalized update direction ``r = X_i^T dalpha`` (so that
+``delta_b_i = eta * r / n_i``).
+
+naive      : literal Algorithm 2 — one coordinate per step, each step does a
+             d-dim inner product + axpy. Reference semantics.
+block_gram : TPU adaptation (see DESIGN.md §4). H steps are processed in
+             blocks of B sampled coordinates: the d-dim work becomes three
+             matmuls per block (q = X_blk w, G = X_blk X_blk^T,
+             r += X_blk^T delta) and the sequential part runs on the B x B
+             Gram block only. Produces the *exact same iterate sequence* as
+             naive for the same sampled coordinate order (duplicates within a
+             block included), because inner products are corrected
+             incrementally through G.
+
+Sharding: when ``axis_name`` is given (feature dim d sharded over a mesh
+axis), the d-contractions are psum'ed. naive then needs 2 collectives per
+coordinate; block_gram needs 3 per block — this is the communication
+argument for the block form recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Loss
+
+Array = jax.Array
+
+
+def sample_coords(key: Array, H: int, n_i: Array, n_max: int) -> Array:
+    """H coordinate indices uniform in [0, n_i) (paper: with replacement)."""
+    u = jax.random.uniform(key, (H,))
+    return jnp.minimum((u * n_i.astype(u.dtype)).astype(jnp.int32), n_i - 1)
+
+
+def _psum(x, axis_name):
+    return jax.lax.psum(x, axis_name) if axis_name is not None else x
+
+
+def local_sdca_naive(
+    x: Array,  # (n_max, d)    [d possibly a shard]
+    y: Array,  # (n_max,)
+    alpha_i: Array,  # (n_max,)
+    w_i: Array,  # (d,)
+    n_i: Array,  # scalar int
+    sigma_ii: Array,  # scalar
+    coords: Array,  # (H,) int32
+    rho: float,
+    lam: float,
+    loss: Loss,
+    axis_name: Optional[str] = None,
+) -> Tuple[Array, Array]:
+    """Algorithm 2, one coordinate at a time. Returns (dalpha, r)."""
+    nf = jnp.maximum(n_i.astype(x.dtype), 1.0)
+    kappa = rho * sigma_ii / (lam * nf)
+
+    def body(h, carry):
+        dalpha, r = carry
+        j = coords[h]
+        xj = x[j]
+        # d-contractions (collective per coordinate when d is sharded)
+        wx = _psum(jnp.dot(xj, w_i), axis_name)
+        xr = _psum(jnp.dot(xj, r), axis_name)
+        xx = _psum(jnp.dot(xj, xj), axis_name)
+        c = wx + kappa * xr
+        a = kappa * xx
+        atilde = alpha_i[j] + dalpha[j]
+        delta = loss.sdca_delta(atilde, c, a, y[j])
+        dalpha = dalpha.at[j].add(delta)
+        r = r + delta * xj
+        return dalpha, r
+
+    H = coords.shape[0]
+    dalpha0 = jnp.zeros_like(alpha_i) + y[0] * 0
+    # + x[0]*0 keeps the carry's varying-manual-axes equal to the loop
+    # output's under shard_map (x may vary over a 'pod' sample axis)
+    r0 = jnp.zeros_like(w_i) + x[0] * 0
+    return jax.lax.fori_loop(0, H, body, (dalpha0, r0))
+
+
+def local_sdca_block(
+    x: Array,
+    y: Array,
+    alpha_i: Array,
+    w_i: Array,
+    n_i: Array,
+    sigma_ii: Array,
+    coords: Array,  # (H,) int32; H must be a multiple of block
+    rho: float,
+    lam: float,
+    loss: Loss,
+    block: int = 64,
+    axis_name: Optional[str] = None,
+    use_kernel: bool = False,
+) -> Tuple[Array, Array]:
+    """Block-Gram Local SDCA. Same iterates as naive, MXU-shaped.
+
+    use_kernel=True routes the per-block work through the Pallas kernel
+    (repro.kernels.sdca) — TPU target, interpret-mode on CPU.
+    """
+    H = coords.shape[0]
+    assert H % block == 0, f"H={H} must be a multiple of block={block}"
+    nb = H // block
+    coords_b = coords.reshape(nb, block)
+    nf = jnp.maximum(n_i.astype(x.dtype), 1.0)
+    kappa = rho * sigma_ii / (lam * nf)
+
+    if use_kernel:
+        from repro.kernels.sdca import ops as sdca_ops  # lazy: optional dep
+
+        assert axis_name is None, (
+            "Pallas SDCA kernel computes its own d-contractions; with a "
+            "sharded feature dim use the jnp block path (psum'ed) instead"
+        )
+
+        def blk_fn(carry, cb):
+            dalpha, r = carry
+            xb = x[cb]  # (B, d) gather
+            atilde0 = alpha_i[cb] + dalpha[cb]
+            yb = y[cb]
+            deltas = sdca_ops.sdca_block_update(
+                None, None, None, atilde0, yb, cb, kappa, loss.name,
+                xb=xb, w=w_i, r=r,
+            )
+            deltas = deltas.astype(x.dtype)
+            dalpha = dalpha.at[cb].add(deltas)
+            r = r + xb.T @ deltas
+            return (dalpha, r), None
+
+    else:
+
+        def blk_fn(carry, cb):
+            dalpha, r = carry
+            xb = x[cb]  # (B, d)
+            q = _psum(xb @ w_i, axis_name)  # (B,)
+            xr = _psum(xb @ r, axis_name)  # (B,)
+            G = _psum(xb @ xb.T, axis_name)  # (B, B)
+            yb = y[cb]
+
+            def inner(k, inner_carry):
+                dalpha_, deltas = inner_carry
+                j = cb[k]
+                # c_k = q_k + kappa * (x_k^T r + sum_{k'<k} G[k,k'] delta_k')
+                corr = jnp.dot(G[k], deltas)  # deltas[k:] are still 0
+                c = q[k] + kappa * (xr[k] + corr)
+                a = kappa * G[k, k]
+                atilde = alpha_i[j] + dalpha_[j]
+                delta = loss.sdca_delta(atilde, c, a, yb[k])
+                dalpha_ = dalpha_.at[j].add(delta)
+                deltas = deltas.at[k].set(delta)
+                return dalpha_, deltas
+
+            # derive from q so the carry carries the same varying-manual-axes
+            # type as the inputs under shard_map
+            deltas0 = q * 0.0
+            dalpha, deltas = jax.lax.fori_loop(0, block, inner, (dalpha, deltas0))
+            r = r + xb.T @ deltas
+            return (dalpha, r), None
+
+    dalpha0 = jnp.zeros_like(alpha_i) + y[0] * 0
+    r0 = jnp.zeros_like(w_i) + x[0] * 0  # see local_sdca_naive note
+    (dalpha, r), _ = jax.lax.scan(blk_fn, (dalpha0, r0), coords_b)
+    return dalpha, r
+
+
+def sdca_gram_solve(
+    G: Array,  # (H, H) full Gram of sampled rows (already psum'ed)
+    q: Array,  # (H,)   X_H @ w (already psum'ed)
+    alpha_i: Array,
+    y: Array,
+    coords: Array,
+    n_i: Array,
+    sigma_ii: Array,
+    rho: float,
+    lam: float,
+    loss: Loss,
+) -> Tuple[Array, Array]:
+    """The collective-free scalar recursion of full-Gram SDCA.
+
+    Returns (dalpha, deltas); r = X_H^T deltas is computed by the caller on
+    its local feature shard."""
+    H = coords.shape[0]
+    nf = jnp.maximum(n_i.astype(q.dtype), 1.0)
+    kappa = rho * sigma_ii / (lam * nf)
+
+    def body(k, carry):
+        dalpha, deltas = carry
+        corr = jnp.dot(G[k], deltas)  # deltas[k:] still zero
+        c = q[k] + kappa * corr
+        a = kappa * G[k, k]
+        j = coords[k]
+        atilde = alpha_i[j] + dalpha[j]
+        delta = loss.sdca_delta(atilde, c, a, y[j])
+        return dalpha.at[j].add(delta), deltas.at[k].set(delta)
+
+    dalpha0 = jnp.zeros_like(alpha_i) + q[0] * 0.0
+    deltas0 = q * 0.0
+    return jax.lax.fori_loop(0, H, body, (dalpha0, deltas0))
+
+
+def local_sdca_gram(
+    x: Array,
+    y: Array,
+    alpha_i: Array,
+    w_i: Array,
+    n_i: Array,
+    sigma_ii: Array,
+    coords: Array,  # (H,)
+    rho: float,
+    lam: float,
+    loss: Loss,
+    axis_name: Optional[str] = None,
+) -> Tuple[Array, Array]:
+    """Full-Gram Local SDCA: same iterate sequence as naive/block, but ALL
+    d-contractions are hoisted out of the sequential loop:
+
+        q = psum(X_H @ w),  G = psum(X_H X_H^T)     (2 collectives TOTAL)
+        H scalar steps entirely on the H x H Gram   (no collectives)
+        r = X_H^T deltas                             (local per shard)
+
+    vs 3 collectives PER BLOCK for the block mode — this is the
+    communication-optimal form for a model-sharded feature dim and the one
+    the distributed path uses (EXPERIMENTS.md §Perf)."""
+    Xs = x[coords]  # (H, d_shard)
+    q = _psum(Xs @ w_i, axis_name)  # (H,)
+    G = _psum(
+        jax.lax.dot_general(Xs, Xs, (((1,), (1,)), ((), ()))), axis_name
+    )  # (H, H)
+    dalpha, deltas = sdca_gram_solve(
+        G, q, alpha_i, y, coords, n_i, sigma_ii, rho, lam, loss
+    )
+    r = Xs.T @ deltas  # local shard of X^T dalpha
+    return dalpha, r
+
+
+def sdca_block_solve(
+    G: Array,  # (B, B) Gram of this block's rows (psum'ed)
+    q: Array,  # (B,)   X_blk @ w (psum'ed)
+    xr: Array,  # (B,)   X_blk @ r_prev (psum'ed)
+    dalpha: Array,
+    alpha_i: Array,
+    y: Array,
+    cb: Array,  # (B,) coords of this block
+    kappa: Array,
+    loss: Loss,
+) -> Tuple[Array, Array]:
+    """Collective-free scalar recursion for ONE block (hoisted-psum form).
+    Returns (dalpha, deltas)."""
+    B = cb.shape[0]
+
+    def body(k, carry):
+        dalpha_, deltas = carry
+        corr = jnp.dot(G[k], deltas)
+        c = q[k] + kappa * (xr[k] + corr)
+        a = kappa * G[k, k]
+        j = cb[k]
+        atilde = alpha_i[j] + dalpha_[j]
+        delta = loss.sdca_delta(atilde, c, a, y[j])
+        return dalpha_.at[j].add(delta), deltas.at[k].set(delta)
+
+    deltas0 = q * 0.0
+    return jax.lax.fori_loop(0, B, body, (dalpha, deltas0))
+
+
+def make_local_solver(
+    loss: Loss,
+    rho: float,
+    lam: float,
+    H: int,
+    mode: str = "block",
+    block: int = 64,
+    axis_name: Optional[str] = None,
+    use_kernel: bool = False,
+):
+    """Returns solver(x, y, alpha_i, w_i, n_i, sigma_ii, key) -> (dalpha, r).
+
+    Suitable for vmap over the task axis.
+    """
+
+    def solver(x, y, alpha_i, w_i, n_i, sigma_ii, key):
+        n_max = x.shape[0]
+        coords = sample_coords(key, H, n_i, n_max)
+        if mode == "naive":
+            return local_sdca_naive(
+                x, y, alpha_i, w_i, n_i, sigma_ii, coords, rho, lam, loss, axis_name
+            )
+        elif mode == "gram":
+            return local_sdca_gram(
+                x, y, alpha_i, w_i, n_i, sigma_ii, coords, rho, lam, loss, axis_name
+            )
+        elif mode == "block":
+            return local_sdca_block(
+                x,
+                y,
+                alpha_i,
+                w_i,
+                n_i,
+                sigma_ii,
+                coords,
+                rho,
+                lam,
+                loss,
+                block=block,
+                axis_name=axis_name,
+                use_kernel=use_kernel,
+            )
+        raise ValueError(f"unknown sdca mode {mode!r}")
+
+    return solver

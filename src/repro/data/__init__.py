@@ -1,0 +1,5 @@
+"""Data pipelines: paper MTL datasets (synthetic + offline real-world
+stand-ins) and the sharded LM token pipeline for the backbone substrate."""
+from . import synthetic, tokens
+
+__all__ = ["synthetic", "tokens"]

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .flash_kernel import flash_attention
+
+__all__ = ["ops", "ref", "flash_attention"]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: dense softmax attention with the same masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def attention_ref(
+    q: Array,  # (B, H, S, HD)
+    k: Array,
+    v: Array,
+    causal: bool = True,
+    window: int = 0,
+) -> Array:
+    B, H, S, HD = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(HD).astype(jnp.float32)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

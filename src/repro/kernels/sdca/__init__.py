@@ -1,0 +1,4 @@
+from . import ops, ref
+from .sdca_kernel import SUPPORTED_LOSSES, sdca_block_kernel
+
+__all__ = ["ops", "ref", "SUPPORTED_LOSSES", "sdca_block_kernel"]

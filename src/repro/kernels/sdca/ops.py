@@ -1,0 +1,61 @@
+"""jit'd wrapper used by repro.core.sdca when use_kernel=True."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .sdca_kernel import SUPPORTED_LOSSES, sdca_block_kernel
+from .ref import sdca_block_ref
+
+Array = jax.Array
+
+# interpret=True on CPU (this container); on TPU set REPRO_PALLAS_INTERPRET=0
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def sdca_block_update(
+    G_unused: Array,
+    q_unused: Array,
+    xr_unused: Array,
+    at0: Array,
+    y: Array,
+    cb: Array,
+    kappa: Array,
+    loss_name: str,
+    *,
+    xb: Array = None,
+    w: Array = None,
+    r: Array = None,
+) -> Array:
+    """Compatibility shim: repro.core.sdca precomputes (G, q, xr) for the
+    jnp path; the kernel recomputes them from (xb, w, r) with its own d-tile
+    accumulation. When xb/w/r are not provided, fall back to the reference.
+    """
+    if xb is not None:
+        if loss_name in SUPPORTED_LOSSES:
+            return sdca_block_kernel(
+                xb, w, r, at0, y, cb, kappa, loss_name, interpret=INTERPRET
+            )
+        return sdca_block_ref(xb, w, r, at0, y, cb, kappa, loss_name)
+    # reference solve directly from the precomputed Gram pieces
+    return _solve_from_gram(G_unused, q_unused, xr_unused, at0, y, cb, kappa, loss_name)
+
+
+def _solve_from_gram(G, q, xr, at0, y, cb, kappa, loss_name):
+    from repro.core.losses import get_loss
+
+    loss = get_loss(loss_name)
+    B = q.shape[0]
+
+    def body(k, deltas):
+        corr = jnp.dot(G[k], deltas)
+        c = q[k] + kappa * (xr[k] + corr)
+        a = kappa * G[k, k]
+        dup = jnp.sum(jnp.where(cb == cb[k], deltas, 0.0))
+        atilde = at0[k] + dup
+        return deltas.at[k].set(loss.sdca_delta(atilde, c, a, y[k]))
+
+    return jax.lax.fori_loop(0, B, body, jnp.zeros((B,), q.dtype))

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SDCA block kernel: literal sequential updates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import get_loss
+
+Array = jax.Array
+
+
+def sdca_block_ref(
+    xb: Array,  # (B, d)
+    w: Array,  # (d,)
+    r: Array,  # (d,)
+    at0: Array,  # (B,)
+    y: Array,  # (B,)
+    cb: Array,  # (B,) int32 coordinate ids
+    kappa: Array,  # scalar
+    loss_name: str,
+) -> Array:
+    """Sequential coordinate-at-a-time reference (recomputes the exact
+    inner products each step; no Gram shortcut)."""
+    loss = get_loss(loss_name)
+    B = xb.shape[0]
+    xb = xb.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    r0 = r.astype(jnp.float32)
+
+    def body(k, carry):
+        deltas, r_cur = carry
+        xj = xb[k]
+        c = jnp.dot(xj, w) + kappa * jnp.dot(xj, r_cur)
+        a = kappa * jnp.dot(xj, xj)
+        dup = jnp.sum(jnp.where(cb == cb[k], deltas, 0.0))
+        atilde = at0[k] + dup
+        d = loss.sdca_delta(atilde, c, a, y[k])
+        deltas = deltas.at[k].set(d)
+        return deltas, r_cur + d * xj
+
+    deltas, _ = jax.lax.fori_loop(
+        0, B, body, (jnp.zeros((B,), jnp.float32), r0)
+    )
+    return deltas

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel for the block-Gram SDCA inner update (DESIGN.md §4).
+
+Pipeline per H-block of sampled coordinates (B = block size):
+  phase A (grid over d tiles, MXU):  q += X_blk_tile @ w_tile
+                                     xr += X_blk_tile @ r_tile
+                                     G += X_blk_tile @ X_blk_tile^T
+  phase B (last tile, VPU/scalar):   sequential fori_loop over the B
+        coordinates entirely on the VMEM-resident Gram block:
+            c_k = q_k + kappa * (xr_k + G[k, :] . deltas)
+            a_k = kappa * G[k, k]
+            delta_k = closed-form argmax (hinge / squared / smoothed hinge)
+        (duplicate coordinates within a block are handled through an
+        equality mask against the coordinate ids, so atilde stays exact.)
+
+Inputs:
+  xb   (B, d)   sampled rows of the local data matrix
+  w    (d,)     current task weight vector
+  r    (d,)     running block correction X^T dalpha
+  at0  (B,)     initial alpha~ per slot
+  y    (B,)     labels for the sampled coordinates
+  cb   (B,)     coordinate ids (duplicate detection)
+  kappa scalar  rho * sigma_ii / (lambda * n_i)
+Output:
+  deltas (B,)
+
+The d dimension is tiled with BlockSpec (VMEM working set: B x DT tile +
+B x B Gram + O(B) vectors); B and DT should be multiples of the 128-lane
+layout for MXU alignment on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_GAMMA = 0.5  # smoothed-hinge knee (must match core.losses)
+_EPS = 1e-12
+
+
+def _delta_hinge(atilde, c, a, y):
+    a = jnp.maximum(a, _EPS)
+    anew = y * jnp.clip(y * (atilde + (y - c) / a), 0.0, 1.0)
+    return anew - atilde
+
+
+def _delta_squared(atilde, c, a, y):
+    return (y - c - atilde) / (1.0 + a)
+
+
+def _delta_smoothed_hinge(atilde, c, a, y):
+    anew_u = atilde + (y - c - _GAMMA * atilde) / (_GAMMA + a)
+    anew = y * jnp.clip(y * anew_u, 0.0, 1.0)
+    return anew - atilde
+
+
+_DELTAS = {
+    "hinge": _delta_hinge,
+    "squared": _delta_squared,
+    "smoothed_hinge": _delta_smoothed_hinge,
+}
+SUPPORTED_LOSSES = tuple(_DELTAS)
+
+
+def _kernel(
+    xb_ref,  # (B, DT) tile
+    w_ref,  # (DT,)
+    r_ref,  # (DT,)
+    at0_ref,  # (B,)
+    y_ref,  # (B,)
+    cb_ref,  # (B,)
+    kappa_ref,  # (1, 1) in SMEM
+    out_ref,  # (B,)
+    q_acc,  # scratch (B,)
+    xr_acc,  # scratch (B,)
+    g_acc,  # scratch (B, B)
+    *,
+    loss: str,
+    n_tiles: int,
+):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        q_acc[...] = jnp.zeros_like(q_acc)
+        xr_acc[...] = jnp.zeros_like(xr_acc)
+        g_acc[...] = jnp.zeros_like(g_acc)
+
+    xb = xb_ref[...]
+    # phase A: accumulate the three d-contractions on the MXU
+    q_acc[...] += xb @ w_ref[...]
+    xr_acc[...] += xb @ r_ref[...]
+    g_acc[...] += jax.lax.dot_general(
+        xb, xb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ti == n_tiles - 1)
+    def _solve():
+        B = q_acc.shape[0]
+        kappa = kappa_ref[0, 0]
+        q = q_acc[...]
+        xr = xr_acc[...]
+        G = g_acc[...]
+        at0 = at0_ref[...]
+        y = y_ref[...]
+        cb = cb_ref[...]
+        delta_fn = _DELTAS[loss]
+
+        def body(k, deltas):
+            grow = jax.lax.dynamic_slice(G, (k, 0), (1, B))[0]  # (B,)
+            corr = jnp.sum(grow * deltas)
+            c = q[k] + kappa * (xr[k] + corr)
+            a = kappa * grow[k]
+            # duplicate handling: alpha~ includes earlier deltas on same coord
+            dup = jnp.sum(jnp.where(cb == cb[k], deltas, 0.0))
+            atilde = at0[k] + dup
+            d = delta_fn(atilde, c, a, y[k])
+            return deltas.at[k].set(d)
+
+        deltas = jax.lax.fori_loop(0, B, body, jnp.zeros((B,), jnp.float32))
+        out_ref[...] = deltas
+
+    @pl.when(ti < n_tiles - 1)
+    def _noop():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def sdca_block_kernel(
+    xb: Array,  # (B, d)
+    w: Array,  # (d,)
+    r: Array,  # (d,)
+    at0: Array,  # (B,)
+    y: Array,  # (B,)
+    cb: Array,  # (B,) int32
+    kappa: Array,  # scalar
+    loss: str,
+    d_tile: int = 512,
+    interpret: bool = True,
+) -> Array:
+    assert loss in _DELTAS, f"kernel supports {SUPPORTED_LOSSES}, got {loss}"
+    B, d = xb.shape
+    d_tile = min(d_tile, d)
+    pad = (-d) % d_tile
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad)))
+        w = jnp.pad(w, (0, pad))
+        r = jnp.pad(r, (0, pad))
+    n_tiles = (d + pad) // d_tile
+
+    f32 = lambda a: a.astype(jnp.float32)
+    kappa2d = jnp.reshape(f32(kappa), (1, 1))
+    kern = functools.partial(_kernel, loss=loss, n_tiles=n_tiles)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((B, d_tile), lambda i: (0, i)),
+            pl.BlockSpec((d_tile,), lambda i: (i,)),
+            pl.BlockSpec((d_tile,), lambda i: (i,)),
+            pl.BlockSpec((B,), lambda i: (0,)),
+            pl.BlockSpec((B,), lambda i: (0,)),
+            pl.BlockSpec((B,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((B,), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+            pltpu.VMEM((B, B), jnp.float32),
+        ],
+        interpret=interpret,
+    )(f32(xb), f32(w), f32(r), f32(at0), f32(y), f32(cb), kappa2d)

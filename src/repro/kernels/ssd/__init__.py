@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ssd_kernel import ssd_chunk_kernel
+
+__all__ = ["ops", "ref", "ssd_chunk_kernel"]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the SSD chunk kernel.
+
+naive_recurrence: the literal s_t = a_t s_{t-1} + u_t (x) B_t recurrence —
+the ground truth for both the chunk kernel and models/ssm.ssd_chunked.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def naive_recurrence(
+    x: Array,  # (B, L, H, P) fp32
+    dt: Array,  # (B, L, H)
+    A: Array,  # (H,) negative
+    Bm: Array,  # (B, L, H, N)
+    Cm: Array,  # (B, L, H, N)
+) -> Tuple[Array, Array]:
+    """Returns (Y (B,L,H,P), final_state (B,H,P,N))."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        a = jnp.exp(dtt * A)  # (B,H)
+        u = xt * dtt[..., None]
+        s = a[..., None, None] * s + jnp.einsum("bhp,bhn->bhpn", u, bt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def chunk_ref(
+    x: Array,  # (B, H, nc, Q, P)
+    dt: Array,  # (B, H, nc, Q)
+    A: Array,  # (H,)
+    Bm: Array,  # (B, H, nc, Q, N)
+    Cm: Array,
+):
+    """jnp version of exactly what the chunk kernel computes per cell."""
+    la = dt * A[None, :, None, None]
+    cum = jnp.cumsum(la, axis=-1)
+    u = x * dt[..., None]
+    diff = cum[..., :, None] - cum[..., None, :]
+    Q = x.shape[-2]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri, jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bhcqn,bhckn->bhcqk", Cm, Bm)
+    Y = jnp.einsum("bhcqk,bhckp->bhcqp", CB * M, u)
+    decay_end = jnp.exp(cum[..., -1:] - cum)
+    S = jnp.einsum("bhcqn,bhcqp->bhcnp", Bm * decay_end[..., None], u)
+    a_tot = jnp.exp(cum[..., -1])
+    return Y, S, a_tot

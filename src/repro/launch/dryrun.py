@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes and extract roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch nemotron-4-15b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Each run writes one JSON per (arch, shape, mesh) into --out; EXPERIMENTS.md
+tables are generated from those files by benchmarks/bench_roofline.py.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ModelConfig
+from repro.launch.input_specs import INPUT_SHAPES, InputShape, input_specs, shape_applicable
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.roofline.analysis import analyze_compiled
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_like(tree):
+    return jax.tree.map(lambda l: SDS(l.shape, l.dtype), tree)
+
+
+def _bytes_per_device(tree, shardings, mesh: Mesh) -> int:
+    """Analytic per-device bytes of a sharded SDS pytree."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        b = n * leaf.dtype.itemsize
+        spec = sh.spec if isinstance(sh, NamedSharding) else sh
+        denom = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= mesh.shape[a]
+        total += b // max(denom, 1)
+    return total
+
+
+def lower_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """Build + lower the jitted step for this (arch, shape). Returns
+    (lowered, model_flops, arg_bytes_per_device)."""
+    import repro.models.transformer as tf
+    from repro.models.sharding import (
+        decode_cache_pspec,
+        param_pspecs,
+        param_shardings,
+        train_batch_pspec,
+    )
+    from repro.train.optimizer import AdamW, AdamWState
+    from repro.train.loop import make_train_step
+
+    pshapes = tf.param_shapes(cfg)
+    mode = "train" if shape.kind == "train" else "serve"
+    pshard = param_shardings(cfg, pshapes, mesh, mode=mode)
+    N = cfg.param_count()
+    N_active = cfg.active_param_count()
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_shapes = AdamWState(
+            step=SDS((), jnp.int32),
+            mu=jax.tree.map(lambda l: SDS(l.shape, jnp.float32), pshapes),
+            nu=jax.tree.map(lambda l: SDS(l.shape, jnp.float32), pshapes),
+        )
+        opt_shard = AdamWState(
+            step=NamedSharding(mesh, P()), mu=pshard, nu=pshard
+        )
+        bspec = train_batch_pspec(mesh, shape.global_batch)
+        bshard = {
+            "tokens": NamedSharding(mesh, bspec),
+            "labels": NamedSharding(mesh, bspec),
+            "mask": NamedSharding(mesh, bspec),
+        }
+        if cfg.is_encoder_decoder:
+            bshard["frames"] = NamedSharding(mesh, P(bspec[0], None, None))
+        # microbatching bounds the L*B*S*d residual saves (see §Perf)
+        b0 = bspec[0]
+        b0 = (b0,) if isinstance(b0, str) else (b0 or ())
+        n_dp = int(np.prod([mesh.shape[a] for a in b0])) if b0 else 1
+        b_loc = max(shape.global_batch // max(n_dp, 1), 1)
+        # microbatch size = 1 row/device (still seq_len tokens per matmul);
+        # bounds the L x B_mb x S x d residual saves to a single batch row.
+        # Small models skip it: their saves fit, and the microbatch scan
+        # tickles an XLA CPU SPMD bug with hoisted embedding gathers.
+        default_micro = max(1, b_loc) if cfg.param_count() > 2e9 else 1
+        micro = int(os.environ.get("DRYRUN_MICROBATCHES", default_micro))
+        inner_specs = grad_specs = None
+        if os.environ.get("DRYRUN_ZERO2") == "1":
+            # §Perf: gather params once per step (serve/model-only specs
+            # inside), keep grads FSDP-sharded outside
+            inner_specs = param_pspecs(cfg, pshapes, mesh, mode="serve")
+            grad_specs = param_pspecs(cfg, pshapes, mesh, mode="train")
+        step = make_train_step(
+            cfg, opt, microbatches=micro,
+            inner_param_specs=inner_specs, grad_specs=grad_specs,
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, opt_shard, bshard),
+            donate_argnums=(0, 1),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(pshapes, opt_shapes, specs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * N_active * tokens
+        arg_bytes = _bytes_per_device(pshapes, pshard, mesh) * 3  # params + mu + nu
+        return lowered, model_flops, arg_bytes
+
+    if shape.kind == "prefill":
+        bspec = train_batch_pspec(mesh, shape.global_batch)
+        bshard: Dict[str, Any] = {"tokens": NamedSharding(mesh, bspec)}
+        if cfg.is_encoder_decoder:
+            bshard["frames"] = NamedSharding(mesh, P(bspec[0], None, None))
+
+        def step(params, batch):
+            return tf.prefill(
+                cfg, params, batch["tokens"], batch.get("frames"), extra_len=128
+            )
+
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(pshapes, specs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * N_active * tokens
+        arg_bytes = _bytes_per_device(pshapes, pshard, mesh)
+        return lowered, model_flops, arg_bytes
+
+    # decode
+    specs = input_specs(cfg, shape)
+    cache_shapes = specs["cache"]
+    kinds = cfg.layer_kinds()
+
+    def cache_shardings(cache) -> Any:
+        # mirror DecodeCache structure with NamedShardings
+        if isinstance(cache.layers, dict):
+            kind = "ssm" if cfg.arch_type == "ssm" else "attn"
+            spec = decode_cache_pspec(cfg, mesh, shape.global_batch, kind)
+            layers = {
+                k: NamedSharding(mesh, P(*((None,) + tuple(spec[k]))))
+                for k in cache.layers
+            }
+        else:
+            layers = []
+            for i, k in enumerate(kinds):
+                kind = "ssm" if k == "ssm" else ("local" if k == "local" else "attn")
+                spec = decode_cache_pspec(cfg, mesh, shape.global_batch, kind)
+                layers.append(
+                    {kk: NamedSharding(mesh, spec[kk]) for kk in cache.layers[i]}
+                )
+        shared = None
+        if cache.shared is not None:
+            spec = decode_cache_pspec(cfg, mesh, shape.global_batch, "attn")
+            shared = [
+                {kk: NamedSharding(mesh, spec[kk]) for kk in c} for c in cache.shared
+            ]
+        cross = None
+        if cache.cross is not None:
+            bspec = train_batch_pspec(mesh, shape.global_batch)
+            ns = NamedSharding(mesh, P(bspec[0], None, None, None))
+            cross = [(ns, ns) for _ in cache.cross]
+        return tf.DecodeCache(
+            layers, NamedSharding(mesh, P()), shared, cross
+        )
+
+    cshard = cache_shardings(cache_shapes)
+    tok_shard = NamedSharding(mesh, P())  # (B,) tokens tiny: replicate
+
+    def step(params, token, cache):
+        return tf.decode_step(cfg, params, token, cache)
+
+    jitted = jax.jit(step, in_shardings=(pshard, tok_shard, cshard), donate_argnums=(2,))
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(pshapes, specs["token"], cache_shapes)
+    model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+    arg_bytes = _bytes_per_device(pshapes, pshard, mesh) + _bytes_per_device(
+        jax.tree.leaves(cache_shapes),
+        jax.tree.leaves(cshard),
+        mesh,
+    )
+    return lowered, model_flops, arg_bytes
+
+
+def run_one(
+    arch: str, shape_name: str, mesh_name: str, out_dir: str, compile_: bool = True
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if os.environ.get("DRYRUN_ATTN"):
+        cfg = dataclasses.replace(cfg, attn_impl=os.environ["DRYRUN_ATTN"])
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "timestamp": time.time(),
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(out_dir, rec)
+        return rec
+
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        lowered, model_flops, arg_bytes = lower_step(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        rec["lower_s"] = round(t_lower, 1)
+        if not compile_:
+            rec.update(status="lowered")
+            _write(out_dir, rec)
+            return rec
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        # persist the post-SPMD HLO so analyzer improvements can re-score
+        # without recompiling (gzip ~1-3MB each)
+        import gzip
+
+        os.makedirs(out_dir, exist_ok=True)
+        hlo_path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo.gz"
+        )
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(compiled.as_text())
+        rec["hlo_path"] = hlo_path
+        terms = analyze_compiled(
+            compiled,
+            arch=arch,
+            shape=shape_name,
+            mesh_name=mesh_name,
+            n_chips=n_chips,
+            model_flops=model_flops,
+            peak_flops=PEAK_FLOPS_BF16,
+            hbm_bw=HBM_BW,
+            ici_bw=ICI_BW,
+        )
+        row = terms.to_row()
+        row["memory_analysis"] = (row.get("memory_analysis") or "")[:2000]
+        rec.update(status="ok", arg_bytes_per_device=arg_bytes, **row)
+        # print the spec-mandated artifacts
+        print(f"== {arch} / {shape_name} / {mesh_name} ==")
+        try:
+            print(compiled.memory_analysis())
+        except Exception as e:  # CPU backend may not implement it
+            print(f"memory_analysis unavailable on this backend: {e}")
+            print(f"analytic argument bytes/device: {arg_bytes/1e9:.3f} GB")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        print({k: ca[k] for k in sorted(ca) if "flops" in k or "bytes" in k})
+    except Exception as e:
+        if shape.kind == "train" and os.environ.get("DRYRUN_MICROBATCHES") != "1":
+            # retry once without microbatching (XLA SPMD hoisted-gather bug)
+            os.environ["DRYRUN_MICROBATCHES"] = "1"
+            try:
+                return run_one(arch, shape_name, mesh_name, out_dir, compile_)
+            finally:
+                del os.environ["DRYRUN_MICROBATCHES"]
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: str, rec: Dict[str, Any]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    fn = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                fn = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+                if args.skip_done and os.path.exists(fn):
+                    with open(fn) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            continue
+                t0 = time.time()
+                rec = run_one(arch, shape, mesh, args.out, not args.no_compile)
+                print(
+                    f"[{rec['status']:7s}] {arch:20s} {shape:12s} {mesh:6s} "
+                    f"({time.time()-t0:.0f}s) {rec.get('error','')}",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

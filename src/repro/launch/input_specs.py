@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+No device allocation: the dry-run lowers jitted steps against these specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Spec rules: long_500k only for sub-quadratic decode archs."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False, (
+            "pure full-attention arch: 500k dense KV decode skipped per spec "
+            "(no sliding-window/SSM variant)"
+        )
+    return True, ""
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+        "mask": SDS((B, S), jnp.float32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """token + cache ShapeDtypeStructs (cache of seq_len slots, pos=seq_len-1
+    already filled -> the step appends token #seq_len)."""
+    from repro.models import init_decode_cache
+
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: init_decode_cache(cfg, B, max_len=S)
+    )
+    return {"token": SDS((B,), jnp.int32), "cache": cache_shapes}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_inputs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

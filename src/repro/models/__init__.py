@@ -1,0 +1,29 @@
+"""Model substrate: composable transformer families (dense GQA, MoE, Mamba2
+SSD, zamba2 hybrid, sliding-window, enc-dec audio, early-fusion VLM)."""
+from . import attention, common, mlp, ssm, transformer
+from .transformer import (
+    DecodeCache,
+    decode_step,
+    forward_train,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "attention",
+    "common",
+    "mlp",
+    "ssm",
+    "transformer",
+    "DecodeCache",
+    "decode_step",
+    "forward_train",
+    "init_decode_cache",
+    "init_params",
+    "loss_fn",
+    "param_shapes",
+    "prefill",
+]

@@ -1,0 +1,401 @@
+"""Attention: GQA with RoPE, causal/sliding-window masks, chunked
+(online-softmax) computation for bounded memory, KV-cache decode with ring
+buffers for local layers, and cross-attention for the enc-dec arch.
+
+The chunked path is the default "reference" implementation: it never
+materializes the (S, S) score matrix (a production necessity at 32k) and is
+also the jnp oracle for the Pallas flash kernel (same math, same tiling).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import apply_rope, rms_norm
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def init_attn_params(keygen, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    from .common import dense_init, zeros_init
+
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": dense_init(keygen(), (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(keygen(), (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(keygen(), (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(keygen(), (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init(None, (cfg.n_heads * hd,), dtype)
+        p["bk"] = zeros_init(None, (cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = zeros_init(None, (cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = zeros_init(None, (hd,), dtype)
+        p["k_norm"] = zeros_init(None, (hd,), dtype)
+    return p
+
+
+def _project_qkv(x: Array, p: Dict[str, Array], cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each kv head."""
+    B, S, KV, hd = k.shape
+    rep = n_heads // KV
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def chunked_attention(
+    q: Array,  # (B, Sq, H, hd)
+    k: Array,  # (B, Sk, H, hd)
+    v: Array,  # (B, Sk, H, hd)
+    q_positions: Array,  # (Sq,)
+    k_positions: Array,  # (Sk,)
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> Array:
+    """Online-softmax blockwise attention; O(chunk^2) temporaries only.
+
+    window > 0 restricts to k_pos > q_pos - window (sliding window).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad to multiples
+    pad_q = (-Sq) % q_chunk
+    pad_k = (-Sk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad_k), constant_values=2**30)
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qs = q.reshape(B, nq, q_chunk, H, hd)
+    ks = k.reshape(B, nk, kv_chunk, H, hd)
+    vs = v.reshape(B, nk, kv_chunk, H, hd)
+    qpos = q_positions.reshape(nq, q_chunk)
+    kpos = k_positions.reshape(nk, kv_chunk)
+
+    def q_block(carry_unused, qi):
+        qb = qs[:, qi]  # (B, qc, H, hd)
+        qp = qpos[qi]
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kb, vb, kp = ks[:, ki], vs[:, ki], kpos[ki]
+            s = (
+                jnp.einsum("bqhd,bkhd->bhqk", qb, kb, preferred_element_type=jnp.float32)
+                * scale
+            )
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window > 0:
+                mask &= kp[None, :] > qp[:, None] - window
+            mask &= (qp[:, None] >= 0) & (kp[None, :] < 2**30)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        # remat each kv block: backward recomputes the (qc, kc) score tile
+        # instead of saving one per scan step (peak mem = one tile, not nk)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_block), (m0, l0, a0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry_unused, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_block), None, jnp.arange(nq))
+    # outs: (nq, B, H, qc, hd) -> (B, Sq, H, hd)
+    out = jnp.transpose(outs, (1, 0, 3, 2, 4)).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq]
+
+
+def chunked_attention_parallel_q(
+    q: Array,  # (B, Sq, H, hd)
+    k: Array,  # (B, Sk, H, hd)
+    v: Array,
+    q_positions: Array,
+    k_positions: Array,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 0,
+) -> Array:
+    import os
+    kv_chunk = kv_chunk or int(os.environ.get("REPRO_KV_CHUNK", "1024"))
+    """§Perf variant of chunked_attention: q blocks are INDEPENDENT (no
+    carry), so they become a mapped dim shardable over 'model' — prefill
+    attention compute/memory then split across the tensor-parallel axis even
+    when head counts don't divide it (qwen1.5's 40 heads on a 16-way axis).
+    kv blocks stay a sequential scan (bounded memory)."""
+    from .common import batch_axes, maybe_shard
+
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    pad_q = (-Sq) % q_chunk
+    pad_k = (-Sk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad_k), constant_values=2**30)
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qs = q.reshape(B, nq, q_chunk, H, hd)
+    qs = maybe_shard(qs, batch_axes(), "model", None, None, None)
+    ks = k.reshape(B, nk, kv_chunk, H, hd)
+    vs = v.reshape(B, nk, kv_chunk, H, hd)
+    qpos = q_positions.reshape(nq, q_chunk)
+    kpos = k_positions.reshape(nk, kv_chunk)
+
+    def kv_block(carry, ki):
+        m, l, acc = carry
+        kb, vb, kp = ks[:, ki], vs[:, ki], kpos[ki]
+        s = (
+            jnp.einsum(
+                "bnqhd,bkhd->bnhqk", qs, kb, preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (B, nq, H, qc, kc)
+        mask = jnp.ones((nq, q_chunk, kv_chunk), bool)
+        if causal:
+            mask &= kp[None, None, :] <= qpos[:, :, None]
+        if window > 0:
+            mask &= kp[None, None, :] > qpos[:, :, None] - window
+        mask &= (qpos[:, :, None] >= 0) & (kp[None, None, :] < 2**30)
+        s = jnp.where(mask[None, :, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bnhqk,bkhd->bnhqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, nq, H, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, H, q_chunk), jnp.float32)
+    a0 = jnp.zeros((B, nq, H, q_chunk, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(kv_block), (m0, l0, a0), jnp.arange(nk)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, nq, H, qc, hd)
+    out = jnp.transpose(out, (0, 1, 3, 2, 4)).reshape(
+        B, nq * q_chunk, H, hd
+    ).astype(q.dtype)
+    return out[:, :Sq]
+
+
+def attention_train(
+    x: Array,
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+    positions: Array,  # (S,)
+    is_local: Array | bool = False,  # scalar/traced flag for this layer
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence attention for train/prefill. When ``is_local`` is a
+    traced flag (scan over mixed local/global layers), both mask variants
+    are compiled and selected with lax.cond. ``return_kv`` additionally
+    returns the post-RoPE (KV-head) k/v for prefill cache assembly."""
+    B, S, _ = x.shape
+    q, kkv, vkv = _project_qkv(x, p, cfg)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+        kkv = apply_rope(kkv, positions[None, :], cfg.rope_theta)
+    k = _expand_kv(kkv, cfg.n_heads)
+    v = _expand_kv(vkv, cfg.n_heads)
+
+    attn_fn = (
+        chunked_attention_parallel_q
+        if cfg.attn_impl == "parallel_q"
+        else chunked_attention
+    )
+    if isinstance(is_local, bool):
+        window = cfg.window if (is_local and cfg.window) else 0
+        out = attn_fn(q, k, v, positions, positions, causal, window)
+    else:
+        out = jax.lax.cond(
+            is_local,
+            lambda ops: attn_fn(*ops, causal, cfg.window),
+            lambda ops: attn_fn(*ops, causal, 0),
+            (q, k, v, positions, positions),
+        )
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"]
+    if return_kv:
+        return out, (kkv, vkv)
+    return out
+
+
+def cross_attention_train(
+    x: Array,  # decoder stream (B, S, d)
+    enc: Array,  # encoder output (B, F, d)
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+) -> Array:
+    B, S, _ = x.shape
+    F = enc.shape[1]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (enc @ p["wk"]).reshape(B, F, cfg.n_kv_heads, hd)
+    v = (enc @ p["wv"]).reshape(B, F, cfg.n_kv_heads, hd)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    pos_q = jnp.arange(S)
+    pos_k = jnp.arange(F)
+    out = chunked_attention(q, k, v, pos_q, pos_k, causal=False)
+    return out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+
+
+def cache_from_kv(
+    cfg: ModelConfig,
+    k: Array,  # (B, S, KV, hd) post-rope
+    v: Array,
+    is_local: bool,
+    max_len: int,
+) -> Dict[str, Array]:
+    """Assemble a decode cache from prefill k/v, including ring placement
+    for local (sliding-window) layers."""
+    B, S = k.shape[:2]
+    if is_local and cfg.window:
+        W = min(cfg.window, max_len)
+        take = min(S, W)
+        kt, vt = k[:, -take:], v[:, -take:]
+        pos_t = jnp.arange(S - take, S, dtype=jnp.int32)
+        slots = pos_t % W
+        ck = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(kt)
+        cv = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(vt)
+        cpos = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(pos_t[None])
+        return {"k": ck, "v": cv, "pos": cpos}
+    size = max_len
+    ck = jnp.zeros((B, size) + k.shape[2:], k.dtype).at[:, :S].set(k)
+    cv = jnp.zeros((B, size) + v.shape[2:], v.dtype).at[:, :S].set(v)
+    cpos = jnp.full((B, size), -1, jnp.int32).at[:, :S].set(
+        jnp.arange(S, dtype=jnp.int32)[None]
+    )
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# decode (one token) with KV cache
+# ---------------------------------------------------------------------------
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, is_local: bool, dtype
+) -> Dict[str, Array]:
+    """Cache for one attention layer. Local layers get a ring buffer of
+    ``window`` slots (the production memory win at 500k context)."""
+    size = min(cfg.window, max_len) if (is_local and cfg.window) else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # absolute position of each slot (for masking); -1 = empty
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def attention_decode(
+    x: Array,  # (B, 1, d) current token
+    cache: Dict[str, Array],
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+    position: Array,  # scalar int32 — current absolute position
+    is_local: bool,
+) -> Tuple[Array, Dict[str, Array]]:
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q, k, v = _project_qkv(x, p, cfg)  # (B,1,H,hd), (B,1,KV,hd)
+    if cfg.rope_theta > 0:
+        pos_b = jnp.broadcast_to(position, (1, 1))
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = jnp.where(
+        jnp.logical_and(is_local, cfg.window > 0), position % size, position
+    ).astype(jnp.int32)
+    slot = jnp.minimum(slot, size - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(position, (B, 1)).astype(jnp.int32), (0, slot)
+    )
+
+    kk = _expand_kv(ck, cfg.n_heads)  # (B, size, H, hd)
+    vv = _expand_kv(cv, cfg.n_heads)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = (
+        jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32)
+        * scale
+    )  # (B,H,1,size)
+    valid = cpos >= 0
+    valid &= cpos <= position
+    if is_local and cfg.window:
+        valid &= cpos > position - cfg.window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, 1, cfg.n_heads * hd)
+    return out @ p["wo"], {"k": ck, "v": cv, "pos": cpos}
+
+
+def cross_attention_decode(
+    x: Array,
+    enc_kv: Tuple[Array, Array],  # precomputed (B, F, H, hd) expanded k, v
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+) -> Array:
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k, v = enc_kv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(x.dtype).reshape(B, 1, cfg.n_heads * hd) @ p["wo"]

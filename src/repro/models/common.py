@@ -1,0 +1,139 @@
+"""Shared model primitives: norms, activations, RoPE, init helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def gated_rms_norm(x: Array, gate: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """Mamba2-style: RMSNorm(x * silu(gate))."""
+    return rms_norm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype), scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation(name: str):
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(f"unknown activation {name}")
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq) int32."""
+    if theta <= 0.0:
+        return x
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers (plain functional params; no flax)
+# ---------------------------------------------------------------------------
+def dense_init(key: Array, shape, dtype, scale: Optional[float] = None) -> Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, shape, dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+def maybe_shard(x: Array, *spec) -> Array:
+    """with_sharding_constraint that degrades to a no-op when there is no
+    mesh context, when an axis name is absent, or when a dimension is not
+    divisible by the mesh axes assigned to it. `spec` entries: None, axis
+    name, or tuple of axis names."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        sizes = dict(mesh.shape)
+    except Exception:
+        return x
+    cleaned = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            cleaned.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        if not all(n in sizes for n in names):
+            cleaned.append(None)
+            continue
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        cleaned.append(s if dim % total == 0 else None)
+    cleaned += [None] * (len(x.shape) - len(cleaned))
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*cleaned))
+    except Exception:
+        return x
+
+
+def batch_axes() -> tuple:
+    """('pod','data') when both exist in the current mesh, else ('data',)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(mesh.axis_names) if mesh is not None else ()
+    except Exception:
+        names = ()
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+class KeyGen:
+    """Deterministic key splitter for nested init."""
+
+    def __init__(self, key: Array):
+        self._key = key
+
+    def __call__(self) -> Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub

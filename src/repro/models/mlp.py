@@ -1,0 +1,216 @@
+"""Feed-forward blocks: dense (SwiGLU / squared-ReLU / GELU) and
+Mixture-of-Experts with capacity-based scatter dispatch.
+
+The MoE dispatch is the sort-free cumsum/scatter formulation: positions
+within each expert's buffer come from a running count over tokens, dispatch
+is a scatter into an (E, C, d) buffer (sharded over experts on the 'model'
+mesh axis), expert FFNs run as one batched einsum, and the combine gathers
+back with the (renormalized) top-k gates. Tokens beyond capacity are
+dropped (standard Switch-style), counted in the aux metrics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import activation, batch_axes, dense_init, maybe_shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+def init_mlp_params(keygen, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(keygen(), (d, f), dtype),
+            "w_up": dense_init(keygen(), (d, f), dtype),
+            "w_down": dense_init(keygen(), (f, d), dtype),
+        }
+    return {
+        "w_up": dense_init(keygen(), (d, f), dtype),
+        "w_down": dense_init(keygen(), (f, d), dtype),
+    }
+
+
+def mlp(x: Array, p: Dict[str, Array], cfg: ModelConfig) -> Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = activation(cfg.act)(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+# Dispatch/combine as custom-VJP gathers: the (token,k) -> (expert,slot)
+# assignment is a partial bijection, so BOTH directions of BOTH ops are pure
+# gathers. Without this, autodiff turns the forward gathers into backward
+# scatter-adds, which the SPMD partitioner replicates (hundreds of GB/device
+# at 4k x 256 batch; measured in EXPERIMENTS.md §Perf).
+
+
+@jax.custom_vjp
+def _moe_dispatch(x, slot_src, e_flat, pos_clip):
+    """x (B,S,d); slot_src (B,E,C) int32 in [0,S] (S = empty sentinel).
+    Returns buf (B,E,C,d)."""
+    B, S, d = x.shape
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    return jax.vmap(lambda t, i: t[i])(x_pad, slot_src)
+
+
+def _moe_dispatch_fwd(x, slot_src, e_flat, pos_clip):
+    return _moe_dispatch(x, slot_src, e_flat, pos_clip), (
+        x.shape,
+        e_flat,
+        pos_clip,
+    )
+
+
+def _moe_dispatch_bwd(res, g):
+    (B, S, d), e_flat, pos_clip = res
+    K = e_flat.shape[1] // S
+    g_pad = jnp.concatenate([g, jnp.zeros(g.shape[:2] + (1, d), g.dtype)], axis=2)
+    # vmapped (batch-dim) gather: keeps the batch dim sharded under SPMD
+    gx_rep = jax.vmap(lambda t, e, c: t[e, c])(g_pad, e_flat, pos_clip)
+    gx = jnp.sum(gx_rep.reshape(B, S, K, d), axis=2)
+    return gx, None, None, None
+
+
+_moe_dispatch.defvjp(_moe_dispatch_fwd, _moe_dispatch_bwd)
+
+
+@jax.custom_vjp
+def _moe_combine(out_buf, e_flat, pos_clip, slot_sk):
+    """out_buf (B,E,C,d) -> y_flat (B,SK,d) via per-token (vmapped) gather."""
+    B, E, C, d = out_buf.shape
+    out_pad = jnp.concatenate(
+        [out_buf, jnp.zeros((B, E, 1, d), out_buf.dtype)], axis=2
+    )
+    return jax.vmap(lambda t, e, c: t[e, c])(out_pad, e_flat, pos_clip)
+
+
+def _moe_combine_fwd(out_buf, e_flat, pos_clip, slot_sk):
+    return _moe_combine(out_buf, e_flat, pos_clip, slot_sk), (
+        out_buf.shape,
+        slot_sk,
+    )
+
+
+def _moe_combine_bwd(res, g):
+    (B, E, C, d), slot_sk = res
+    g_pad = jnp.concatenate([g, jnp.zeros((B, 1, d), g.dtype)], axis=1)
+    gbuf = jax.vmap(lambda t, i: t[i])(g_pad, slot_sk)  # (B,E,C,d)
+    return gbuf, None, None, None
+
+
+_moe_combine.defvjp(_moe_combine_fwd, _moe_combine_bwd)
+def init_moe_params(keygen, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(keygen(), (d, e), jnp.float32, scale=0.02),
+        "w_gate": dense_init(keygen(), (e, d, f), dtype),
+        "w_up": dense_init(keygen(), (e, d, f), dtype),
+        "w_down": dense_init(keygen(), (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_gate"] = dense_init(keygen(), (d, fs), dtype)
+        p["shared_up"] = dense_init(keygen(), (d, fs), dtype)
+        p["shared_down"] = dense_init(keygen(), (fs, d), dtype)
+    return p
+
+
+def _capacity(group_tokens: int, cfg: ModelConfig) -> int:
+    """Per-group expert capacity. Groups are batch rows, so all the
+    cumsum/scatter dispatch math stays LOCAL to a data shard; only the
+    (B, E, C, d) buffer crosses shards (B over 'data', E over 'model') —
+    that resharding is the MoE all-to-all."""
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    c = max(8, ((c + 7) // 8) * 8)
+    return min(c, group_tokens * cfg.top_k)
+
+
+def moe_ffn(
+    x: Array, p: Dict[str, Array], cfg: ModelConfig
+) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, S, d). Returns (out, aux). Group-wise (per batch row)
+    capacity dispatch; tokens beyond a group's per-expert capacity are
+    dropped (Switch-style) and counted in aux."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)  # (B, S, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    fe = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2)) / (
+        B * S * K
+    )
+    aux_loss = E * jnp.sum(fe * me)
+
+    # positions within each group's expert buffers (cumsum local to group)
+    e_flat = idx.reshape(B, S * K)  # (B, SK)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (B, SK, E)
+    pos_all = jnp.cumsum(oh, axis=1) - oh
+    pos = jnp.sum(pos_all * oh, axis=-1)  # (B, SK)
+    dropped = pos >= C
+    pos_clip = jnp.where(dropped, C, pos)
+
+    # dispatch WITHOUT moving feature vectors through a scatter: scatter only
+    # int32 slot maps (tiny), then custom-VJP gathers move the d-vectors.
+    ba = batch_axes()
+    src_tok = jnp.broadcast_to(
+        (jnp.arange(S * K) // K)[None, :], (B, S * K)
+    ).astype(jnp.int32)
+    sk_idx = jnp.broadcast_to(
+        jnp.arange(S * K, dtype=jnp.int32)[None, :], (B, S * K)
+    )
+
+    def _slot_scatter(fill, vals):
+        init = jnp.full((E, C + 1), fill, jnp.int32)
+        return jax.vmap(
+            lambda e, c, v: init.at[e, c].set(v, mode="drop")
+        )(e_flat, pos_clip, vals)[:, :, :C]
+
+    slot_src = _slot_scatter(S, src_tok)  # (B, E, C) source token per slot
+    slot_sk = _slot_scatter(S * K, sk_idx)  # (B, E, C) source (token,k)
+    buf = _moe_dispatch(x, slot_src, e_flat, pos_clip)  # (B, E, C, d)
+    buf = maybe_shard(buf, ba, "model", None, None)
+
+    # expert FFNs, batched einsums (experts sharded over 'model')
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(
+            jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+        ) * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    else:
+        h = activation(cfg.act)(jnp.einsum("becd,edf->becf", buf, p["w_up"]))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])  # (B, E, C, d)
+    out_buf = maybe_shard(out_buf, ba, "model", None, None)
+
+    # combine: gather back per group, weight by gates
+    y_flat = _moe_combine(out_buf, e_flat, pos_clip, slot_sk)  # (B, SK, d)
+    y_flat = maybe_shard(y_flat, ba, None, None)
+    w = (gates.reshape(B, S * K) * (~dropped)).astype(x.dtype)
+    y = jnp.sum((y_flat * w[..., None]).reshape(B, S, K, d), axis=2)
+
+    if cfg.n_shared_experts:
+        sh = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        y = y + sh @ p["shared_down"]
+
+    aux = {
+        "aux_loss": aux_loss,
+        "drop_frac": jnp.mean(dropped.astype(jnp.float32)),
+        "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1)),
+    }
+    return y, aux

@@ -1,0 +1,223 @@
+"""Partition specs for params, optimizer state, inputs and caches.
+
+Megatron-style tensor parallelism over the 'model' axis:
+  * attention q heads / kv heads (when divisible) / wo input heads
+  * MLP hidden dim, MoE expert dim, SSM heads & inner dim
+  * vocab dim of embed-out / lm_head (logits stay vocab-sharded; the CE
+    logsumexp reduces across the shard with a collective)
+Data parallelism over 'data' (and 'pod' when present) on the batch dim.
+Decode caches shard batch over data when divisible, else sequence
+(context parallelism — the long_500k B=1 case).
+
+All leaves are matched by their path names, so any pytree produced by
+models/transformer.init_params gets specs without manual bookkeeping.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get(MODEL_AXIS, 1)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes
+
+
+def _apply_fsdp(
+    spec: P, leaf, mesh: Mesh, fsdp_axes: Tuple[str, ...], name: str = ""
+) -> P:
+    """ZeRO/FSDP: additionally shard the largest un-sharded dim of every
+    >=2D parameter over the data(+pod) axes, if divisible. Params and
+    optimizer moments then scale with the full chip count, not just the
+    model axis (30B+ dense / 1T MoE configs do not fit otherwise).
+
+    The token embedding is special-cased: the SPMD partitioner mishandles
+    the token gather when the vocab dim is FSDP-sharded, so we stack the
+    fsdp axes onto the d_model dim instead (gather stays pass-through)."""
+    if not fsdp_axes or len(leaf.shape) < 2:
+        return spec
+    if name == "embed":
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        last = entries[-1]
+        cur = () if last is None else (last if isinstance(last, tuple) else (last,))
+        total = 1
+        for a in cur + fsdp_axes:
+            total *= mesh.shape[a]
+        if leaf.shape[-1] % total == 0:
+            entries[-1] = tuple(cur) + tuple(fsdp_axes)
+            return P(*entries)
+        return spec
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= mesh.shape[a]
+    entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+    # skip the stacked layer dim (leading) when choosing
+    cand = [
+        (leaf.shape[i], i)
+        for i in range(1 if len(leaf.shape) > 2 else 0, len(leaf.shape))
+        if entries[i] is None and leaf.shape[i] % fsdp_size == 0
+    ]
+    if not cand:
+        return spec
+    _, dim = max(cand)
+    entries[dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*entries)
+
+
+def _spec_for(path: str, leaf, cfg: ModelConfig, msz: int) -> P:
+    """Partition spec for one parameter leaf (path is '/'-joined key names).
+
+    Stacked layer leaves have a leading L (or periods/every) dim -> prepend
+    None per extra leading axis relative to the unstacked shape.
+    """
+    shape = leaf.shape
+    nd = len(shape)
+    name = path.split("/")[-1]
+    M = MODEL_AXIS
+
+    def spec(*tail):
+        # left-pad with None for stacked leading dims
+        pad = nd - len(tail)
+        return P(*((None,) * pad + tail))
+
+    # ---- embeddings / head -------------------------------------------------
+    if name == "embed":
+        return spec(None, M) if _div(cfg.d_model, msz) else spec(None, None)
+    if name in ("lm_head",):
+        return spec(None, M) if _div(cfg.vocab_padded, msz) else spec(None, None)
+    if name in ("enc_pos", "dec_pos"):
+        return spec(None, None)
+
+    # ---- attention ---------------------------------------------------------
+    if name == "wq":
+        return spec(None, M) if _div(cfg.n_heads, msz) else spec(None, None)
+    if name in ("wk", "wv"):
+        return spec(None, M) if _div(cfg.n_kv_heads, msz) else spec(None, None)
+    if name == "wo":
+        return spec(M, None) if _div(cfg.n_heads, msz) else spec(None, None)
+    if name == "bq":
+        return spec(M) if _div(cfg.n_heads, msz) else spec(None)
+    if name in ("bk", "bv"):
+        return spec(M) if _div(cfg.n_kv_heads, msz) else spec(None)
+    if name in ("q_norm", "k_norm"):
+        return spec(None)
+
+    # ---- dense MLP ----------------------------------------------------------
+    if name in ("w_gate", "w_up") and nd - (len(shape) - 2) >= 0 and "moe" not in path:
+        return spec(None, M) if _div(cfg.d_ff, msz) else spec(None, None)
+    if name == "w_down" and "moe" not in path:
+        return spec(M, None) if _div(cfg.d_ff, msz) else spec(None, None)
+
+    # ---- MoE ----------------------------------------------------------------
+    if "moe" in path:
+        if name == "router":
+            return spec(None, None)
+        if name in ("w_gate", "w_up", "w_down"):
+            return spec(M, None, None) if _div(cfg.n_experts, msz) else spec(
+                None, None, None
+            )
+        if name in ("shared_gate", "shared_up"):
+            fs = cfg.d_ff * max(cfg.n_shared_experts, 1)
+            return spec(None, M) if _div(fs, msz) else spec(None, None)
+        if name == "shared_down":
+            fs = cfg.d_ff * max(cfg.n_shared_experts, 1)
+            return spec(M, None) if _div(fs, msz) else spec(None, None)
+
+    # ---- SSM -----------------------------------------------------------------
+    if name in ("w_z", "w_x"):
+        return spec(None, M) if _div(cfg.ssm_heads, msz) else spec(None, None)
+    if name in ("w_B", "w_C"):
+        return spec(None, None)  # g*n small; replicate
+    if name == "w_dt":
+        return spec(None, M) if _div(cfg.ssm_heads, msz) else spec(None, None)
+    if name in ("A_log", "D", "dt_bias"):
+        return spec(M) if _div(cfg.ssm_heads, msz) else spec(None)
+    if name in ("conv_w", "conv_b"):
+        return P(*((None,) * nd))  # small depthwise filters: replicate
+    if name == "norm" and nd >= 1:
+        return spec(M) if _div(cfg.ssm_heads, msz) and shape[-1] == cfg.d_inner else spec(None)
+    if name == "out_proj":
+        return spec(M, None) if _div(cfg.ssm_heads, msz) else spec(None, None)
+
+    # ---- norms / defaults ----------------------------------------------------
+    return P(*((None,) * nd))
+
+
+def param_pspecs(
+    cfg: ModelConfig, params_shape: Any, mesh: Mesh, mode: str = "serve"
+) -> Any:
+    """mode='serve': tensor-parallel over 'model' only (decode latency).
+    mode='train': additionally FSDP over the data(+pod) axes so params and
+    AdamW moments scale with the full chip count."""
+    msz = _model_size(mesh)
+    fsdp = batch_axes(mesh) if mode == "train" else ()
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(
+            getattr(k, "key", getattr(k, "idx", str(k))).__str__() for k in path
+        )
+        s = _spec_for(pstr, leaf, cfg, msz)
+        s = _apply_fsdp(s, leaf, mesh, fsdp, name=pstr.split("/")[-1])
+        specs.append(s)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(
+    cfg: ModelConfig, params_shape: Any, mesh: Mesh, mode: str = "serve"
+) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(cfg, params_shape, mesh, mode),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+def train_batch_pspec(mesh: Mesh, global_batch: int) -> P:
+    dp = batch_axes(mesh)
+    dsz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if _div(global_batch, dsz):
+        return P(dp, None)
+    return P(None, dp)  # batch too small: shard sequence instead
+
+
+def decode_cache_pspec(cfg: ModelConfig, mesh: Mesh, batch: int, kind: str) -> Any:
+    """Spec dict for one layer's cache. kind: 'attn'|'local'|'ssm'."""
+    dp = batch_axes(mesh)
+    msz = _model_size(mesh)
+    dsz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    b_ax = dp if _div(batch, dsz) else None
+    s_ax = dp if not _div(batch, dsz) else None  # context parallelism (B=1)
+    if kind == "ssm":
+        h_ax = MODEL_AXIS if _div(cfg.ssm_heads, msz) else None
+        return {
+            "state": P(b_ax, h_ax, None, None),
+            "conv": P(b_ax, None, None),
+        }
+    kv_ax = MODEL_AXIS if _div(cfg.n_kv_heads, msz) else None
+    hd_ax = (
+        MODEL_AXIS if (kv_ax is None and _div(cfg.head_dim, msz)) else None
+    )
+    return {
+        "k": P(b_ax, s_ax, kv_ax, hd_ax),
+        "v": P(b_ax, s_ax, kv_ax, hd_ax),
+        "pos": P(b_ax, s_ax),
+    }

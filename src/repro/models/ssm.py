@@ -1,0 +1,222 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training forward with a
+log-depth associative inter-chunk scan, and O(1)-state single-token decode.
+
+Chunked SSD (Dao & Gu 2024): for per-step decay a_t = exp(dt_t * A_h) and
+input u_t = dt_t * x_t, the state recurrence s_t = a_t s_{t-1} + u_t (x) B_t
+is evaluated per chunk of Q steps:
+    intra:  Y[t] += sum_{tau<=t} (C_t . B_tau) exp(l_t - l_tau) u_tau
+    states: S_c   = sum_tau exp(l_Q - l_tau) u_tau (x) B_tau
+    inter:  S_c_prev via associative scan over chunks with
+            (a2, S2) o (a1, S1) = (a1*a2, a2*S1 + S2)
+    Y[t]  += C_t . (exp(l_t) * S_prev)
+where l_t is the within-chunk cumulative log-decay. All in fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import dense_init, gated_rms_norm
+
+Array = jax.Array
+
+
+def init_ssm_params(keygen, cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    """Projections are SEPARATE weights (w_z/w_x/w_B/w_C/w_dt) rather than a
+    fused in_proj so each can carry its own tensor-parallel PartitionSpec
+    without slicing across segment boundaries (see models/sharding.py)."""
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    a_init = jnp.log(
+        jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+    )  # A = -exp(A_log) in [-16, -1]
+    # dt bias: softplus^-1 of dt0 in [1e-3, 1e-1], log-spaced
+    dt0 = jnp.exp(
+        jnp.linspace(jnp.log(1e-3), jnp.log(1e-1), h, dtype=jnp.float32)
+    )
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "w_z": dense_init(keygen(), (d, di), dtype),
+        "w_x": dense_init(keygen(), (d, di), dtype),
+        "w_B": dense_init(keygen(), (d, g * n), dtype),
+        "w_C": dense_init(keygen(), (d, g * n), dtype),
+        "w_dt": dense_init(keygen(), (d, h), dtype),
+        "conv_w": dense_init(keygen(), (cfg.ssm_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": a_init,
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(keygen(), (di, d), dtype),
+    }
+
+
+def _project(x: Array, p: Dict[str, Array], cfg: ModelConfig):
+    """Returns (z, xbc_preconv, dt_raw) with xbc = concat(x, B, C)."""
+    z = x @ p["w_z"]
+    xbc = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], axis=-1)
+    dt_raw = x @ p["w_dt"]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along seq: xbc (B, L, ch), w (K, ch)."""
+    K = w.shape[0]
+    out = xbc * w[-1]
+    for k in range(1, K):
+        shifted = jnp.pad(xbc, ((0, 0), (k, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[K - 1 - k]
+    return jax.nn.silu(out + b)
+
+
+def _broadcast_groups(bc: Array, cfg: ModelConfig) -> Array:
+    """(B, L, G, N) -> (B, L, H, N)."""
+    h, g = cfg.ssm_heads, cfg.ssm_groups
+    if g == h:
+        return bc
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def ssd_chunked(
+    x: Array,  # (B, L, H, P) fp32
+    dt: Array,  # (B, L, H)    fp32 (post-softplus)
+    A: Array,  # (H,)         fp32 (negative)
+    Bm: Array,  # (B, L, H, N) fp32
+    Cm: Array,  # (B, L, H, N) fp32
+    chunk: int,
+    initial_state: Optional[Array] = None,  # (B, H, P, N)
+) -> Tuple[Array, Array]:
+    """Returns (Y (B,L,H,P), final_state (B,H,P,N))."""
+    B_, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        z3 = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x, dt, Bm, Cm = z3(x), z3(dt), z3(Bm), z3(Cm)
+    Lp = L + pad
+    nc = Lp // Q
+
+    xc = x.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, H, N)
+    Cc = Cm.reshape(B_, nc, Q, H, N)
+
+    la = dtc * A  # (B, nc, Q, H) log decay per step (<= 0)
+    cum = jnp.cumsum(la, axis=2)  # inclusive within-chunk cumulative
+    u = xc * dtc[..., None]  # (B, nc, Q, H, P)
+
+    # ---- intra-chunk (quadratic within Q) ---------------------------------
+    # M[t, tau] = exp(cum_t - cum_tau), tau <= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qt,Qtau,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc)  # (B,nc,Qt,Qtau,H)
+    Y = jnp.einsum("bcqkh,bckhp->bcqhp", CB * M, u)
+
+    # ---- per-chunk boundary states ---------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    S_local = jnp.einsum("bcqhn,bcqhp->bchpn", Bc * decay_to_end[..., None], u)
+    a_tot = jnp.exp(cum[:, :, -1, :])  # (B, nc, H)
+
+    # ---- inter-chunk associative scan -------------------------------------
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    a_inc, S_inc = jax.lax.associative_scan(combine, (a_tot, S_local), axis=1)
+    # train/prefill always start from S0 = 0 (decode carries state instead)
+    assert initial_state is None, "chunked SSD starts from zero state"
+    S0 = jnp.zeros((B_, H, P, N), x.dtype)
+    S_prev = jnp.concatenate([S0[:, None], S_inc[:, :-1]], axis=1)
+
+    Y = Y + jnp.einsum(
+        "bcqhn,bchpn->bcqhp", Cc * jnp.exp(cum)[..., None], S_prev
+    )
+    final_state = S_inc[:, -1]
+    Y = Y.reshape(B_, Lp, H, P)[:, :L]
+    return Y, final_state
+
+
+def ssm_block_train(
+    x: Array,  # (B, L, d_model)
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+) -> Tuple[Array, Array, Array]:
+    """Returns (out (B,L,d), final_state, final_conv_window)."""
+    B, L, _ = x.shape
+    h, n, g, di = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.d_inner
+    P = cfg.ssm_head_dim
+
+    z, xbc, dt_raw = _project(x, p, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].astype(jnp.float32).reshape(B, L, h, P)
+    Bm = xbc[..., di : di + g * n].astype(jnp.float32).reshape(B, L, g, n)
+    Cm = xbc[..., di + g * n :].astype(jnp.float32).reshape(B, L, g, n)
+    Bm, Cm = _broadcast_groups(Bm, cfg), _broadcast_groups(Cm, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    Y, state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    Y = Y + xs * p["D"][None, None, :, None]
+    y = Y.reshape(B, L, di).astype(x.dtype)
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    conv_window = xbc_raw_tail(x, p, cfg)  # last K-1 pre-activation inputs
+    return out, state, conv_window
+
+
+def xbc_raw_tail(x: Array, p: Dict[str, Array], cfg: ModelConfig) -> Array:
+    """Last (K-1) pre-conv xbc inputs — the decode conv state."""
+    K = cfg.ssm_conv
+    _, xbc, _ = _project(x[:, -(K - 1) :], p, cfg)
+    return xbc  # (B, K-1, conv_ch)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, P, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def ssm_block_decode(
+    x: Array,  # (B, 1, d_model)
+    cache: Dict[str, Array],
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+) -> Tuple[Array, Dict[str, Array]]:
+    B = x.shape[0]
+    h, n, g, di = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.d_inner
+    P = cfg.ssm_head_dim
+
+    z, xbc_t, dt_raw = _project(x[:, 0], p, cfg)
+    window = jnp.concatenate([cache["conv"], xbc_t[:, None]], axis=1)  # (B,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+
+    xs = xbc[..., :di].astype(jnp.float32).reshape(B, h, P)
+    Bm = xbc[..., di : di + g * n].astype(jnp.float32).reshape(B, g, n)
+    Cm = xbc[..., di + g * n :].astype(jnp.float32).reshape(B, g, n)
+    if g != h:
+        Bm = jnp.repeat(Bm, h // g, axis=1)
+        Cm = jnp.repeat(Cm, h // g, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, h)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B, h)
+
+    u = xs * dt[..., None]  # (B, h, P)
+    s_new = a[..., None, None] * cache["state"] + jnp.einsum("bhp,bhn->bhpn", u, Bm)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, s_new) + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = gated_rms_norm(y, z[:, None], p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"state": s_new, "conv": window[:, 1:]}

@@ -1,0 +1,604 @@
+"""Composable decoder-only transformer covering dense / MoE / SSM / hybrid /
+VLM families, with scan-over-layers (stacked params) for train/prefill and a
+per-layer Python loop (heterogeneous caches) for decode.
+
+Entry points:
+    init_params(cfg, key)                  -> param pytree (or eval_shape)
+    forward_train(cfg, params, tokens)     -> (logits, aux)
+    loss_fn(cfg, params, batch)            -> (loss, metrics)
+    prefill(cfg, params, tokens)           -> (last_logits, DecodeCache)
+    decode_step(cfg, params, token, cache) -> (logits, DecodeCache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import ssm as ssm_mod
+from .common import (
+    KeyGen,
+    batch_axes,
+    dense_init,
+    dtype_of,
+    embed_init,
+    maybe_shard,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_one_layer(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.arch_type in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.init_ssm_params(kg, cfg, dtype)
+        return p
+    p["attn"] = attn_mod.init_attn_params(kg, cfg, dtype)
+    p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.arch_type == "moe":
+        p["moe"] = mlp_mod.init_moe_params(kg, cfg, dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp_params(kg, cfg, dtype)
+    return p
+
+
+def _init_shared_block(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Any]:
+    """zamba2-style shared attention+MLP block (one copy, applied every k)."""
+    kg = KeyGen(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn_params(kg, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": mlp_mod.init_mlp_params(
+            kg, dataclasses.replace(cfg, act="swiglu"), dtype
+        ),
+    }
+
+
+def init_params(cfg: ModelConfig, key: Array) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.dtype)
+    kg = KeyGen(key)
+    Vp, d = cfg.vocab_padded, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": embed_init(kg(), (Vp, d), dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": dense_init(kg(), (d, Vp), dtype),
+    }
+    L = cfg.n_layers
+    layer_keys = jax.random.split(kg(), L)
+    params["layers"] = jax.vmap(
+        lambda k: _init_one_layer(cfg, k, dtype)
+    )(layer_keys)
+    if cfg.arch_type == "hybrid":
+        params["shared"] = _init_shared_block(cfg, kg(), dtype)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(kg(), cfg.n_enc_layers)
+        enc_cfg = dataclasses.replace(cfg, arch_type="dense")
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_one_layer(enc_cfg, k, dtype)
+        )(enc_keys)
+        params["enc_norm"] = jnp.zeros((d,), dtype)
+        params["enc_pos"] = embed_init(kg(), (cfg.enc_frames, d), dtype)
+        params["dec_pos"] = embed_init(kg(), (8192, d), dtype)
+        # decoder cross-attention params per layer
+        params["cross_layers"] = jax.vmap(
+            lambda k: {
+                "ln": jnp.zeros((d,), dtype),
+                "attn": attn_mod.init_attn_params(KeyGen(k), cfg, dtype),
+            }
+        )(jax.random.split(kg(), L))
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+def _dense_block(
+    cfg: ModelConfig,
+    lp: Dict[str, Any],
+    h: Array,
+    positions: Array,
+    is_local,
+    collect: bool = False,
+):
+    h = maybe_shard(h, batch_axes(), None, None)
+    att = attn_mod.attention_train(
+        rms_norm(h, lp["ln1"], cfg.norm_eps),
+        lp["attn"],
+        cfg,
+        positions,
+        is_local,
+        return_kv=collect,
+    )
+    if collect:
+        att, kv = att
+    h = h + att
+    x2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        y, aux = mlp_mod.moe_ffn(x2, lp["moe"], cfg)
+        h, aux_l = h + y, aux["aux_loss"]
+    else:
+        h, aux_l = h + mlp_mod.mlp(x2, lp["mlp"], cfg), jnp.float32(0.0)
+    if collect:
+        return h, aux_l, kv
+    return h, aux_l
+
+
+def _ssm_block(cfg: ModelConfig, lp, h: Array, collect: bool = False):
+    h = maybe_shard(h, batch_axes(), None, None)
+    out, state, conv = ssm_mod.ssm_block_train(
+        rms_norm(h, lp["ln1"], cfg.norm_eps), lp["ssm"], cfg
+    )
+    if collect:
+        return h + out, (state, conv)
+    return h + out
+
+
+def _shared_block(
+    cfg: ModelConfig, sp, h: Array, positions: Array, collect: bool = False
+):
+    att = attn_mod.attention_train(
+        rms_norm(h, sp["ln1"], cfg.norm_eps),
+        sp["attn"],
+        cfg,
+        positions,
+        False,
+        return_kv=collect,
+    )
+    kv = None
+    if collect:
+        att, kv = att
+    h = h + att
+    swi = dataclasses.replace(cfg, act="swiglu")
+    h = h + mlp_mod.mlp(rms_norm(h, sp["ln2"], cfg.norm_eps), sp["mlp"], swi)
+    if collect:
+        return h, kv
+    return h
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable) if cfg.remat else fn
+
+
+def _scan_layers(
+    cfg: ModelConfig, params, h: Array, positions: Array, collect: bool = False
+):
+    """Returns (h, total_aux_loss, collected-or-None).
+
+    ``collect=True`` (prefill) additionally stacks per-layer cache material:
+    (k, v) for attention layers, (state, conv) for SSM layers, and the
+    shared-block k/v per period for hybrids.
+    """
+    kinds = cfg.layer_kinds()
+
+    if cfg.arch_type == "hybrid":
+        every = cfg.hybrid_attn_every
+        periods = cfg.n_layers // every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((periods, every) + a.shape[1:]), params["layers"]
+        )
+        sp = params["shared"]
+
+        def period_body(hh, plp):
+            def inner(hh2, lp):
+                if collect:
+                    hh2, sc = _ssm_block(cfg, lp, hh2, collect=True)
+                    return hh2, sc
+                return _ssm_block(cfg, lp, hh2), None
+
+            hh, inner_ys = jax.lax.scan(inner, hh, plp)
+            if collect:
+                hh, skv = _shared_block(cfg, sp, hh, positions, collect=True)
+                return hh, (inner_ys, skv)
+            hh = _shared_block(cfg, sp, hh, positions)
+            return hh, None
+
+        body = _maybe_remat(period_body, cfg)
+        h, ys = jax.lax.scan(body, h, stacked)
+        return h, jnp.float32(0.0), ys
+
+    if cfg.arch_type == "ssm":
+
+        def body(hh, lp):
+            if collect:
+                return _ssm_block(cfg, lp, hh, collect=True)
+            return _ssm_block(cfg, lp, hh), None
+
+        h, ys = jax.lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+        return h, jnp.float32(0.0), ys
+
+    # dense / moe / vlm / audio-decoder: attention blocks, maybe local/global
+    is_local_flags = jnp.asarray([k == "local" for k in kinds], bool)
+
+    def body(hh, xs):
+        lp, flag = xs
+        flag_arg = flag if cfg.local_ratio > 0 else False
+        if collect:
+            hh, aux, kv = _dense_block(cfg, lp, hh, positions, flag_arg, collect=True)
+            return hh, (aux, kv)
+        hh, aux = _dense_block(cfg, lp, hh, positions, flag_arg)
+        return hh, aux
+
+    h, ys = jax.lax.scan(
+        _maybe_remat(body, cfg), h, (params["layers"], is_local_flags)
+    )
+    if collect:
+        auxs, kvs = ys
+        return h, jnp.sum(auxs), kvs
+    return h, jnp.sum(ys), None
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def encode_audio(cfg: ModelConfig, params, frames: Array) -> Array:
+    """Whisper-style encoder over stub frame embeddings (B, F, d)."""
+    F = frames.shape[1]
+    h = frames + params["enc_pos"][None, :F]
+    positions = jnp.arange(F)
+
+    def body(hh, lp):
+        hh = hh + attn_mod.attention_train(
+            rms_norm(hh, lp["ln1"], cfg.norm_eps),
+            lp["attn"],
+            cfg,
+            positions,
+            False,
+            causal=False,
+        )
+        hh = hh + mlp_mod.mlp(rms_norm(hh, lp["ln2"], cfg.norm_eps), lp["mlp"], cfg)
+        return hh, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_train(
+    cfg: ModelConfig,
+    params,
+    tokens: Array,  # (B, S)
+    side: Optional[Array] = None,  # audio frames (B, F, d) for enc-dec
+) -> Tuple[Array, Dict[str, Array]]:
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    h = maybe_shard(h, batch_axes(), None, None)
+    positions = jnp.arange(S)
+
+    if cfg.is_encoder_decoder:
+        assert side is not None, "enc-dec arch needs encoder frames"
+        enc = encode_audio(cfg, params, side)
+        # positions beyond the learned table wrap (structural support for
+        # the 32k decode shapes; the real model caps at 448)
+        h = h + params["dec_pos"][jnp.arange(S) % params["dec_pos"].shape[0]][None]
+
+        def body(hh, xs):
+            lp, cp = xs
+            hh, _ = _dense_block(cfg, lp, hh, positions, False)
+            hh = hh + attn_mod.cross_attention_train(
+                rms_norm(hh, cp["ln"], cfg.norm_eps), enc, cp["attn"], cfg
+            )
+            return hh, None
+
+        h, _ = jax.lax.scan(
+            _maybe_remat(body, cfg), h, (params["layers"], params["cross_layers"])
+        )
+        aux_loss = jnp.float32(0.0)
+    else:
+        h, aux_loss, _ = _scan_layers(cfg, params, h, positions)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    return logits, {"aux_loss": aux_loss}
+
+
+def loss_fn(
+    cfg: ModelConfig, params, batch: Dict[str, Array]
+) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward_train(cfg, params, batch["tokens"], batch.get("frames"))
+    logits = logits.astype(jnp.float32)
+    labels = jnp.clip(batch["labels"], 0, cfg.vocab_padded - 1)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_coef * aux["aux_loss"]
+    return total, {"ce": loss, "aux_loss": aux["aux_loss"]}
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DecodeCache:
+    layers: List[Dict[str, Array]]  # per-layer kv / ssm caches
+    position: Array  # scalar int32 — next position to write
+    shared: Optional[List[Dict[str, Array]]] = None  # hybrid shared-attn caches
+    cross: Optional[List[Tuple[Array, Array]]] = None  # enc-dec cross k/v
+
+    def tree_flatten(self):
+        return (self.layers, self.position, self.shared, self.cross), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def uniform_layers(cfg: ModelConfig) -> bool:
+    """True when every layer has the same block kind and cache shape, so
+    decode can lax.scan over stacked caches (compile-time/HLO-size win for
+    deep models; heterogeneous archs use the per-layer Python loop)."""
+    return (
+        cfg.arch_type in ("dense", "moe", "ssm", "vlm")
+        and cfg.local_ratio == 0
+        and not cfg.is_encoder_decoder
+    )
+
+
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=None
+) -> DecodeCache:
+    dtype = dtype or dtype_of(cfg.dtype)
+    kinds = cfg.layer_kinds()
+    if uniform_layers(cfg):
+        if cfg.arch_type == "ssm":
+            one = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        else:
+            one = attn_mod.init_kv_cache(cfg, batch, max_len, False, dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+        )
+        return DecodeCache(stacked, jnp.zeros((), jnp.int32), None, None)
+    layers = []
+    for i, k in enumerate(kinds):
+        if k == "ssm":
+            layers.append(ssm_mod.init_ssm_cache(cfg, batch, dtype))
+        else:
+            layers.append(
+                attn_mod.init_kv_cache(cfg, batch, max_len, k == "local", dtype)
+            )
+    shared = None
+    if cfg.arch_type == "hybrid":
+        periods = cfg.n_layers // cfg.hybrid_attn_every
+        shared = [
+            attn_mod.init_kv_cache(cfg, batch, max_len, False, dtype)
+            for _ in range(periods)
+        ]
+    cross = None
+    if cfg.is_encoder_decoder:
+        cross = [
+            (
+                jnp.zeros((batch, cfg.enc_frames, cfg.n_heads, cfg.head_dim), dtype),
+                jnp.zeros((batch, cfg.enc_frames, cfg.n_heads, cfg.head_dim), dtype),
+            )
+            for _ in range(cfg.n_layers)
+        ]
+    return DecodeCache(layers, jnp.zeros((), jnp.int32), shared, cross)
+
+
+def _layer_params_at(params, i: int):
+    return jax.tree.map(lambda a: a[i], params["layers"])
+
+
+def _decode_step_scanned(
+    cfg: ModelConfig, params, token: Array, cache: DecodeCache
+) -> Tuple[Array, DecodeCache]:
+    """Uniform-arch decode via lax.scan over stacked layer caches."""
+    pos = cache.position
+    h = params["embed"][token][:, None, :]
+
+    def body(hh, xs):
+        lp, lc = xs
+        if cfg.arch_type == "ssm":
+            out, new_c = ssm_mod.ssm_block_decode(
+                rms_norm(hh, lp["ln1"], cfg.norm_eps), lc, lp["ssm"], cfg
+            )
+            return hh + out, new_c
+        out, new_c = attn_mod.attention_decode(
+            rms_norm(hh, lp["ln1"], cfg.norm_eps), lc, lp["attn"], cfg, pos, False
+        )
+        hh = hh + out
+        x2 = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        if cfg.arch_type == "moe":
+            y, _ = mlp_mod.moe_ffn(x2, lp["moe"], cfg)
+            hh = hh + y
+        else:
+            hh = hh + mlp_mod.mlp(x2, lp["mlp"], cfg)
+        return hh, new_c
+
+    h, new_layers = jax.lax.scan(body, h, (params["layers"], cache.layers))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"])[:, 0]
+    return logits, DecodeCache(new_layers, pos + 1, None, None)
+
+
+def decode_step(
+    cfg: ModelConfig, params, token: Array, cache: DecodeCache
+) -> Tuple[Array, DecodeCache]:
+    """One-token decode. token: (B,) int32. Returns (logits (B, Vp), cache)."""
+    if uniform_layers(cfg) and isinstance(cache.layers, dict):
+        return _decode_step_scanned(cfg, params, token, cache)
+    B = token.shape[0]
+    pos = cache.position
+    h = params["embed"][token][:, None, :]  # (B, 1, d)
+    if cfg.is_encoder_decoder:
+        p_idx = pos % params["dec_pos"].shape[0]
+        h = h + params["dec_pos"][p_idx][None, None]
+
+    kinds = cfg.layer_kinds()
+    new_layers: List[Dict[str, Array]] = []
+    new_shared = list(cache.shared) if cache.shared is not None else None
+    period = cfg.hybrid_attn_every or 0
+
+    for i, kind in enumerate(kinds):
+        lp = _layer_params_at(params, i)
+        if kind == "ssm":
+            out, new_c = ssm_mod.ssm_block_decode(
+                rms_norm(h, lp["ln1"], cfg.norm_eps), cache.layers[i], lp["ssm"], cfg
+            )
+            h = h + out
+        else:
+            out, new_c = attn_mod.attention_decode(
+                rms_norm(h, lp["ln1"], cfg.norm_eps),
+                cache.layers[i],
+                lp["attn"],
+                cfg,
+                pos,
+                kind == "local",
+            )
+            h = h + out
+            x2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.arch_type == "moe":
+                y, _ = mlp_mod.moe_ffn(x2, lp["moe"], cfg)
+                h = h + y
+            else:
+                h = h + mlp_mod.mlp(x2, lp["mlp"], cfg)
+        new_layers.append(new_c)
+
+        if cfg.is_encoder_decoder:
+            cp = jax.tree.map(lambda a: a[i], params["cross_layers"])
+            h = h + attn_mod.cross_attention_decode(
+                rms_norm(h, cp["ln"], cfg.norm_eps), cache.cross[i], cp["attn"], cfg
+            )
+
+        # hybrid: shared attention block after every `period` ssm layers
+        if cfg.arch_type == "hybrid" and period and (i + 1) % period == 0:
+            pidx = (i + 1) // period - 1
+            sp = params["shared"]
+            out, sc = attn_mod.attention_decode(
+                rms_norm(h, sp["ln1"], cfg.norm_eps),
+                cache.shared[pidx],
+                sp["attn"],
+                cfg,
+                pos,
+                False,
+            )
+            h = h + out
+            swi = dataclasses.replace(cfg, act="swiglu")
+            h = h + mlp_mod.mlp(rms_norm(h, sp["ln2"], cfg.norm_eps), sp["mlp"], swi)
+            new_shared[pidx] = sc
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"])[:, 0]
+    new_cache = DecodeCache(new_layers, pos + 1, new_shared, cache.cross)
+    return logits, new_cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    tokens: Array,
+    side: Optional[Array] = None,
+    extra_len: int = 1024,
+) -> Tuple[Array, DecodeCache]:
+    """Run the full prompt, return last-position logits + a FILLED cache
+    (k/v collected from the layer scan; ring placement for local layers;
+    SSD final states for SSM layers). Consistency with decode_step is
+    covered by tests/test_serve.py."""
+    B, S = tokens.shape
+    max_len = S + extra_len
+    dtype = dtype_of(cfg.dtype)
+    h = params["embed"][tokens]
+    h = maybe_shard(h, batch_axes(), None, None)
+    positions = jnp.arange(S)
+    kinds = cfg.layer_kinds()
+
+    if cfg.is_encoder_decoder:
+        assert side is not None
+        enc = encode_audio(cfg, params, side)
+        # positions beyond the learned table wrap (structural support for
+        # the 32k decode shapes; the real model caps at 448)
+        h = h + params["dec_pos"][jnp.arange(S) % params["dec_pos"].shape[0]][None]
+
+        def body(hh, xs):
+            lp, cp = xs
+            hh, _, kv = _dense_block(cfg, lp, hh, positions, False, collect=True)
+            hh = hh + attn_mod.cross_attention_train(
+                rms_norm(hh, cp["ln"], cfg.norm_eps), enc, cp["attn"], cfg
+            )
+            return hh, kv
+
+        h, kvs = jax.lax.scan(body, h, (params["layers"], params["cross_layers"]))
+        layers = [
+            attn_mod.cache_from_kv(cfg, kvs[0][i], kvs[1][i], False, max_len)
+            for i in range(cfg.n_layers)
+        ]
+        cross = []
+        hd = cfg.head_dim
+        F = enc.shape[1]
+        for i in range(cfg.n_layers):
+            cp = jax.tree.map(lambda a: a[i], params["cross_layers"])
+            ck = (enc @ cp["attn"]["wk"]).reshape(B, F, cfg.n_kv_heads, hd)
+            cv = (enc @ cp["attn"]["wv"]).reshape(B, F, cfg.n_kv_heads, hd)
+            ck = attn_mod._expand_kv(ck, cfg.n_heads)
+            cv = attn_mod._expand_kv(cv, cfg.n_heads)
+            cross.append((ck, cv))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = h @ params["lm_head"]
+        cache = DecodeCache(layers, jnp.asarray(S, jnp.int32), None, cross)
+        return logits[:, -1], cache
+
+    h, _, collected = _scan_layers(cfg, params, h, positions, collect=True)
+
+    if uniform_layers(cfg):
+        if cfg.arch_type == "ssm":
+            states, convs = collected
+            stacked = {"state": states, "conv": convs}
+        else:
+            k_all, v_all = collected
+            stacked = jax.vmap(
+                lambda k, v: attn_mod.cache_from_kv(cfg, k, v, False, max_len)
+            )(k_all, v_all)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = h @ params["lm_head"]
+        return logits[:, -1], DecodeCache(
+            stacked, jnp.asarray(S, jnp.int32), None, None
+        )
+
+    layers: List[Dict[str, Array]] = []
+    shared = None
+    if cfg.arch_type == "hybrid":
+        (states, convs), (sk, sv) = collected  # (periods, every, ...) / (periods, ...)
+        every = cfg.hybrid_attn_every
+        periods = cfg.n_layers // every
+        for pi in range(periods):
+            for li in range(every):
+                layers.append({"state": states[pi, li], "conv": convs[pi, li]})
+        shared = [
+            attn_mod.cache_from_kv(cfg, sk[pi], sv[pi], False, max_len)
+            for pi in range(periods)
+        ]
+    elif cfg.arch_type == "ssm":
+        states, convs = collected
+        for i in range(cfg.n_layers):
+            layers.append({"state": states[i], "conv": convs[i]})
+    else:
+        k_all, v_all = collected
+        for i, kind in enumerate(kinds):
+            layers.append(
+                attn_mod.cache_from_kv(cfg, k_all[i], v_all[i], kind == "local", max_len)
+            )
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    cache = DecodeCache(layers, jnp.asarray(S, jnp.int32), shared, None)
+    return logits[:, -1], cache

@@ -1,0 +1,260 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per EXPERIMENTS.md §Roofline; cost_analysis operates on the
+post-SPMD per-device module, so "per device / per-chip bandwidth" equals the
+spec's "global / (chips x bandwidth)"):
+
+    compute   = flops_per_device / PEAK_FLOPS_BF16
+    memory    = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+collective bytes are parsed from the optimized HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes the LARGEST shape literal on its line (≈ the full tensor
+moved; documented upper-bound proxy). Ops inside while bodies (layer scans,
+attention chunk scans) are multiplied by the loop trip count, inferred from
+the largest integer constant in the while condition computation — the
+standard XLA scan lowering puts the trip count there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_max_bytes(line: str) -> int:
+    return max(
+        (_shape_bytes(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(line)),
+        default=0,
+    )
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of body lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$", s)
+        if m and ("{" in s) and ("=" not in s.split("{")[0]):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _find_entry(comps: Dict[str, List[str]], hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.MULTILINE)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_from_hlo(hlo: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Returns (bytes_by_kind_weighted, raw_counts_by_kind).
+
+    Weighted = multiplied by inferred while-loop trip counts along the call
+    chain from ENTRY.
+    """
+    comps = _split_computations(hlo)
+    entry = _find_entry(comps, hlo)
+
+    # per-computation: direct collective bytes and (callee, multiplier) edges
+    direct: Dict[str, Dict[str, int]] = {}
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    call_re = re.compile(
+        r"(?:body|condition|to_apply|called_computations=\{[^}]*\})=%?([\w\.\-]+)"
+    )
+    while_re = re.compile(r"=\s*\S+\s+while\(")
+    body_re = re.compile(r"body=%?([\w\.\-]+)")
+    cond_re = re.compile(r"condition=%?([\w\.\-]+)")
+    callop_re = re.compile(r"=\s*\S+\s+(?:call|fusion|conditional)\(")
+
+    for name, lines in comps.items():
+        d: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+        e: List[Tuple[str, int]] = []
+        for line in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(?:-start|-done)?\(", line):
+                    d[kind] += _line_max_bytes(line)
+                    counts[kind] += 1
+                    break
+            if while_re.search(line):
+                bm, cm = body_re.search(line), cond_re.search(line)
+                if bm:
+                    trips = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                    e.append((bm.group(1), max(trips, 1)))
+            elif callop_re.search(line):
+                for cm2 in call_re.finditer(line):
+                    e.append((cm2.group(1), 1))
+                m2 = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", line)
+                if m2:
+                    e.append((m2.group(1), 1))
+        direct[name] = d
+        edges[name] = e
+
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total(name: str, stack=()) -> Dict[str, int]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in direct:
+            return {k: 0 for k in _COLLECTIVES}
+        acc = dict(direct[name])
+        for callee, mult in edges[name]:
+            sub = total(callee, stack + (name,))
+            for k, v in sub.items():
+                acc[k] += mult * v
+        memo[name] = acc
+        return acc
+
+    if entry is None:
+        # fall back: unweighted sum over all computations
+        acc = {k: 0 for k in _COLLECTIVES}
+        for d in direct.values():
+            for k, v in d.items():
+                acc[k] += v
+        return acc, counts
+    return total(entry), counts
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # 6*N*D (or 6*N_active*D) global
+    useful_flops_ratio: float
+    memory_analysis: Optional[str] = None
+    # raw cost_analysis numbers (while bodies counted ONCE — kept for
+    # reference; the roofline uses the trip-count-weighted parser values)
+    xla_flops_raw: float = 0.0
+    xla_bytes_raw: float = 0.0
+
+    def to_row(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_chips: int,
+    model_flops: float,
+    peak_flops: float,
+    hbm_bw: float,
+    ici_bw: float,
+) -> RooflineTerms:
+    from .hlo_parse import analyze_hlo
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    costs = analyze_hlo(hlo)
+    # the parser counts only dot flops (matmuls dominate); take the max of
+    # parser (loop-weighted) and XLA (loop-unaware) as the best estimate
+    flops = max(costs.dot_flops, xla_flops)
+    byts = max(costs.bytes, xla_bytes)
+    coll = {k: int(v) for k, v in costs.coll.items()}
+    counts = dict(costs.coll_count)
+    coll_total = float(sum(coll.values()))
+
+    compute_s = flops / peak_flops
+    memory_s = byts / hbm_bw
+    collective_s = coll_total / ici_bw
+    dom = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    global_flops = flops * n_chips
+    ratio = model_flops / global_flops if global_flops > 0 else 0.0
+
+    mem_txt = None
+    try:
+        ma = compiled.memory_analysis()
+        mem_txt = str(ma)
+    except Exception:
+        pass
+
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll_total,
+        collective_breakdown=coll,
+        collective_counts=counts,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dom,
+        model_flops=model_flops,
+        useful_flops_ratio=ratio,
+        memory_analysis=mem_txt,
+        xla_flops_raw=xla_flops,
+        xla_bytes_raw=xla_bytes,
+    )

@@ -1,0 +1,320 @@
+"""Trip-count-aware HLO text analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, which makes
+scan-over-layers programs look ~n_layers x cheaper than they are (verified
+in tests/test_roofline.py). This module re-derives the roofline inputs from
+the scheduled post-SPMD HLO text with loop weighting:
+
+  * computations are split robustly (headers may contain /*index=k*/
+    comments and tuple types);
+  * a per-computation symbol table (header params + instruction defs) gives
+    operand shapes;
+  * dot flops  = 2 * prod(output shape) * prod(contracting dims of lhs);
+  * bytes      = sum over scheduled instructions of output + operand bytes
+    (fusions count once at their call site, matching buffer semantics;
+    parameter/constant/tuple/GTE/bitcast are free);
+  * collective bytes per kind, from the op's shapes;
+  * while bodies multiply their interior by the trip count inferred from
+    the largest integer constant in the condition computation (the standard
+    scan lowering compares the induction variable against that constant);
+    conditional branches count both sides (documented upper bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^()]*\)|[\w\[\]\{\},\/\*=\s])+?)(?=,\s*%?[\w\.\-]+:|\)\s*->|\)$)")
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_FREE_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
+    "after-all(", "iota(",
+)
+
+
+def _shapes_bytes(text: str) -> int:
+    """Total bytes of all shape literals in a type string."""
+    return sum(
+        _DTYPE_BYTES[m.group(1)]
+        * (eval("*".join(m.group(2).split(",")) or "1") if m.group(2).strip() else 1)
+        for m in _SHAPE_RE.finditer(text)
+    )
+
+
+def _first_shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+def _shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2).strip() else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    symbols: Dict[str, str]  # instr/param name -> type text
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.endswith("{") and " = " not in s.split("(")[0] and not s.startswith(
+            "HloModule"
+        ):
+            toks = s.split()
+            is_entry = toks[0] == "ENTRY"
+            name_tok = toks[1] if is_entry else toks[0]
+            name = name_tok.lstrip("%").split("(")[0]
+            cur = Computation(name, [], {})
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # header params: "%p: f32[2,3]" pairs
+            header = s[s.find("(") + 1 :]
+            for pm in re.finditer(r"%?([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?[^,()]*)", header):
+                cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        cur.lines.append(s)
+        dm = _DEF_RE.match(s)
+        if dm:
+            cur.symbols[dm.group(1)] = dm.group(2)
+    return comps, entry
+
+
+def _trip_count(cond: Optional[Computation]) -> int:
+    if cond is None:
+        return 1
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_WHILE_RE = re.compile(r"\bwhile\(")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*\})")
+_BRANCH_NAMES = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclasses.dataclass
+class Costs:
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+    coll_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS}
+    )
+
+    def add(self, other: "Costs", mult: float = 1.0, bytes_too: bool = True):
+        self.dot_flops += mult * other.dot_flops
+        if bytes_too:
+            self.bytes += mult * other.bytes
+        for k in COLLECTIVE_KINDS:
+            self.coll[k] += mult * other.coll[k]
+            self.coll_count[k] += int(mult * other.coll_count[k])
+
+
+def _dot_flops(line: str, comp: Computation) -> float:
+    """2 * prod(out) * prod(lhs contracting dims)."""
+    out = _shape_dims(line.split("dot(")[0])
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    opnds = _OPND_RE.findall(line.split("dot(", 1)[1])
+    if not opnds:
+        return 0.0
+    lhs_type = comp.symbols.get(opnds[0], "")
+    lhs = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if lhs is None or m is None:
+        # fall back: assume contraction over last lhs dim unknown -> use out only
+        k = 1
+    else:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        k = 1
+        for d in dims:
+            if d < len(lhs[1]):
+                k *= lhs[1][d]
+    n = 1
+    for d in out_dims:
+        n *= d
+    return 2.0 * n * k
+
+
+def _line_bytes(line: str, comp: Computation) -> float:
+    """output bytes + operand bytes (shapes via the symbol table).
+
+    dynamic-slice / dynamic-update-slice touch only the slice, not the whole
+    buffer (XLA updates in place) — counted as 2x the slice size; without
+    this, buffers updated inside scans would be charged fully per trip.
+    """
+    head, _, tail = line.partition("(")
+    out_b = _shapes_bytes(head.split("=", 1)[1] if "=" in head else head)
+    if "dynamic-update-slice(" in line:
+        # update operand = second arg; approximate via smallest shape on line
+        args = tail.split(")", 1)[0]
+        opnds = _OPND_RE.findall(args)
+        upd = (
+            _shapes_bytes(comp.symbols.get(opnds[1], "").split("=")[0])
+            if len(opnds) >= 2
+            else out_b
+        )
+        return float(2 * upd)
+    if "dynamic-slice(" in line:
+        return float(2 * out_b)
+    opnd_b = 0
+    args = tail.split(")", 1)[0] if ")" in tail else tail
+    for nm in _OPND_RE.findall(args):
+        t = comp.symbols.get(nm)
+        if t:
+            opnd_b += _shapes_bytes(t.split("(")[0].split("=")[0] if "=" in t else t)
+    return float(out_b + opnd_b)
+
+
+def analyze_hlo(hlo: str) -> Costs:
+    comps, entry = split_computations(hlo)
+    memo: Dict[str, Costs] = {}
+
+    def visit(name: str, stack=()) -> Costs:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        out = Costs()
+        if comp is None or name in stack:
+            return out
+        for line in comp.lines:
+            # collectives
+            matched_coll = False
+            for kind in COLLECTIVE_KINDS:
+                if re.search(rf"\b{kind}(?:-start)?\(", line):
+                    out.coll[kind] += _line_max_bytes(line)
+                    out.coll_count[kind] += 1
+                    matched_coll = True
+                    break
+            if matched_coll:
+                out.bytes += _line_bytes(line, comp)
+                continue
+            if _WHILE_RE.search(line):
+                bm, cm = _BODY_RE.search(line), _COND_RE.search(line)
+                if bm:
+                    trips = _trip_count(comps.get(cm.group(1))) if cm else 1
+                    out.add(visit(bm.group(1), stack + (name,)), mult=max(trips, 1))
+                continue
+            if _BRANCH_RE.search(line):
+                seg = line[line.find("conditional") :]
+                for nm in set(_BRANCH_NAMES.findall(seg)):
+                    if nm in comps:
+                        out.add(visit(nm, stack + (name,)), mult=1.0)
+                continue
+            if " fusion(" in line or re.search(r"=\s*\S+\s+call\(", line):
+                cm2 = _CALLS_RE.search(line)
+                sliced = False
+                if cm2:
+                    sub = visit(cm2.group(1), stack + (name,))
+                    # fusion interior: count its dots/collectives, but bytes
+                    # are the call-site operands+output (fusion semantics)
+                    out.add(sub, mult=1.0, bytes_too=False)
+                    callee = comps.get(cm2.group(1))
+                    sliced = callee is not None and any(
+                        "dynamic-slice(" in l or "dynamic-update-slice(" in l
+                        for l in callee.lines
+                    )
+                if sliced:
+                    # the fusion slices its big operand(s): charge output +
+                    # operands no larger than 100x the output (the sliced
+                    # mega-operand is read O(slice), not in full, per trip)
+                    head = line.partition("(")[0]
+                    out_b = _shapes_bytes(
+                        head.split("=", 1)[1] if "=" in head else head
+                    )
+                    opnd_b = 0
+                    args = line.partition("(")[2].split(")", 1)[0]
+                    for nm2 in _OPND_RE.findall(args):
+                        t = comp.symbols.get(nm2)
+                        if t:
+                            b = _shapes_bytes(t.split("=")[0])
+                            opnd_b += b if b <= 100 * max(out_b, 1) else 2 * out_b
+                    out.bytes += float(out_b + opnd_b)
+                else:
+                    out.bytes += _line_bytes(line, comp)
+                continue
+            if " dot(" in line:
+                out.dot_flops += _dot_flops(line, comp)
+                out.bytes += _line_bytes(line, comp)
+                continue
+            if any(op in line for op in _FREE_OPS):
+                continue
+            if "=" in line:
+                out.bytes += _line_bytes(line, comp)
+        memo[name] = out
+        return out
+
+    if entry is None:
+        total = Costs()
+        for nm in comps:
+            total.add(visit(nm))
+        return total
+    return visit(entry)
+
+
+def _line_max_bytes(line: str) -> int:
+    return max(
+        (
+            _DTYPE_BYTES[m.group(1)]
+            * (
+                eval("*".join(m.group(2).split(",")))
+                if m.group(2).strip()
+                else 1
+            )
+            for m in _SHAPE_RE.finditer(line)
+        ),
+        default=0,
+    )

@@ -1,0 +1,4 @@
+"""Serving: batched prefill + decode engine with KV/SSM-state caches."""
+from .engine import Request, ServeConfig, ServingEngine, make_serve_step
+
+__all__ = ["Request", "ServeConfig", "ServingEngine", "make_serve_step"]

@@ -1,0 +1,90 @@
+"""Batched serving engine: request queue -> batched prefill -> decode loop.
+
+The jitted ``serve_step`` (one token for the whole batch, cache in/out) is
+the unit the dry-run lowers for the decode_32k / long_500k shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import DecodeCache, decode_step, init_decode_cache, prefill
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 2048
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int = 1
+    seed: int = 0
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, token (B,), cache) -> (next_logits (B, Vp), cache)."""
+
+    def serve_step(params, token, cache):
+        return decode_step(cfg, params, token, cache)
+
+    return serve_step
+
+
+def _sample(logits: Array, key: Array, temperature: float) -> Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Minimal continuous-batching-free engine: collect a batch of requests,
+    right-pad prompts to a common length, batched prefill, then decode until
+    all requests finish (EOS or budget)."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self._step = jax.jit(make_serve_step(cfg))
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+    def run(self, requests: List[Request], side: Optional[Array] = None) -> List[Request]:
+        cfg, scfg = self.cfg, self.scfg
+        assert len(requests) <= scfg.batch
+        while len(requests) < scfg.batch:  # pad batch with dummies
+            requests.append(Request(prompt=np.array([0], np.int32), max_new_tokens=1))
+        S = max(int(r.prompt.shape[0]) for r in requests)
+        toks = np.zeros((scfg.batch, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - r.prompt.shape[0] :] = r.prompt  # left-pad
+        last_logits, cache = prefill(
+            cfg, self.params, jnp.asarray(toks), side, extra_len=scfg.max_len
+        )
+        budget = max(r.max_new_tokens for r in requests)
+        logits = last_logits
+        for t in range(budget):
+            self._key, sub = jax.random.split(self._key)
+            nxt = _sample(logits, sub, scfg.temperature)
+            nxt_np = np.asarray(nxt)
+            for i, r in enumerate(requests):
+                if not r.done and t < r.max_new_tokens:
+                    tok = int(nxt_np[i])
+                    r.output.append(tok)
+                    if tok == scfg.eos_id:
+                        r.done = True
+            if all(r.done or len(r.output) >= r.max_new_tokens for r in requests):
+                break
+            logits, cache = self._step(self.params, nxt, cache)
+        return requests

@@ -1,0 +1,17 @@
+"""Training substrate: optimizer, loop, checkpointing, DMTRL head bridge."""
+from . import checkpoint, loop, mtl_head, optimizer
+from .loop import TrainLogger, make_sharded_train_step, make_train_step, train
+from .optimizer import AdamW, AdamWState
+
+__all__ = [
+    "checkpoint",
+    "loop",
+    "mtl_head",
+    "optimizer",
+    "TrainLogger",
+    "make_sharded_train_step",
+    "make_train_step",
+    "train",
+    "AdamW",
+    "AdamWState",
+]

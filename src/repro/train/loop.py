@@ -1,0 +1,168 @@
+"""Generic LM training loop: jitted train_step with explicit shardings,
+metric logging, checkpointing hooks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn, init_params
+from repro.models.sharding import param_shardings, train_batch_pspec
+from .optimizer import AdamW, AdamWState
+
+Array = jax.Array
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: AdamW,
+    microbatches: int = 1,
+    inner_param_specs=None,
+    grad_specs=None,
+) -> Callable:
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1: gradient accumulation over batch splits (bounds the
+    L x B x S x d residual saves that dominate training memory).
+
+    inner_param_specs (ZeRO-2 style, §Perf): constrain params to these specs
+    (typically model-only / un-FSDP'd) for the forward/backward so the FSDP
+    all-gathers happen ONCE per step instead of once per microbatch;
+    grad_specs keeps the accumulated grads FSDP-sharded (the reduce-scatter
+    side)."""
+
+    def grads_of(params, batch):
+        if inner_param_specs is not None:
+            params = jax.lax.with_sharding_constraint(params, inner_param_specs)
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(v):
+                b = v.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return v.reshape((microbatches, b // microbatches) + v.shape[1:])
+
+            mb = {k: split(v) for k, v in batch.items()}
+
+            def acc_fn(carry, mb_i):
+                g_acc, l_acc, a_acc = carry
+                (l, met), g = grads_of(params, mb_i)
+                if grad_specs is not None:
+                    g = jax.lax.with_sharding_constraint(g, grad_specs)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l, a_acc + met["aux_loss"]), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if grad_specs is not None:
+                g0 = jax.lax.with_sharding_constraint(g0, grad_specs)
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc_fn, (g0, jnp.float32(0.0), jnp.float32(0.0)), mb
+            )
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            metrics = {"ce": loss, "aux_loss": aux_sum * inv}
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_sharded_train_step(
+    cfg: ModelConfig, opt: AdamW, mesh: Mesh, global_batch: int, seq_len: int
+):
+    """jit the train step with in/out shardings for the production mesh.
+    Used by the launcher and the dry-run (via .lower on ShapeDtypeStructs)."""
+    import repro.models.transformer as tf
+
+    pshapes = tf.param_shapes(cfg)
+    pshard = param_shardings(cfg, pshapes, mesh)
+    opt_shard = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=pshard,
+        nu=pshard,
+    )
+    bspec = train_batch_pspec(mesh, global_batch)
+    batch_shard: Dict[str, Any] = {
+        "tokens": NamedSharding(mesh, bspec),
+        "labels": NamedSharding(mesh, bspec),
+        "mask": NamedSharding(mesh, bspec),
+    }
+    if cfg.is_encoder_decoder:
+        batch_shard["frames"] = NamedSharding(mesh, P(bspec[0], None, None))
+    metric_shard = NamedSharding(mesh, P())
+
+    step = make_train_step(cfg, opt)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, opt_shard, batch_shard),
+        out_shardings=(
+            pshard,
+            opt_shard,
+            {k: metric_shard for k in ("ce", "aux_loss", "grad_norm", "lr", "loss")},
+        ),
+        donate_argnums=(0, 1),
+    )
+    return jitted, pshard, opt_shard, batch_shard
+
+
+@dataclasses.dataclass
+class TrainLogger:
+    every: int = 10
+    history: list = dataclasses.field(default_factory=list)
+
+    def log(self, step: int, metrics: Dict[str, Array], t0: float):
+        if step % self.every == 0:
+            row = {k: float(v) for k, v in metrics.items()}
+            row["step"] = step
+            row["elapsed_s"] = time.time() - t0
+            self.history.append(row)
+            print(
+                f"step {step:5d}  loss {row['loss']:.4f}  ce {row['ce']:.4f}  "
+                f"gnorm {row['grad_norm']:.3f}  lr {row['lr']:.2e}  "
+                f"t {row['elapsed_s']:.1f}s",
+                flush=True,
+            )
+
+
+def train(
+    cfg: ModelConfig,
+    opt: AdamW,
+    data_iter,
+    steps: int,
+    seed: int = 0,
+    logger: Optional[TrainLogger] = None,
+    checkpoint_fn: Optional[Callable[[int, Any, Any], None]] = None,
+    checkpoint_every: int = 0,
+) -> Tuple[Any, AdamWState, list]:
+    """Single-host training driver (CPU smoke / examples)."""
+    logger = logger or TrainLogger()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    t0 = time.time()
+    for step in range(steps):
+        batch = next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items() if v is not None}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        logger.log(step, metrics, t0)
+        if checkpoint_fn and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            checkpoint_fn(step + 1, params, opt_state)
+    return params, opt_state, logger.history

@@ -1,0 +1,85 @@
+"""AdamW with fp32 moments over (possibly bf16) params; state shards like
+the params (same PartitionSpecs, moments inherit the param sharding)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(f32, params),
+            nu=jax.tree.map(f32, params),
+        )
+
+    def schedule(self, step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (s - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        frac = self.min_lr_frac + (1.0 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Any, AdamWState, dict]:
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12))
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1.0 - self.b1) * g
+            v = self.b2 * v + (1.0 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return (
+            new_params,
+            AdamWState(step=step, mu=new_mu, nu=new_nu),
+            {"grad_norm": gnorm, "lr": lr},
+        )

@@ -1,0 +1,89 @@
+"""Duality-gap and primal-dual map properties (paper Thm. 1 machinery)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dual as dm
+from repro.core import omega as om
+from repro.core.losses import get_loss
+from repro.data.synthetic import synthetic
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return synthetic(1, m=5, d=20, n_train_avg=60, n_test_avg=20, seed=3).train
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "squared", "logistic", "smoothed_hinge"])
+def test_weak_duality_nonneg_gap(small_data, loss_name):
+    """G(alpha) = P(W(alpha)) - D(alpha) >= 0 for any feasible alpha."""
+    data = small_data
+    loss = get_loss(loss_name)
+    sigma, _ = om.init_sigma(data.m)
+    rng = np.random.RandomState(0)
+    for lam in (1e-2, 1e-4):
+        for _ in range(10):
+            alpha = jnp.asarray(rng.randn(data.m, data.n_max), jnp.float32) * 0.5
+            alpha = loss.dual_feasible(alpha, data.y) * data.mask
+            g = float(dm.duality_gap(data, alpha, sigma, lam, loss))
+            assert g >= -1e-3, (loss_name, lam, g)
+
+
+def test_w_alpha_matches_B_sigma(small_data):
+    data = small_data
+    rng = np.random.RandomState(1)
+    alpha = jnp.asarray(rng.rand(data.m, data.n_max), jnp.float32) * data.mask
+    sigma, _ = om.init_sigma(data.m)
+    W = dm.weights_from_alpha(data, alpha, sigma, 0.1)
+    B = dm.compute_B(data, alpha)
+    W2 = (B @ sigma).T / 0.1
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W2), rtol=1e-5, atol=1e-6)
+
+
+def test_quad_term_equals_explicit_K(small_data):
+    """alpha^T K alpha computed via B equals the explicit kernel matrix."""
+    data = small_data
+    rng = np.random.RandomState(2)
+    m, n_max, d = data.m, data.n_max, data.d
+    sigma = jnp.asarray(np.cov(rng.randn(m, 3 * m)) + np.eye(m), jnp.float32)
+    alpha = jnp.asarray(rng.randn(m, n_max), jnp.float32) * data.mask
+    quad = float(dm.quad_term(data, alpha, sigma))
+
+    # explicit n x n K
+    x = np.asarray(data.x)
+    msk = np.asarray(data.mask)
+    n = np.asarray(data.n)
+    a = np.asarray(alpha)
+    total = 0.0
+    for i in range(m):
+        for j in range(m):
+            bi = (x[i] * (a[i] * msk[i])[:, None]).sum(0) / n[i]
+            bj = (x[j] * (a[j] * msk[j])[:, None]).sum(0) / n[j]
+            total += float(sigma[i, j]) * float(bi @ bj)
+    assert quad == pytest.approx(total, rel=1e-4, abs=1e-4)
+
+
+def test_primal_from_alpha_equals_primal_with_omega(small_data):
+    """tr(W Omega W^T) shortcut == explicit Omega evaluation at W(alpha)."""
+    data = small_data
+    loss = get_loss("squared")
+    rng = np.random.RandomState(3)
+    W0 = jnp.asarray(rng.randn(data.m, data.d), jnp.float32)
+    sigma, omega = om.omega_step(W0)
+    alpha = jnp.asarray(rng.randn(data.m, data.n_max), jnp.float32) * data.mask
+    lam = 1e-2
+    p1 = float(dm.primal_objective_from_alpha(data, alpha, sigma, lam, loss))
+    W = dm.weights_from_alpha(data, alpha, sigma, lam)
+    p2 = float(dm.primal_objective(data, W, omega, lam, loss))
+    assert p1 == pytest.approx(p2, rel=1e-3)
+
+
+def test_metrics_masking(small_data):
+    data = small_data
+    W = jnp.zeros((data.m, data.d))
+    # zero weights: error rate counts sign(0) != sign(y) -> all wrong => 1.0
+    assert float(dm.error_rate(data, W)) == pytest.approx(1.0)
+    r = float(dm.rmse(data, W))
+    y = np.asarray(data.y)[np.asarray(data.mask) > 0]
+    assert r == pytest.approx(float(np.sqrt((y**2).mean())), rel=1e-5)

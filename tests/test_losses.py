@@ -1,0 +1,118 @@
+"""Loss/conjugate properties: Fenchel–Young, feasibility, SDCA optimality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import get_loss, registered_losses
+
+LOSSES = sorted(registered_losses())
+
+
+def _label_for(loss, rng):
+    return float(np.sign(rng.randn()) or 1.0) if loss.is_classification else float(
+        rng.randn()
+    )
+
+
+@pytest.mark.parametrize("name", LOSSES)
+def test_fenchel_young_inequality(name):
+    """l(z) + l*(u) >= u*z for all z, u in dom(l*)."""
+    loss = get_loss(name)
+    rng = np.random.RandomState(0)
+    for _ in range(200):
+        y = _label_for(loss, rng)
+        z = float(rng.randn() * 3)
+        alpha = float(rng.randn())
+        alpha = float(loss.dual_feasible(jnp.float32(alpha), jnp.float32(y)))
+        u = -alpha
+        lhs = float(loss.value(jnp.float32(z), jnp.float32(y))) + float(
+            loss.conjugate(jnp.float32(u), jnp.float32(y))
+        )
+        assert lhs >= u * z - 1e-4, (name, y, z, u, lhs, u * z)
+
+
+@pytest.mark.parametrize("name", LOSSES)
+def test_sdca_delta_maximizes_scalar_objective(name):
+    """delta from the closed form must beat random perturbations of the
+    1-d concave objective f(d) = -l*(-(at+d)) - c d - a/2 d^2."""
+    loss = get_loss(name)
+    rng = np.random.RandomState(1)
+
+    def f(d, at, c, a, y):
+        val = -loss.conjugate(-(at + d), y) - c * d - 0.5 * a * d * d
+        return float(val)
+
+    for _ in range(100):
+        y = jnp.float32(_label_for(loss, rng))
+        at = loss.dual_feasible(jnp.float32(rng.randn() * 0.5), y)
+        c = jnp.float32(rng.randn())
+        a = jnp.float32(abs(rng.randn()) + 0.05)
+        d_star = loss.sdca_delta(at, c, a, y)
+        assert bool(jnp.isfinite(d_star))
+        f_star = f(d_star, at, c, a, y)
+        for eps in (0.3, 0.05, 0.01):
+            for sgn in (+1, -1):
+                d_alt = d_star + sgn * eps
+                # perturbed point may be infeasible -> clip through feasibility
+                a_alt = loss.dual_feasible(at + d_alt, y)
+                f_alt = f(a_alt - at, at, c, a, y)
+                assert f_star >= f_alt - 1e-3, (
+                    name,
+                    float(y),
+                    float(at),
+                    float(c),
+                    float(a),
+                    float(d_star),
+                    f_star,
+                    f_alt,
+                )
+
+
+@given(
+    z=st.floats(-10, 10),
+    y=st.sampled_from([-1.0, 1.0]),
+)
+@settings(max_examples=200, deadline=None)
+def test_hinge_value_matches_definition(z, y):
+    loss = get_loss("hinge")
+    assert float(loss.value(jnp.float32(z), jnp.float32(y))) == pytest.approx(
+        max(0.0, 1.0 - y * z), abs=1e-5
+    )
+
+
+@given(st.floats(-5, 5), st.floats(-5, 5))
+@settings(max_examples=100, deadline=None)
+def test_squared_conjugate_closed_form(u, y):
+    loss = get_loss("squared")
+    assert float(loss.conjugate(jnp.float32(u), jnp.float32(y))) == pytest.approx(
+        0.5 * u * u + u * y, rel=1e-4, abs=1e-4
+    )
+
+
+@pytest.mark.parametrize("name", ["hinge", "smoothed_hinge", "logistic"])
+def test_classification_feasible_region(name):
+    """dual_feasible projects into y*alpha in [0, 1]."""
+    loss = get_loss(name)
+    rng = np.random.RandomState(2)
+    al = jnp.asarray(rng.randn(1000) * 5, jnp.float32)
+    y = jnp.asarray(np.sign(rng.randn(1000)), jnp.float32)
+    proj = loss.dual_feasible(al, y)
+    assert bool(jnp.all(y * proj >= -1e-6))
+    assert bool(jnp.all(y * proj <= 1.0 + 1e-6))
+
+
+def test_subgradients_are_valid():
+    """l(b) >= l(a) + g(a)(b-a) for convexity with g the implemented subgrad."""
+    rng = np.random.RandomState(3)
+    for name in LOSSES:
+        loss = get_loss(name)
+        for _ in range(100):
+            y = jnp.float32(_label_for(loss, rng))
+            a = jnp.float32(rng.randn() * 2)
+            b = jnp.float32(rng.randn() * 2)
+            g = loss.subgradient(a, y)
+            lhs = float(loss.value(b, y))
+            rhs = float(loss.value(a, y)) + float(g) * float(b - a)
+            assert lhs >= rhs - 1e-4, (name, float(y), float(a), float(b))

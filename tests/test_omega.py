@@ -1,0 +1,98 @@
+"""Omega-step (closed-form Sigma update) and rho bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import omega as om
+from repro.core import convergence as cv
+from repro.data.synthetic import synthetic
+
+
+def _rand_W(m, d, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(m, d), jnp.float32)
+
+
+@pytest.mark.parametrize("m,d,seed", [(4, 10, 0), (8, 5, 1), (16, 40, 2)])
+def test_omega_step_constraints(m, d, seed):
+    W = _rand_W(m, d, seed)
+    sigma, omega = om.omega_step(W)
+    s = np.asarray(sigma)
+    assert float(np.trace(s)) == pytest.approx(1.0, abs=1e-4)
+    evs = np.linalg.eigvalsh(s)
+    assert evs.min() > 0, evs
+    # omega is the inverse
+    np.testing.assert_allclose(
+        np.asarray(omega) @ s, np.eye(m), atol=5e-2
+    )
+
+
+def test_omega_step_is_optimal():
+    """Sigma* = (W^T W)^{1/2}/tr minimizes tr(W Omega W^T) over the trace-1
+    PSD ball — any perturbed feasible Sigma must give a larger objective."""
+    m, d = 5, 12
+    W = _rand_W(m, d, 3)
+    sigma, omega = om.omega_step(W, jitter=1e-9)
+
+    def objective(sig):
+        return float(jnp.trace(W.T @ (jnp.linalg.solve(sig, W))))
+        # tr(W Omega W^T) with Omega = Sigma^{-1}: tr(W^T Omega W)... careful:
+        # tr(W Omega W^T) where W rows are tasks: = tr(W_mat^T Sigma^{-1} W_mat)
+        # with W_mat = W (m, d): tr(W^T  Omega W) is d x d trace — equivalent.
+
+    base = objective(sigma)
+    rng = np.random.RandomState(4)
+    for _ in range(20):
+        P = rng.randn(m, m) * 0.05
+        S2 = np.asarray(sigma) + (P + P.T) / 2
+        evs = np.linalg.eigvalsh(S2)
+        if evs.min() <= 1e-6:
+            continue
+        S2 = S2 / np.trace(S2)
+        alt = objective(jnp.asarray(S2, jnp.float32))
+        assert alt >= base - 1e-3 * abs(base)
+
+
+def test_zero_W_falls_back_to_uniform():
+    sigma, omega = om.omega_step(jnp.zeros((6, 9)))
+    np.testing.assert_allclose(np.asarray(sigma), np.eye(6) / 6, atol=1e-3)
+
+
+def test_rho_bound_ordering():
+    """power-iteration estimate <= spectral bound <= Lemma-10 bound."""
+    sp = synthetic(1, m=6, d=24, n_train_avg=50, n_test_avg=10, seed=5)
+    data = sp.train
+    rng = np.random.RandomState(6)
+    W = jnp.asarray(rng.randn(data.m, data.d), jnp.float32)
+    sigma, _ = om.omega_step(W)
+    r_l10 = float(om.rho_lemma10(sigma))
+    r_spec = float(om.rho_spectral(sigma))
+    r_pi = cv.rho_min_power_iteration(data, sigma, iters=30)
+    assert r_spec <= r_l10 + 1e-4
+    assert r_pi <= r_spec + 1e-3
+    assert r_pi >= 0.9  # rho_min >= eta for any Sigma (alpha in one block)
+
+
+def test_rho_identity_sigma_is_one():
+    sigma, _ = om.init_sigma(8)
+    assert float(om.rho_lemma10(sigma)) == pytest.approx(1.0)
+    assert float(om.rho_spectral(sigma)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_correlated_tasks_have_larger_rho():
+    """Paper Section 6.3: more correlated tasks => larger rho (toward m)."""
+    m = 6
+    ones = jnp.ones((m, m)) / m  # perfectly correlated, trace 1
+    corr = 0.98 * ones + 0.02 * jnp.eye(m) / m
+    uncorr = jnp.eye(m) / m
+    assert float(om.rho_lemma10(corr)) > 3.0
+    assert float(om.rho_lemma10(uncorr)) == pytest.approx(1.0)
+
+
+@given(st.integers(2, 10), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_omega_step_trace_one_property(m, seed):
+    W = _rand_W(m, 7, seed)
+    sigma, _ = om.omega_step(W)
+    assert float(jnp.trace(sigma)) == pytest.approx(1.0, abs=1e-3)

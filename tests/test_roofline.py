@@ -1,0 +1,128 @@
+"""HLO analyzer: trip-count weighting, dot flops, collective bytes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_parse import analyze_hlo, split_computations
+
+
+def _compile_text(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_weighted_by_trip_count():
+    """XLA cost_analysis counts a while body once; the parser must multiply
+    by the trip count."""
+    N = 10
+
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, None, length=N)
+        return h
+
+    txt = _compile_text(f, (64, 128), (128, 128))
+    costs = analyze_hlo(txt)
+    one_matmul = 2 * 64 * 128 * 128
+    assert costs.dot_flops >= 0.9 * N * one_matmul, costs.dot_flops
+    assert costs.dot_flops <= 1.5 * N * one_matmul, costs.dot_flops
+
+
+def test_single_dot_flops():
+    def f(a, b):
+        return a @ b
+
+    txt = _compile_text(f, (32, 64), (64, 48))
+    costs = analyze_hlo(txt)
+    assert costs.dot_flops == pytest.approx(2 * 32 * 64 * 48, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), None
+
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h
+
+    txt = _compile_text(f, (16, 64), (64, 64))
+    costs = analyze_hlo(txt)
+    expected = 12 * 2 * 16 * 64 * 64
+    assert costs.dot_flops == pytest.approx(expected, rel=0.3), (
+        costs.dot_flops,
+        expected,
+    )
+
+
+def test_computation_split_handles_index_comments():
+    hlo = """HloModule m, is_scheduled=true
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[4,4]) -> (f32[4,4], /*index=1*/f32[4,4]) {
+  %p = f32[4,4] parameter(0)
+  %ar = f32[4,4]{1,0} all-reduce(%p), replica_groups=[2,2]<=[4], to_apply=%add
+  ROOT %t = (f32[4,4], f32[4,4]) tuple(%p, %ar)
+}
+"""
+    comps, entry = split_computations(hlo)
+    assert entry == "main"
+    assert "add" in comps
+    costs = analyze_hlo(hlo)
+    assert costs.coll_count["all-reduce"] == 1
+    assert costs.coll["all-reduce"] == 4 * 4 * 4  # f32[4,4]
+
+
+def test_collectives_in_loops_weighted():
+    """A collective inside a scan body counts trip-count times (built via a
+    synthetic HLO since CPU single-device jit emits no collectives)."""
+    hlo = """HloModule m, is_scheduled=true
+
+%cond (s: (s32[], f32[8])) -> pred[] {
+  %s = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (s: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %s = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %x = f32[8] get-tuple-element(%s), index=1
+  %ag = f32[8]{0} all-gather(%x), replica_groups=[4]<=[4], dimensions={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%ip, %ag)
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8]) tuple(%zero, %p)
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    costs = analyze_hlo(hlo)
+    assert costs.coll["all-gather"] == 7 * 8 * 4, costs.coll
+
+
+def test_bytes_nonzero_and_bounded():
+    def f(a, b):
+        return jnp.tanh(a @ b)
+
+    txt = _compile_text(f, (128, 256), (256, 128))
+    costs = analyze_hlo(txt)
+    io_bytes = (128 * 256 + 256 * 128 + 128 * 128) * 4
+    assert costs.bytes >= io_bytes * 0.9
+    assert costs.bytes <= io_bytes * 20
