@@ -1,0 +1,35 @@
+"""jax version-compat shims.
+
+The repo targets the newest jax API surface but must run on whatever jax
+the container bakes in. Centralize every "this symbol moved between jax
+releases" lookup here so call sites stay clean:
+
+  * ``shard_map``: promoted from ``jax.experimental.shard_map.shard_map``
+    to ``jax.shard_map`` around jax 0.4.35/0.5; the experimental module was
+    later removed. Resolve whichever exists at import time.
+
+(``jax.make_mesh`` needs no shim: pyproject floors jax at 0.4.36, where it
+already exists — verified on the 0.4.37 this container ships.)
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    try:  # jax <= 0.4.x: experimental home
+        from jax.experimental.shard_map import shard_map as sm  # type: ignore
+        return sm
+    except ImportError as e:  # pragma: no cover - no known jax hits this
+        raise ImportError(
+            "neither jax.shard_map nor jax.experimental.shard_map.shard_map "
+            f"is available on jax {jax.__version__}"
+        ) from e
+
+
+shard_map = _resolve_shard_map()

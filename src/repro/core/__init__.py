@@ -1,6 +1,13 @@
 """DMTRL core: the paper's contribution as composable JAX modules."""
 from .dmtrl import DMTRLConfig, DMTRLResult, fit, w_step, make_w_step_round
-from .distributed import MeshAxes, fit_distributed, make_distributed_round
+from .distributed import (
+    MeshAxes,
+    fit_distributed,
+    make_distributed_round,
+    make_local_solve,
+    server_reduce,
+)
+from .async_dmtrl import fit_async, make_async_tick
 from .losses import Loss, get_loss, registered_losses
 from .mtl_data import MTLData, from_task_list, normalize_rows
 from .omega import (
@@ -21,6 +28,10 @@ __all__ = [
     "MeshAxes",
     "fit_distributed",
     "make_distributed_round",
+    "make_local_solve",
+    "server_reduce",
+    "fit_async",
+    "make_async_tick",
     "Loss",
     "get_loss",
     "registered_losses",

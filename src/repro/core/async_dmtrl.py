@@ -1,0 +1,339 @@
+"""Asynchronous bounded-staleness DMTRL engine.
+
+Architecture (sync vs async rounds)
+-----------------------------------
+The paper's Algorithm 1 is bulk-synchronous: every communication round
+barriers on ``all_gather(delta_b)`` before the server reduce, so one
+straggler worker stalls all m tasks. Baytas et al. (arXiv:1609.09563) and
+Wang et al. (arXiv:1802.03830) show the same primal-dual MTL structure
+tolerates *bounded staleness* in the worker->server updates. This module
+implements that regime on top of the factored round pieces in
+``distributed.py``:
+
+  * ``make_local_solve`` — the worker half (snapshot read + local SDCA),
+    parameterized by the ``W_read``/``sigma_read`` snapshot it solves
+    against; shared verbatim with the synchronous path.
+  * ``server_reduce``   — the server half (all_gather + Sigma-coupled
+    reduce), fed a *masked* delta_b so only arrived contributions apply.
+
+Asynchrony is simulated on a deterministic per-worker clock so runs are
+bit-reproducible: worker g (one ``data``-axis group) takes
+``cfg.async_delays[g]`` simulated ticks per local solve. The host event
+loop is stale-synchronous-parallel (SSP):
+
+  * A worker may START its round r only if ``r <= min_completed + tau``
+    (``tau = cfg.tau``); at ``tau=0`` this degenerates to the bulk-
+    synchronous barrier.
+  * On start it snapshots ``(W, Sigma)`` rows for its tasks; the solve it
+    commits later is computed against exactly that snapshot.
+  * On FINISH the server applies its delta_b immediately (together with
+    any other worker finishing the same tick) as one masked reduce — no
+    barrier on the other workers.
+
+Staleness semantics
+-------------------
+A contribution's *staleness* is the number of server commit events between
+its snapshot and its application; its *lag* is how many rounds ahead of the
+slowest worker it ran. Both are recorded per commit in the returned history
+(``w_worker / w_round / w_staleness / w_lag / w_tick``) and summarized by
+``convergence.staleness_summary`` / ``convergence.effective_gap_curve``.
+At ``tau=0`` lag is always 0; staleness is also 0 when delays are
+homogeneous, but with stragglers a fast worker's commit can land between a
+slow worker's snapshot and its apply, so per-commit staleness up to G-1 is
+expected even at ``tau=0`` (round starts are still barriered).
+
+Simulation cost: every commit event executes one full SPMD round (all G
+shards solve, inactive results masked out). Caching per-worker solves at
+their start events would not reduce this — under shard_map every shard
+runs the program on every call and start events are about as frequent as
+commits — so the simulated clock, not host wall-clock, is the quantity
+this engine is built to measure.
+
+The Omega-step overlaps with in-flight W-rounds instead of barriering:
+with ``cfg.omega_delay = k > 0`` the Sigma/Omega computed at a W-step
+boundary is *installed* only after k server commits of the next W-step;
+rounds started inside that window read the stale Sigma through their
+snapshot. rho is still computed from the new Sigma at the boundary (it is
+a scalar safety bound, not part of the worker snapshot). At
+``omega_delay=0`` installation happens at the boundary, exactly like the
+synchronous path.
+
+Parity anchor: at ``tau=0`` with homogeneous delays this engine calls the
+same jitted computation as ``fit_distributed`` with an all-ones mask and a
+fresh snapshot every tick, and therefore reproduces its ``(alpha, W)``
+iterates bit-exactly (tested on 1- and 8-device meshes). That parity is
+the correctness anchor for the whole sync/async refactor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..compat import shard_map
+from . import dual as dual_mod
+from . import omega as omega_mod
+from .distributed import (
+    MeshAxes,
+    _axis_size,
+    init_state,
+    make_local_solve,
+    pad_sigma_blocks,
+    round_in_specs,
+    round_out_specs,
+    server_reduce,
+    shard_mtl_data,
+)
+from .dmtrl import DMTRLConfig, _rho_value
+from .losses import get_loss
+from .mtl_data import MTLData
+
+Array = jax.Array
+
+
+def make_async_tick(
+    cfg: DMTRLConfig,
+    mesh: Mesh,
+    axes: MeshAxes,
+    m: int,
+    n_max: int,
+    d: int,
+    rho: float,
+):
+    """Build the jitted one-tick function of the async engine.
+
+    tick(x, y, mask, n, alpha, W, sigma, W_snap, sigma_snap, keys, active)
+        -> (alpha, W)
+
+    ``W_snap``/``sigma_snap`` hold each worker group's bounded-staleness
+    snapshot rows; ``keys`` is one PRNG key per worker (for the round that
+    worker is currently solving); ``active`` masks which workers' results
+    commit this tick. Workers solve against their snapshot; the server
+    reduce uses the live sigma and only the active contributions.
+    """
+    local_solve = make_local_solve(cfg, mesh, axes, m, n_max, d, rho)
+    in_specs = round_in_specs(axes) + (
+        P(axes.data, axes.model),  # W_snap
+        P(axes.data, None),  # sigma_snap rows
+        P(axes.data, None),  # keys (workers, 2)
+        P(axes.data),  # active (workers,)
+    )
+    out_specs = round_out_specs(axes)
+
+    def tick_body(
+        x, y, mask, n, alpha, W, sigma_rows, W_snap, sigma_snap, keys, active
+    ):
+        key = keys[0]
+        a = active[0]
+        dalpha, db = local_solve(x, y, n, alpha, W_snap, sigma_snap, key)
+        dW = server_reduce(cfg, axes, sigma_rows, db * a)
+        return alpha + cfg.eta * (dalpha * a), W + dW
+
+    shmapped = shard_map(
+        tick_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+    )
+    return jax.jit(shmapped)
+
+
+@jax.jit
+def _refresh_rows(dst, src, rowmask):
+    """Refresh snapshot rows of (re)starting workers: rowmask is (m,) bool."""
+    return jnp.where(rowmask[:, None], src, dst)
+
+
+def _worker_delays(cfg: DMTRLConfig, n_workers: int) -> tuple:
+    delays = (
+        (1,) * n_workers if cfg.async_delays is None else cfg.async_delays
+    )
+    delays = tuple(int(v) for v in delays)
+    if len(delays) != n_workers:
+        raise ValueError(
+            f"async_delays has {len(delays)} entries for {n_workers} workers"
+        )
+    if min(delays) < 1:
+        raise ValueError(f"async_delays must be >= 1, got {delays}")
+    return delays
+
+
+def fit_async(
+    cfg: DMTRLConfig,
+    raw: MTLData,
+    mesh: Mesh,
+    axes: MeshAxes = MeshAxes(),
+    track: bool = True,
+):
+    """Algorithm 1 under the bounded-staleness execution model.
+
+    Same signature/returns as ``fit_distributed``: (W, sigma, state, hist).
+    The history additionally carries per-commit staleness events and the
+    simulated-clock tick of every objective sample.
+    """
+    if cfg.tau < 0:
+        raise ValueError(f"tau must be >= 0, got {cfg.tau}")
+    if cfg.omega_delay < 0:
+        raise ValueError(f"omega_delay must be >= 0, got {cfg.omega_delay}")
+    loss = get_loss(cfg.loss)
+    data, m, d = shard_mtl_data(raw, mesh, axes)
+    state = init_state(data, mesh, axes, m, d)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    G = _axis_size(mesh, axes.data)
+    m_loc = m // G
+    delays = _worker_delays(cfg, G)
+    n_pods = _axis_size(mesh, axes.pod)
+    R = cfg.rounds
+    sr = NamedSharding(mesh, P(axes.data, None))
+
+    hist = {
+        "round": [],  # server commit index (time-ordered, matches gap)
+        "tick": [],  # simulated-clock time of each commit
+        "dual": [],
+        "primal": [],
+        "gap": [],
+        "min_round": [],  # slowest worker's completed rounds at each commit
+        "w_worker": [],  # one entry per applied contribution:
+        "w_round": [],  # which worker / its round index
+        "w_staleness": [],  # commits between its snapshot and its apply
+        "w_lag": [],  # rounds ahead of the slowest worker at start
+        "w_tick": [],
+    }
+
+    @jax.jit
+    def objectives(alpha, sigma):
+        dd = dual_mod.dual_objective(data, alpha, sigma, cfg.lam, loss)
+        pp = dual_mod.primal_objective_from_alpha(data, alpha, sigma, cfg.lam, loss)
+        return dd, pp
+
+    @jax.jit
+    def w_from_alpha(alpha, sigma):
+        return dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
+
+    def install_sigma(sig, om):
+        st = dataclasses.replace(
+            state,
+            sigma=jax.device_put(sig, sr),
+            omega=jax.device_put(om, sr),
+        )
+        return dataclasses.replace(st, W=w_from_alpha(st.alpha, st.sigma))
+
+    def row_mask(workers):
+        mask = np.zeros((m,), bool)
+        for g in workers:
+            mask[g * m_loc : (g + 1) * m_loc] = True
+        return jnp.asarray(mask)
+
+    # snapshots start in sync with the live state
+    W_snap = state.W
+    sigma_snap = state.sigma
+    commits_total = 0
+    clock = 0  # global simulated time, accumulated across W-steps
+    pending_install = None  # (sigma, omega) awaiting overlap installation
+
+    for p in range(cfg.outer_iters):
+        rho = _rho_value(cfg, state.sigma if pending_install is None
+                         else pending_install[0], n_blocks_scale=float(n_pods))
+        tick_fn = make_async_tick(cfg, mesh, axes, m, data.n_max, d, rho)
+        # same key schedule as fit_distributed => bit-equal coordinate draws
+        key, outer_key = jax.random.split(key)
+        round_keys = jax.random.split(outer_key, R)  # (R, 2)
+
+        completed = [0] * G
+        cur_round = [0] * G
+        busy = [False] * G
+        finish_at = [0] * G
+        snap_commit = [0] * G
+        snap_lag = [0] * G
+        tick = 0
+        commits_outer = 0
+
+        while min(completed) < R:
+            # --- overlapped Omega-step installation --------------------
+            if pending_install is not None and commits_outer >= cfg.omega_delay:
+                state = install_sigma(*pending_install)
+                pending_install = None
+            # --- starts: idle workers gated by the SSP staleness bound --
+            floor = min(completed)
+            newly = [
+                g
+                for g in range(G)
+                if not busy[g] and completed[g] < R and completed[g] <= floor + cfg.tau
+            ]
+            if newly:
+                rm = row_mask(newly)
+                W_snap = _refresh_rows(W_snap, state.W, rm)
+                sigma_snap = _refresh_rows(sigma_snap, state.sigma, rm)
+                for g in newly:
+                    busy[g] = True
+                    cur_round[g] = completed[g]
+                    finish_at[g] = tick + delays[g]
+                    snap_commit[g] = commits_total
+                    snap_lag[g] = completed[g] - floor
+            # --- advance the clock to the next finish event ------------
+            tick = min(finish_at[g] for g in range(G) if busy[g])
+            active = [g for g in range(G) if busy[g] and finish_at[g] == tick]
+            keys_arr = round_keys[
+                np.clip(np.asarray(cur_round, np.int32), 0, R - 1)
+            ]  # (G, 2)
+            active_arr = jnp.zeros((G,), data.x.dtype).at[
+                jnp.asarray(active, jnp.int32)
+            ].set(1.0)
+            alpha, W = tick_fn(
+                data.x,
+                data.y,
+                data.mask,
+                data.n,
+                state.alpha,
+                state.W,
+                state.sigma,
+                W_snap,
+                sigma_snap,
+                keys_arr,
+                active_arr,
+            )
+            state = dataclasses.replace(state, alpha=alpha, W=W)
+            commits_total += 1
+            commits_outer += 1
+            for g in active:
+                busy[g] = False
+                hist["w_worker"].append(g)
+                hist["w_round"].append(p * R + cur_round[g])
+                hist["w_staleness"].append(commits_total - 1 - snap_commit[g])
+                hist["w_lag"].append(snap_lag[g])
+                hist["w_tick"].append(clock + tick)
+                completed[g] += 1
+            done = min(completed) >= R
+            if track and (commits_total % cfg.track_every == 0 or done):
+                dd, pp = objectives(state.alpha, state.sigma)
+                hist["round"].append(commits_total)
+                hist["tick"].append(clock + tick)
+                hist["dual"].append(float(dd))
+                hist["primal"].append(float(pp))
+                hist["gap"].append(float(pp - dd))
+                hist["min_round"].append(p * R + min(completed))
+
+        clock += tick
+        # --- W-step boundary: Omega-step (possibly overlapped) ---------
+        if pending_install is not None:
+            # the W-step produced fewer commits than omega_delay; a pending
+            # Sigma must never be dropped — it lands at the barrier instead
+            state = install_sigma(*pending_install)
+            pending_install = None
+        if cfg.learn_omega:
+            sigma_t, omega_t = omega_mod.omega_step(
+                state.W[: raw.m], cfg.omega_jitter
+            )
+            sig, om = pad_sigma_blocks(
+                sigma_t, omega_t, m, raw.m, cfg.omega_jitter
+            )
+            if cfg.omega_delay == 0 or p == cfg.outer_iters - 1:
+                state = install_sigma(sig, om)
+            else:
+                pending_install = (sig, om)
+
+    hist_np = {k: np.asarray(v) for k, v in hist.items()}
+    W = np.asarray(state.W)[: raw.m, : raw.d]
+    sigma = np.asarray(state.sigma)[: raw.m, : raw.m]
+    return W, sigma, state, hist_np

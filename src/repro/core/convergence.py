@@ -14,7 +14,7 @@ benchmarks can check the theory against observed behaviour:
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +132,74 @@ def rho_min_power_iteration(
         den_v = jnp.sum((b * dd[:, None]) ** 2)
         val = num_v / jnp.maximum(den_v, 1e-30)
     return float(eta * val)
+
+
+def staleness_summary(history: Dict[str, np.ndarray]) -> Dict[str, object]:
+    """Summarize the per-commit staleness events recorded by ``fit_async``.
+
+    Staleness of a contribution = server commits between its snapshot and
+    its application; lag = rounds it ran ahead of the slowest worker. Under
+    tau=0 with homogeneous delays both are 0 for every commit (the bulk-
+    synchronous anchor). With heterogeneous delays, tau=0 still barriers
+    round *starts* but a fast worker's commit can land between a slow
+    worker's snapshot and its apply, so staleness up to G-1 is expected
+    even at tau=0; lag stays 0.
+    """
+    stal = np.asarray(history.get("w_staleness", []), np.float64)
+    lag = np.asarray(history.get("w_lag", []), np.float64)
+    workers = np.asarray(history.get("w_worker", []), np.int64)
+    if stal.size == 0:
+        return {"n_commits": 0, "max_staleness": 0.0, "mean_staleness": 0.0,
+                "p95_staleness": 0.0, "max_lag": 0.0, "per_worker_mean": {}}
+    per_worker = {
+        int(g): float(stal[workers == g].mean()) for g in np.unique(workers)
+    }
+    return {
+        "n_commits": int(stal.size),
+        "max_staleness": float(stal.max()),
+        "mean_staleness": float(stal.mean()),
+        "p95_staleness": float(np.percentile(stal, 95)),
+        "max_lag": float(lag.max()),
+        "per_worker_mean": per_worker,
+    }
+
+
+def effective_gap_curve(
+    history: Dict[str, np.ndarray]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Duality gap against *simulated wall-clock* ticks, not rounds.
+
+    For an async history the x-axis is the tick of each server commit; for
+    a sync history (no "tick" key) each round costs ``max(delays)`` ticks —
+    use ``sync_effective_ticks`` to put both on the same axis. The returned
+    gaps are NOT monotone (best-so-far is not applied; the raw gap is
+    returned so oscillations from stale commits stay visible) — use
+    ``ticks_to_gap``'s first-crossing scan rather than binary search.
+    """
+    gaps = np.asarray(history["gap"], np.float64)
+    if "tick" in history and len(history["tick"]):
+        ticks = np.asarray(history["tick"], np.float64)
+    else:
+        ticks = np.arange(1, gaps.size + 1, dtype=np.float64)
+    return ticks, gaps
+
+
+def sync_effective_ticks(
+    history: Dict[str, np.ndarray], delays
+) -> np.ndarray:
+    """Map a synchronous history's rounds onto the simulated clock: a BSP
+    round barriers on the slowest worker, so it costs max(delays) ticks."""
+    rounds = np.asarray(history["round"], np.float64)
+    return rounds * float(max(delays))
+
+
+def ticks_to_gap(
+    ticks: np.ndarray, gaps: np.ndarray, target: float
+) -> float:
+    """First simulated tick at which the gap falls to ``target`` (inf if
+    never) — the straggler bench's headline sync-vs-async comparison."""
+    hit = np.nonzero(np.asarray(gaps) <= target)[0]
+    return float(np.asarray(ticks)[hit[0]]) if hit.size else float("inf")
 
 
 def measure_theta(

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from . import dual as dual_mod
 from . import omega as omega_mod
 from .dmtrl import DMTRLConfig, _rho_value
@@ -84,7 +85,25 @@ def shard_mtl_data(
     return out, m_pad, d_pad
 
 
-def make_distributed_round(
+def round_in_specs(axes: MeshAxes):
+    """in_specs shared by the sync round and the async tick (first 7 args):
+    (x, y, mask, n, alpha, W-like, sigma_rows)."""
+    return (
+        P(axes.data, axes.pod, axes.model),  # x
+        P(axes.data, axes.pod),  # y
+        P(axes.data, axes.pod),  # mask
+        P(axes.data),  # n  (global per-task counts)
+        P(axes.data, axes.pod),  # alpha
+        P(axes.data, axes.model),  # W (or a stale snapshot of it)
+        P(axes.data, None),  # sigma rows
+    )
+
+
+def round_out_specs(axes: MeshAxes):
+    return (P(axes.data, axes.pod), P(axes.data, axes.model))
+
+
+def make_local_solve(
     cfg: DMTRLConfig,
     mesh: Mesh,
     axes: MeshAxes,
@@ -93,9 +112,14 @@ def make_distributed_round(
     d: int,
     rho: float,
 ):
-    """Build the jitted one-round function over sharded global arrays.
+    """The worker half of one communication round, as a shard_map body.
 
-    round(x, y, mask, n, alpha, W, sigma, key) -> (alpha, W)
+    Returns ``local_solve(x, y, n, alpha, W_read, sigma_rows, key) ->
+    (dalpha, db)`` where ``W_read`` is the (possibly stale) weight snapshot
+    the worker solves against and ``db`` is this shard's delta_b rows
+    (pod-psum'ed, eta/n-normalized) ready for the server reduce. The sync
+    path passes the live ``W``; the async engine passes each worker group's
+    bounded-staleness snapshot — the math is identical by construction.
     """
     loss = get_loss(cfg.loss)
     dsz = _axis_size(mesh, axes.data)
@@ -121,19 +145,7 @@ def make_distributed_round(
         use_kernel=cfg.use_kernel and axes.model is None,
     )
 
-    in_specs = (
-        P(axes.data, axes.pod, axes.model),  # x
-        P(axes.data, axes.pod),  # y
-        P(axes.data, axes.pod),  # mask
-        P(axes.data),  # n  (global per-task counts)
-        P(axes.data, axes.pod),  # alpha
-        P(axes.data, axes.model),  # W
-        P(axes.data, None),  # sigma rows
-        P(),  # key (replicated)
-    )
-    out_specs = (P(axes.data, axes.pod), P(axes.data, axes.model))
-
-    def round_body(x, y, mask, n, alpha, W, sigma_rows, key):
+    def local_solve(x, y, n, alpha, W_read, sigma_rows, key):
         di = jax.lax.axis_index(axes.data)
         pi = jax.lax.axis_index(axes.pod) if axes.pod else 0
         # global task ids of this shard + per-(task, pod, round) RNG
@@ -168,7 +180,7 @@ def make_distributed_round(
                         jnp.bfloat16 if cfg.gram_bf16 else Xb.dtype
                     )
                     q = jax.lax.psum(
-                        jnp.einsum("mbd,md->mb", Xb, W), axes.model
+                        jnp.einsum("mbd,md->mb", Xb, W_read), axes.model
                     )
                     xr = jax.lax.psum(
                         jnp.einsum("mbd,md->mb", Xb, r), axes.model
@@ -191,58 +203,102 @@ def make_distributed_round(
                     return (dalpha, r), None
 
                 dalpha0 = jnp.zeros_like(alpha)
-                r0 = jnp.zeros_like(W) + x[:, 0] * 0
+                r0 = jnp.zeros_like(W_read) + x[:, 0] * 0
                 (dalpha, r), _ = jax.lax.scan(
                     blk, (dalpha0, r0), jnp.arange(nb)
                 )
-                if axes.pod is not None:
-                    r = jax.lax.psum(r, axes.pod)
-                db = cfg.eta * r / jnp.maximum(n, 1)[:, None].astype(r.dtype)
-                dB = jax.lax.all_gather(db, axes.data, axis=0, tiled=True)
-                dW = sigma_rows @ dB / cfg.lam
-                return alpha + cfg.eta * dalpha, W + dW
-            Xs = jnp.take_along_axis(
-                x, coords[:, :, None], axis=1
-            )  # (m_loc, H, d_loc)
-            # §Perf it-1: stream the sampled rows in bf16 for the MXU
-            # contractions (fp32 accumulation); halves the dominant X-read
-            # traffic. Validated against the fp32 path in tests.
-            gemm_dtype = jnp.bfloat16 if cfg.gram_bf16 else Xs.dtype
-            Xg = Xs.astype(gemm_dtype)
-            q = jax.lax.psum(
-                jnp.einsum(
-                    "mhd,md->mh",
-                    Xg,
-                    W.astype(gemm_dtype),
-                    preferred_element_type=jnp.float32,
-                ),
-                axes.model,
-            )
-            G = jax.lax.psum(
-                jnp.einsum(
-                    "mhd,mkd->mhk", Xg, Xg, preferred_element_type=jnp.float32
-                ),
-                axes.model,
-            )
-            dalpha, deltas = jax.vmap(
-                lambda Gm, qm, am, ym, cm, nn, sm: sdca_gram_solve(
-                    Gm, qm, am, ym, cm, nn, sm, rho, cfg.lam, loss
+            else:
+                Xs = jnp.take_along_axis(
+                    x, coords[:, :, None], axis=1
+                )  # (m_loc, H, d_loc)
+                # §Perf it-1: stream the sampled rows in bf16 for the MXU
+                # contractions (fp32 accumulation); halves the dominant X-read
+                # traffic. Validated against the fp32 path in tests.
+                gemm_dtype = jnp.bfloat16 if cfg.gram_bf16 else Xs.dtype
+                Xg = Xs.astype(gemm_dtype)
+                q = jax.lax.psum(
+                    jnp.einsum(
+                        "mhd,md->mh",
+                        Xg,
+                        W_read.astype(gemm_dtype),
+                        preferred_element_type=jnp.float32,
+                    ),
+                    axes.model,
                 )
-            )(G, q, alpha, y, coords, n_local, sigma_ii)
-            r = jnp.einsum("mhd,mh->md", Xs, deltas)
+                G = jax.lax.psum(
+                    jnp.einsum(
+                        "mhd,mkd->mhk", Xg, Xg, preferred_element_type=jnp.float32
+                    ),
+                    axes.model,
+                )
+                dalpha, deltas = jax.vmap(
+                    lambda Gm, qm, am, ym, cm, nn, sm: sdca_gram_solve(
+                        Gm, qm, am, ym, cm, nn, sm, rho, cfg.lam, loss
+                    )
+                )(G, q, alpha, y, coords, n_local, sigma_ii)
+                r = jnp.einsum("mhd,mh->md", Xs, deltas)
         else:
             dalpha, r = jax.vmap(solver)(
-                x, y, alpha, W, n_local, sigma_ii, keys
+                x, y, alpha, W_read, n_local, sigma_ii, keys
             )
         if axes.pod is not None:
             r = jax.lax.psum(r, axes.pod)
         # delta_b_i = (eta / n_i_global) * sum over ALL of task i's samples
         db = cfg.eta * r / jnp.maximum(n, 1)[:, None].astype(r.dtype)
-        dB = jax.lax.all_gather(db, axes.data, axis=0, tiled=True)  # (m, d_loc)
-        dW = sigma_rows @ dB / cfg.lam  # (m_loc, d_loc) -- the server reduce
+        return dalpha, db
+
+    return local_solve
+
+
+def pad_sigma_blocks(sigma_t, omega_t, m: int, m_true: int, jitter: float):
+    """Embed the real-task Sigma/Omega into padded (m, m) matrices. Padded
+    tasks get an inert jitter-scaled identity block so they stay decoupled.
+    Shared by the sync and async engines (their Omega-steps must agree for
+    the tau=0 bit-parity anchor)."""
+    pad = m - m_true
+    if not pad:
+        return sigma_t, omega_t
+    sigma = jnp.zeros((m, m), sigma_t.dtype)
+    sigma = sigma.at[:m_true, :m_true].set(sigma_t)
+    sigma = sigma.at[m_true:, m_true:].set(jnp.eye(pad) * jitter)
+    omega = jnp.zeros((m, m), omega_t.dtype)
+    omega = omega.at[:m_true, :m_true].set(omega_t)
+    omega = omega.at[m_true:, m_true:].set(jnp.eye(pad) / jitter)
+    return sigma, omega
+
+
+def server_reduce(cfg: DMTRLConfig, axes: MeshAxes, sigma_rows, db):
+    """The server half of one round, as a shard_map body fragment:
+    all_gather the workers' delta_b rows and apply the Sigma-coupled
+    reduce for this shard's W rows. ``db`` may be pre-masked by the async
+    engine so that only arrived contributions enter the gather."""
+    dB = jax.lax.all_gather(db, axes.data, axis=0, tiled=True)  # (m, d_loc)
+    return sigma_rows @ dB / cfg.lam  # (m_loc, d_loc)
+
+
+def make_distributed_round(
+    cfg: DMTRLConfig,
+    mesh: Mesh,
+    axes: MeshAxes,
+    m: int,
+    n_max: int,
+    d: int,
+    rho: float,
+):
+    """Build the jitted one-round function over sharded global arrays.
+
+    round(x, y, mask, n, alpha, W, sigma, key) -> (alpha, W)
+    """
+    local_solve = make_local_solve(cfg, mesh, axes, m, n_max, d, rho)
+    in_specs = round_in_specs(axes) + (P(),)  # + key (replicated)
+    out_specs = round_out_specs(axes)
+
+    def round_body(x, y, mask, n, alpha, W, sigma_rows, key):
+        dalpha, db = local_solve(x, y, n, alpha, W, sigma_rows, key)
+        dW = server_reduce(cfg, axes, sigma_rows, db)
         return alpha + cfg.eta * dalpha, W + dW
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         round_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )
     return jax.jit(shmapped)
@@ -330,17 +386,9 @@ def fit_distributed(
             # would otherwise distort the trace-1 normalization.
             W_true = state.W[: raw.m]
             sigma_t, omega_t = omega_mod.omega_step(W_true, cfg.omega_jitter)
-            pad = m - raw.m
-            if pad:
-                j = cfg.omega_jitter
-                sigma = jnp.zeros((m, m), sigma_t.dtype)
-                sigma = sigma.at[: raw.m, : raw.m].set(sigma_t)
-                sigma = sigma.at[raw.m :, raw.m :].set(jnp.eye(pad) * j)
-                omega = jnp.zeros((m, m), omega_t.dtype)
-                omega = omega.at[: raw.m, : raw.m].set(omega_t)
-                omega = omega.at[raw.m :, raw.m :].set(jnp.eye(pad) / j)
-            else:
-                sigma, omega = sigma_t, omega_t
+            sigma, omega = pad_sigma_blocks(
+                sigma_t, omega_t, m, raw.m, cfg.omega_jitter
+            )
             sr = NamedSharding(mesh, P(axes.data, None))
             state = dataclasses.replace(
                 state,

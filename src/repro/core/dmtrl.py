@@ -52,6 +52,14 @@ class DMTRLConfig:
     gram_bf16: bool = False  # bf16 MXU inputs in the distributed gram build
     dist_block_hoisted: bool = False  # hoisted block-Gram distributed round
     track_every: int = 1  # record objectives every k rounds
+    # --- async engine (core/async_dmtrl.py) -------------------------------
+    tau: int = 0  # staleness bound: a worker may run at most tau rounds
+    #               ahead of the slowest worker (0 == bulk-synchronous)
+    async_delays: Optional[tuple] = None  # per-worker solve duration in
+    #               simulated ticks; None == all 1 (homogeneous workers)
+    omega_delay: int = 0  # server commits the Omega-step install waits
+    #               for; >0 lets the first commits of the next W-step run
+    #               against the stale Sigma (0 == barrier, same as sync)
 
 
 @dataclasses.dataclass

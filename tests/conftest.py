@@ -1,5 +1,67 @@
+import os
+
+import jax
 import pytest
+
+# persistent XLA compilation cache: the suite is compile-dominated on CPU,
+# so re-runs (local dev, cached CI) skip most of the wall clock. Opt out
+# with JAX_COMPILATION_CACHE_DIR="" in the environment.
+_cache_dir = os.environ.get(
+    "JAX_COMPILATION_CACHE_DIR", "/tmp/jax-cache-dmtrl-repro"
+)
+if _cache_dir:
+    jax.config.update("jax_compilation_cache_dir", _cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    # subprocess-based mesh tests pick the cache up from the environment
+    os.environ["JAX_COMPILATION_CACHE_DIR"] = _cache_dir
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.5")
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running test (subprocess/convergence)")
+    config.addinivalue_line(
+        "markers", "slow: long-running test (subprocess/convergence)"
+    )
+
+
+def fast_arch_params(fast):
+    """Parametrize over all arch ids, marking everything outside ``fast``
+    as slow. Asserts the fast ids actually exist so a rename in
+    configs/base.py fails loudly instead of silently demoting archs."""
+    from repro.configs import ARCH_IDS
+
+    unknown = set(fast) - set(ARCH_IDS)
+    assert not unknown, f"fast arch ids not in ARCH_IDS: {sorted(unknown)}"
+    return [
+        a if a in fast else pytest.param(a, marks=pytest.mark.slow)
+        for a in ARCH_IDS
+    ]
+
+
+# Small shared problems: fast tests should reuse these instead of building
+# their own larger instances (keeps the default tier-1 run under ~2 min).
+@pytest.fixture(scope="session")
+def small_problem():
+    from repro.data.synthetic import synthetic
+
+    return synthetic(1, m=4, d=16, n_train_avg=40, n_test_avg=10, seed=1)
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    from repro.core import DMTRLConfig
+
+    return DMTRLConfig(
+        loss="hinge",
+        lam=1e-3,
+        outer_iters=2,
+        rounds=3,
+        local_iters=32,
+        sdca_mode="block",
+        block_size=32,
+        seed=0,
+    )
+
+
+@pytest.fixture(scope="session")
+def one_device_mesh():
+    return jax.make_mesh((1,), ("data",))

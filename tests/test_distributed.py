@@ -10,25 +10,21 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import numpy as np
 import pytest
 
-from repro.core import DMTRLConfig, MeshAxes, fit, fit_distributed
-from repro.data.synthetic import synthetic
+from repro.core import MeshAxes, fit, fit_distributed
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def test_one_device_mesh_equals_reference():
-    sp = synthetic(1, m=4, d=24, n_train_avg=80, n_test_avg=20, seed=1)
-    cfg = DMTRLConfig(
-        loss="hinge", lam=1e-3, outer_iters=2, rounds=4, local_iters=64,
-        sdca_mode="block", block_size=32, seed=0,
+def test_one_device_mesh_equals_reference(
+    small_problem, small_cfg, one_device_mesh
+):
+    res = fit(small_cfg, small_problem.train)
+    W, sigma, _, hist = fit_distributed(
+        small_cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
     )
-    res = fit(cfg, sp.train)
-    mesh = jax.make_mesh((1,), ("data",))
-    W, sigma, _, hist = fit_distributed(cfg, sp.train, mesh, MeshAxes(data="data"))
     np.testing.assert_allclose(W, np.asarray(res.W), atol=2e-4)
     np.testing.assert_allclose(sigma, np.asarray(res.sigma), atol=1e-5)
 
@@ -45,7 +41,8 @@ _SUBPROC = textwrap.dedent(
 
     sp = synthetic(1, m=8, d=32, n_train_avg=70, n_test_avg=20, seed=2)
     cfg = DMTRLConfig(loss={loss!r}, lam=1e-3, outer_iters=2, rounds=3,
-                      local_iters=64, sdca_mode="block", block_size=32, seed=0)
+                      local_iters=64, sdca_mode="block", block_size=32, seed=0,
+                      **{extra})
     res = fit(cfg, sp.train)
     mesh = jax.make_mesh({mesh_shape}, {mesh_axes})
     W, sigma, _, hist = fit_distributed(cfg, sp.train, mesh, MeshAxes(**{axes_kw}))
@@ -58,10 +55,10 @@ _SUBPROC = textwrap.dedent(
 )
 
 
-def _run_subproc(loss, mesh_shape, mesh_axes, axes_kw):
+def _run_subproc(loss, mesh_shape, mesh_axes, axes_kw, extra="dict()"):
     code = _SUBPROC.format(
         repo=REPO, loss=loss, mesh_shape=mesh_shape, mesh_axes=mesh_axes,
-        axes_kw=axes_kw,
+        axes_kw=axes_kw, extra=extra,
     )
     out = subprocess.run(
         [sys.executable, "-c", code],
@@ -88,6 +85,20 @@ def test_data_plus_model_axes_exact():
     r = _run_subproc(
         "squared", "(4, 2)", '("data", "model")',
         'dict(data="data", model="model")',
+    )
+    assert r["werr"] < 5e-4, r
+    assert r["serr"] < 5e-5, r
+
+
+@pytest.mark.slow
+def test_model_axis_hoisted_block_gram_exact():
+    """the hoisted block-Gram distributed round (dist_block_hoisted) must
+    produce the same iterates as the reference — guards the refactor of the
+    round body into local-solve/server-reduce pieces."""
+    r = _run_subproc(
+        "squared", "(4, 2)", '("data", "model")',
+        'dict(data="data", model="model")',
+        extra='dict(dist_block_hoisted=True)',
     )
     assert r["werr"] < 5e-4, r
     assert r["serr"] < 5e-5, r

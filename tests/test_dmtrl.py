@@ -12,13 +12,13 @@ from repro.data.synthetic import synthetic
 
 @pytest.fixture(scope="module")
 def splits():
-    return synthetic(1, m=8, d=40, n_train_avg=150, n_test_avg=80, seed=0)
+    return synthetic(1, m=8, d=40, n_train_avg=100, n_test_avg=60, seed=0)
 
 
 @pytest.fixture(scope="module")
 def fitted(splits):
     cfg = DMTRLConfig(
-        loss="hinge", lam=1e-3, outer_iters=4, rounds=10, local_iters=256,
+        loss="hinge", lam=1e-3, outer_iters=4, rounds=8, local_iters=128,
         sdca_mode="block", block_size=64, seed=0,
     )
     return cfg, fit(cfg, splits.train)
@@ -58,9 +58,9 @@ def test_task_correlation_recovery(fitted, splits):
 def test_dmtrl_beats_stl_on_correlated_tasks(splits):
     """Paper Tables 2/3 qualitative claim: exploiting task relations helps
     when tasks are related and data per task is limited."""
-    small = synthetic(1, m=8, d=40, n_train_avg=40, n_test_avg=200, seed=2)
+    small = synthetic(1, m=8, d=40, n_train_avg=40, n_test_avg=120, seed=2)
     cfg = DMTRLConfig(
-        loss="hinge", lam=1e-3, outer_iters=4, rounds=8, local_iters=128, seed=0
+        loss="hinge", lam=1e-3, outer_iters=3, rounds=6, local_iters=96, seed=0
     )
     res = fit(cfg, small.train)
     stl = fit_stl(cfg, small.train)
@@ -98,10 +98,10 @@ def test_centralized_mtrl_parity_squared_loss():
 
     tr = sp.train
     cfg = DMTRLConfig(
-        loss="squared", lam=1e-2, outer_iters=3, rounds=15, local_iters=256, seed=0
+        loss="squared", lam=1e-2, outer_iters=3, rounds=10, local_iters=160, seed=0
     )
     res = fit(cfg, tr)
-    W_c, sigma_c, _ = fit_centralized_mtrl(cfg, tr, inner_steps=800)
+    W_c, sigma_c, _ = fit_centralized_mtrl(cfg, tr, inner_steps=500)
     rmse_d = float(dm.rmse(sp.test, jnp.asarray(res.W)))
     rmse_c = float(dm.rmse(sp.test, jnp.asarray(W_c)))
     assert rmse_d == pytest.approx(rmse_c, rel=0.1), (rmse_d, rmse_c)

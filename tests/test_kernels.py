@@ -22,9 +22,12 @@ from repro.kernels.ssd import ssd_chunk_kernel
     [
         (2, 3, 256, 64, True, 0, jnp.float32),
         (1, 2, 128, 32, True, 48, jnp.float32),
-        (2, 2, 256, 64, False, 0, jnp.float32),
-        (1, 4, 512, 128, True, 0, jnp.float32),
-        (2, 2, 256, 64, True, 0, jnp.bfloat16),
+        pytest.param(2, 2, 256, 64, False, 0, jnp.float32,
+                     marks=pytest.mark.slow),
+        pytest.param(1, 4, 512, 128, True, 0, jnp.float32,
+                     marks=pytest.mark.slow),
+        pytest.param(2, 2, 256, 64, True, 0, jnp.bfloat16,
+                     marks=pytest.mark.slow),
         (1, 1, 64, 16, True, 16, jnp.float32),
     ],
 )
@@ -62,7 +65,15 @@ def test_flash_bshd_wrapper_with_padding():
 # sdca block kernel
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("loss", ["hinge", "squared", "smoothed_hinge"])
-@pytest.mark.parametrize("B,d", [(16, 50), (32, 130), (64, 1024), (128, 700)])
+@pytest.mark.parametrize(
+    "B,d",
+    [
+        (16, 50),
+        (32, 130),
+        pytest.param(64, 1024, marks=pytest.mark.slow),
+        pytest.param(128, 700, marks=pytest.mark.slow),
+    ],
+)
 def test_sdca_kernel_vs_ref(loss, B, d):
     key = jax.random.PRNGKey(B * d)
     ks = jax.random.split(key, 6)
@@ -91,7 +102,11 @@ def test_sdca_kernel_vs_ref(loss, B, d):
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize(
     "B,L,H,P,N,chunk",
-    [(2, 96, 4, 16, 8, 32), (1, 64, 2, 32, 16, 16), (2, 130, 3, 8, 4, 32)],
+    [
+        pytest.param(2, 96, 4, 16, 8, 32, marks=pytest.mark.slow),
+        (1, 64, 2, 32, 16, 16),
+        pytest.param(2, 130, 3, 8, 4, 32, marks=pytest.mark.slow),
+    ],
 )
 def test_ssd_forward_vs_naive(B, L, H, P, N, chunk):
     key = jax.random.PRNGKey(L)
@@ -124,6 +139,7 @@ def test_ssd_chunk_kernel_matches_chunk_ref():
     np.testing.assert_allclose(np.asarray(ak), np.asarray(ar), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_model_ssd_matches_kernel_pipeline():
     """models/ssm.ssd_chunked and kernels/ssd.ops.ssd_forward agree."""
     from repro.models.ssm import ssd_chunked

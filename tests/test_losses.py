@@ -1,9 +1,13 @@
-"""Loss/conjugate properties: Fenchel–Young, feasibility, SDCA optimality."""
+"""Loss/conjugate properties: Fenchel–Young, feasibility, SDCA optimality.
+
+hypothesis is an optional test dependency (see pyproject's [test] extra);
+property tests import it via ``pytest.importorskip`` at call time so a
+missing install skips just those tests instead of erroring collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.losses import get_loss, registered_losses
 
@@ -21,7 +25,7 @@ def test_fenchel_young_inequality(name):
     """l(z) + l*(u) >= u*z for all z, u in dom(l*)."""
     loss = get_loss(name)
     rng = np.random.RandomState(0)
-    for _ in range(200):
+    for _ in range(100):
         y = _label_for(loss, rng)
         z = float(rng.randn() * 3)
         alpha = float(rng.randn())
@@ -44,7 +48,7 @@ def test_sdca_delta_maximizes_scalar_objective(name):
         val = -loss.conjugate(-(at + d), y) - c * d - 0.5 * a * d * d
         return float(val)
 
-    for _ in range(100):
+    for _ in range(25):
         y = jnp.float32(_label_for(loss, rng))
         at = loss.dual_feasible(jnp.float32(rng.randn() * 0.5), y)
         c = jnp.float32(rng.randn())
@@ -70,25 +74,36 @@ def test_sdca_delta_maximizes_scalar_objective(name):
                 )
 
 
-@given(
-    z=st.floats(-10, 10),
-    y=st.sampled_from([-1.0, 1.0]),
-)
-@settings(max_examples=200, deadline=None)
-def test_hinge_value_matches_definition(z, y):
+def test_hinge_value_matches_definition():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
     loss = get_loss("hinge")
-    assert float(loss.value(jnp.float32(z), jnp.float32(y))) == pytest.approx(
-        max(0.0, 1.0 - y * z), abs=1e-5
-    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(z=st.floats(-10, 10), y=st.sampled_from([-1.0, 1.0]))
+    def check(z, y):
+        assert float(loss.value(jnp.float32(z), jnp.float32(y))) == pytest.approx(
+            max(0.0, 1.0 - y * z), abs=1e-5
+        )
+
+    check()
 
 
-@given(st.floats(-5, 5), st.floats(-5, 5))
-@settings(max_examples=100, deadline=None)
-def test_squared_conjugate_closed_form(u, y):
+def test_squared_conjugate_closed_form():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
     loss = get_loss("squared")
-    assert float(loss.conjugate(jnp.float32(u), jnp.float32(y))) == pytest.approx(
-        0.5 * u * u + u * y, rel=1e-4, abs=1e-4
-    )
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.floats(-5, 5), st.floats(-5, 5))
+    def check(u, y):
+        assert float(loss.conjugate(jnp.float32(u), jnp.float32(y))) == pytest.approx(
+            0.5 * u * u + u * y, rel=1e-4, abs=1e-4
+        )
+
+    check()
 
 
 @pytest.mark.parametrize("name", ["hinge", "smoothed_hinge", "logistic"])
@@ -108,7 +123,7 @@ def test_subgradients_are_valid():
     rng = np.random.RandomState(3)
     for name in LOSSES:
         loss = get_loss(name)
-        for _ in range(100):
+        for _ in range(50):
             y = jnp.float32(_label_for(loss, rng))
             a = jnp.float32(rng.randn() * 2)
             b = jnp.float32(rng.randn() * 2)

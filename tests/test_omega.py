@@ -1,9 +1,13 @@
-"""Omega-step (closed-form Sigma update) and rho bounds."""
+"""Omega-step (closed-form Sigma update) and rho bounds.
+
+hypothesis is an optional test dependency (see pyproject's [test] extra);
+property tests import it via ``pytest.importorskip`` at call time so a
+missing install skips just those tests instead of erroring collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import omega as om
 from repro.core import convergence as cv
@@ -90,9 +94,15 @@ def test_correlated_tasks_have_larger_rho():
     assert float(om.rho_lemma10(uncorr)) == pytest.approx(1.0)
 
 
-@given(st.integers(2, 10), st.integers(0, 1000))
-@settings(max_examples=20, deadline=None)
-def test_omega_step_trace_one_property(m, seed):
-    W = _rand_W(m, 7, seed)
-    sigma, _ = om.omega_step(W)
-    assert float(jnp.trace(sigma)) == pytest.approx(1.0, abs=1e-3)
+def test_omega_step_trace_one_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 10), st.integers(0, 1000))
+    def check(m, seed):
+        W = _rand_W(m, 7, seed)
+        sigma, _ = om.omega_step(W)
+        assert float(jnp.trace(sigma)) == pytest.approx(1.0, abs=1e-3)
+
+    check()

@@ -32,6 +32,7 @@ def test_loss_decreases_small_model():
     assert last < first - 0.3, (first, last)
 
 
+@pytest.mark.slow
 def test_microbatching_matches_full_batch():
     cfg = get_config("qwen1_5-4b").reduced()
     key = jax.random.PRNGKey(0)
