@@ -28,7 +28,7 @@ def run(n_dev: int, taus, straggler: int, seed: int = 0):
     delays = (1,) * (n_dev - 1) + (straggler,)
     base = dict(
         loss="hinge", lam=1e-4, outer_iters=2, rounds=8, local_iters=64,
-        sdca_mode="block", block_size=32, seed=seed,
+        solver="block_gram", block_size=32, seed=seed,
     )
     mesh = jax.make_mesh((n_dev,), ("data",))
     ax = MeshAxes(data="data")

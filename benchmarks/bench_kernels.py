@@ -1,15 +1,28 @@
 """Kernel micro-benchmarks: wall time of the jnp reference vs the Pallas
-kernel in interpret mode. NOTE: interpret mode runs the kernel body via the
-Python interpreter on CPU — numbers are for CSV completeness and correctness
-cross-checking, NOT TPU performance (see EXPERIMENTS.md §Roofline for the
-structural analysis)."""
+kernels in interpret mode. NOTE: interpret mode runs the kernel body via the
+Python interpreter on CPU — numbers are for trajectory-recording and
+correctness cross-checking, NOT TPU performance (see docs/DESIGN.md
+§Roofline for the structural analysis).
+
+The SDCA bench sweeps every registered solver backend
+(repro.core.solver_backends) on one shared local-round problem and writes
+the per-backend timings — including each backend's pallas_call launch count
+per round — to BENCH_kernels.json at the repo root, so the perf trajectory
+of the solver layer is recorded across PRs:
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Dict
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
 
 
 def _time(fn, *args, iters=3) -> float:
@@ -33,27 +46,69 @@ def bench_flash() -> Dict:
             "derived": f"B{B}H{H}S{S}D{HD}"}
 
 
-def bench_sdca() -> Dict:
+def sdca_backend_rows(n=1024, d=256, H=256, block=64) -> List[Dict]:
+    """One shared local-round problem, timed through EVERY registered solver
+    backend. Returns one row per backend with its per-round pallas_call
+    launch count (the fused-round acceptance metric: 1 vs H/B)."""
     from repro.core.losses import get_loss
-    from repro.core.sdca import local_sdca_block, sample_coords
+    from repro.core.solver_backends import available_backends
 
     key = jax.random.PRNGKey(1)
-    n, d, H = 2048, 512, 512
-    x = jax.random.normal(key, (n, d))
-    y = jnp.sign(jax.random.normal(key, (n,)))
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (n, d))
+    y = jnp.sign(jax.random.normal(ks[1], (n,)))
     alpha = jnp.zeros((n,))
     w = jnp.zeros((d,))
-    coords = sample_coords(key, H, jnp.int32(n), n)
+    n_i = jnp.int32(n)
+    sigma_ii = jnp.float32(0.2)
     loss = get_loss("hinge")
-    fn = jax.jit(
-        lambda: local_sdca_block(
-            x, y, alpha, w, jnp.int32(n), jnp.float32(0.2), coords, 2.0, 1e-4, loss,
-            block=64,
+
+    rows = []
+    for name, be in available_backends().items():
+        Hb = be.round_local_iters(H, block)
+        solve = be.make(loss, 2.0, 1e-4, Hb, block=block)
+        fn = jax.jit(
+            lambda solve=solve: solve(x, y, alpha, w, n_i, sigma_ii, ks[2])
         )
-    )
-    us = _time(lambda: fn())
-    return {"name": "sdca_block_jit", "us_per_call": us,
-            "derived": f"n{n}d{d}H{H}B64"}
+        rows.append({
+            "name": f"sdca_{name}",
+            "backend": name,
+            "us_per_call": _time(lambda fn=fn: fn()),
+            "pallas_calls_per_round": be.pallas_calls_per_round(H, block),
+            "derived": f"n{n}d{d}H{Hb}B{block}",
+        })
+    return rows
+
+
+def write_bench_json(rows: List[Dict], path: str = BENCH_JSON) -> None:
+    payload = {
+        "bench": "sdca_solver_backends",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "note": "interpret-mode wall times (CPU), not TPU performance",
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+
+def bench_sdca() -> Dict:
+    """Registry sweep; emits BENCH_kernels.json and returns a headline row."""
+    rows = sdca_backend_rows()
+    write_bench_json(rows)
+    by = {r["backend"]: r for r in rows}
+    hl = by["pallas_round"]
+    return {
+        "name": "sdca_backends",
+        "us_per_call": hl["us_per_call"],
+        "derived": (
+            f"{hl['derived']} pallas_calls/round: round=1 "
+            f"block={by['pallas_block']['pallas_calls_per_round']} "
+            f"(all backends -> BENCH_kernels.json)"
+        ),
+        "backends": rows,
+    }
 
 
 def bench_ssd() -> Dict:
@@ -74,3 +129,12 @@ def bench_ssd() -> Dict:
 
 
 ALL = {"flash": bench_flash, "sdca": bench_sdca, "ssd": bench_ssd}
+
+
+if __name__ == "__main__":
+    row = bench_sdca()
+    print("name,us_per_call,derived")
+    for r in row["backends"]:
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"calls={r['pallas_calls_per_round']} {r['derived']}")
+    print(f"# wrote {os.path.normpath(BENCH_JSON)}")

@@ -1,5 +1,5 @@
 """Roofline table generator: aggregates results/dryrun/*.json into the
-EXPERIMENTS.md §Dry-run and §Roofline tables."""
+docs/DESIGN.md §Roofline tables."""
 from __future__ import annotations
 
 import glob

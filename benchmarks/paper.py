@@ -41,7 +41,7 @@ def fig2_recovery(seed: int = 0) -> Dict:
     sp = ds.synthetic(1, m=16, d=100, n_train_avg=400, n_test_avg=150, seed=seed)
     cfg = DMTRLConfig(
         loss="hinge", lam=1e-4, outer_iters=5, rounds=10, local_iters=512,
-        sdca_mode="block", block_size=64, seed=seed,
+        solver="block_gram", block_size=64, seed=seed,
     )
     el = _timer()
     res = fit(cfg, sp.train)

@@ -29,7 +29,8 @@ def main():
         outer_iters=4,  # P: alternations of (W-step, Omega-step)
         rounds=10,  # T: communication rounds per W-step
         local_iters=512,  # H: local SDCA iterations per round
-        sdca_mode="block",  # block-Gram TPU-shaped local solver
+        solver="block_gram",  # local-SDCA backend (core.solver_backends):
+        #   "naive" | "block_gram" | "pallas_block" | "pallas_round"
         block_size=64,
         seed=0,
     )

@@ -7,6 +7,10 @@ releases" lookup here so call sites stay clean:
   * ``shard_map``: promoted from ``jax.experimental.shard_map.shard_map``
     to ``jax.shard_map`` around jax 0.4.35/0.5; the experimental module was
     later removed. Resolve whichever exists at import time.
+  * ``shard_map_unchecked``: shard_map with replication checking disabled —
+    required when the body contains a ``pallas_call`` (jax<=0.4 has no
+    replication rule for it). The flag itself was renamed ``check_rep`` ->
+    ``check_vma`` in newer jax, so the fallback chain lives here.
 
 (``jax.make_mesh`` needs no shim: pyproject floors jax at 0.4.36, where it
 already exists — verified on the 0.4.37 this container ships.)
@@ -15,7 +19,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "shard_map_unchecked"]
 
 
 def _resolve_shard_map():
@@ -33,3 +37,17 @@ def _resolve_shard_map():
 
 
 shard_map = _resolve_shard_map()
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """shard_map with the replication/varying-axes check disabled."""
+    try:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    except TypeError:  # newer jax: the kwarg became check_vma
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )

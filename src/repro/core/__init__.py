@@ -17,7 +17,13 @@ from .omega import (
     rho_lemma10,
     rho_spectral,
 )
-from . import baselines, convergence, dual, feature_maps, sdca
+from .solver_backends import (
+    SolverBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from . import baselines, convergence, dual, feature_maps, sdca, solver_backends
 
 __all__ = [
     "DMTRLConfig",
@@ -43,9 +49,14 @@ __all__ = [
     "omega_step",
     "rho_lemma10",
     "rho_spectral",
+    "SolverBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
     "baselines",
     "convergence",
     "dual",
     "feature_maps",
     "sdca",
+    "solver_backends",
 ]

@@ -42,6 +42,14 @@ homogeneous, but with stragglers a fast worker's commit can land between a
 slow worker's snapshot and its apply, so per-commit staleness up to G-1 is
 expected even at ``tau=0`` (round starts are still barriered).
 
+``cfg.tau = "auto"`` turns the static bound into a small online controller
+(ROADMAP "adaptive staleness"): starting bulk-synchronous, every G commits
+``_adapt_tau`` widens the gate when it actually refused a start event and
+narrows it when ``convergence.staleness_summary`` over the window shows the
+slack went unused (max lag strictly under the bound), clamped to
+``[0, cfg.tau_max]``. The bound in effect at every commit is recorded in
+``history["tau_trace"]``.
+
 Simulation cost: every commit event executes one full SPMD round (all G
 shards solve, inactive results masked out). Caching per-worker solves at
 their start events would not reduce this — under shard_map every shard
@@ -73,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..compat import shard_map
+from . import convergence as conv_mod
 from . import dual as dual_mod
 from . import omega as omega_mod
 from .distributed import (
@@ -84,6 +92,7 @@ from .distributed import (
     pad_sigma_blocks,
     round_in_specs,
     round_out_specs,
+    round_shard_map,
     server_reduce,
     shard_mtl_data,
 )
@@ -132,9 +141,7 @@ def make_async_tick(
         dW = server_reduce(cfg, axes, sigma_rows, db * a)
         return alpha + cfg.eta * (dalpha * a), W + dW
 
-    shmapped = shard_map(
-        tick_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
-    )
+    shmapped = round_shard_map(cfg, axes, tick_body, mesh, in_specs, out_specs)
     return jax.jit(shmapped)
 
 
@@ -142,6 +149,25 @@ def make_async_tick(
 def _refresh_rows(dst, src, rowmask):
     """Refresh snapshot rows of (re)starting workers: rowmask is (m,) bool."""
     return jnp.where(rowmask[:, None], src, dst)
+
+
+def _adapt_tau(
+    tau: int, gate_blocks: int, window_summary: dict, tau_max: int
+) -> int:
+    """One step of the tau="auto" controller.
+
+    Widen when the SSP gate actually blocked a worker during the window
+    (``gate_blocks`` refusal episodes: a worker entering the blocked state
+    counts once, not once per tick it stays blocked); narrow when nothing was
+    blocked AND the observed per-commit lag (``staleness_summary``'s
+    ``max_lag`` over the window) stayed strictly under the current bound,
+    i.e. the slack went unused. Clamped to [0, tau_max].
+    """
+    if gate_blocks > 0:
+        return min(tau + 1, tau_max)
+    if window_summary["max_lag"] < tau:
+        return max(tau - 1, 0)
+    return tau
 
 
 def _worker_delays(cfg: DMTRLConfig, n_workers: int) -> tuple:
@@ -171,7 +197,10 @@ def fit_async(
     The history additionally carries per-commit staleness events and the
     simulated-clock tick of every objective sample.
     """
-    if cfg.tau < 0:
+    tau_auto = cfg.tau == "auto"
+    if not tau_auto and not isinstance(cfg.tau, int):
+        raise ValueError(f'tau must be an int >= 0 or "auto", got {cfg.tau!r}')
+    if not tau_auto and cfg.tau < 0:
         raise ValueError(f"tau must be >= 0, got {cfg.tau}")
     if cfg.omega_delay < 0:
         raise ValueError(f"omega_delay must be >= 0, got {cfg.omega_delay}")
@@ -199,6 +228,8 @@ def fit_async(
         "w_staleness": [],  # commits between its snapshot and its apply
         "w_lag": [],  # rounds ahead of the slowest worker at start
         "w_tick": [],
+        "tau_trace": [],  # SSP bound in effect at each commit (constant
+        #                   unless cfg.tau == "auto")
     }
 
     @jax.jit
@@ -232,6 +263,15 @@ def fit_async(
     clock = 0  # global simulated time, accumulated across W-steps
     pending_install = None  # (sigma, omega) awaiting overlap installation
 
+    # tau="auto": start bulk-synchronous and adapt once per G-commit window
+    tau = 0 if tau_auto else cfg.tau
+    adapt_window = G
+    gate_blocks = 0  # refusal EPISODES this window: a worker entering the
+    #                  gate-blocked state counts once until it unblocks (or
+    #                  the window rolls over), not once per simulation tick
+    refused: set = set()  # workers currently blocked by the gate
+    win_start = 0  # index into the w_* event lists where the window began
+
     for p in range(cfg.outer_iters):
         rho = _rho_value(cfg, state.sigma if pending_install is None
                          else pending_install[0], n_blocks_scale=float(n_pods))
@@ -259,8 +299,15 @@ def fit_async(
             newly = [
                 g
                 for g in range(G)
-                if not busy[g] and completed[g] < R and completed[g] <= floor + cfg.tau
+                if not busy[g] and completed[g] < R and completed[g] <= floor + tau
             ]
+            blocked = {
+                g
+                for g in range(G)
+                if not busy[g] and completed[g] < R and completed[g] > floor + tau
+            }
+            gate_blocks += len(blocked - refused)
+            refused = blocked
             if newly:
                 rm = row_mask(newly)
                 W_snap = _refresh_rows(W_snap, state.W, rm)
@@ -304,6 +351,18 @@ def fit_async(
                 hist["w_lag"].append(snap_lag[g])
                 hist["w_tick"].append(clock + tick)
                 completed[g] += 1
+            hist["tau_trace"].append(tau)
+            if tau_auto and commits_total % adapt_window == 0:
+                win = {
+                    k: np.asarray(hist[k][win_start:])
+                    for k in ("w_staleness", "w_lag", "w_worker")
+                }
+                tau = _adapt_tau(
+                    tau, gate_blocks, conv_mod.staleness_summary(win), cfg.tau_max
+                )
+                gate_blocks = 0
+                refused = set()  # a still-blocked worker re-counts next window
+                win_start = len(hist["w_worker"])
             done = min(completed) >= R
             if track and (commits_total % cfg.track_every == 0 or done):
                 dd, pp = objectives(state.alpha, state.sigma)

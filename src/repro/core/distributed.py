@@ -1,6 +1,6 @@
 """Distributed DMTRL — the paper's parameter-server W-step on a JAX mesh.
 
-Mapping (DESIGN.md §2):
+Mapping (docs/DESIGN.md §2):
   * ``data`` mesh axis  = the paper's workers; tasks are sharded over it.
   * ``model`` mesh axis = feature-dimension sharding (wide phi); the
     block-Gram solver psums its three d-contractions over this axis.
@@ -18,7 +18,6 @@ which is the paper's m*d-floats-per-round communication pattern.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -26,13 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..compat import shard_map
+from ..compat import shard_map, shard_map_unchecked
 from . import dual as dual_mod
 from . import omega as omega_mod
 from .dmtrl import DMTRLConfig, _rho_value
 from .losses import get_loss
 from .mtl_data import MTLData
-from .sdca import make_local_solver
+from .solver_backends import get_backend
 
 Array = jax.Array
 
@@ -126,23 +125,17 @@ def make_local_solve(
     psz = _axis_size(mesh, axes.pod)
     m_loc = m // dsz
     n_loc = n_max // psz
-    H = cfg.local_iters or n_loc
-    if cfg.sdca_mode == "block":
-        H = int(np.ceil(H / cfg.block_size)) * cfg.block_size
-    # with a sharded feature dim the full-Gram form is used: ONE batched
-    # (q, G) build + psum over 'model' for ALL local tasks (2 collectives
-    # per round vs 3 per block), then a collective-free vmapped scalar
-    # recursion — identical iterates to naive/block (tested).
+    backend = get_backend(cfg.solver)
+    H = backend.round_local_iters(cfg.local_iters or n_loc, cfg.block_size)
+    # with a sharded feature dim the full-Gram form is used regardless of the
+    # configured backend: ONE batched (q, G) build + psum over 'model' for
+    # ALL local tasks (2 collectives per round vs 3 per block), then a
+    # collective-free vmapped scalar recursion — identical iterates to
+    # naive/block (tested). Per-task backends can't psum their own
+    # d-contractions from inside a Pallas kernel (docs/DESIGN.md §5).
     use_gram = axes.model is not None
-    solver = make_local_solver(
-        loss,
-        rho,
-        cfg.lam,
-        H,
-        mode=cfg.sdca_mode,
-        block=cfg.block_size,
-        axis_name=None,
-        use_kernel=cfg.use_kernel and axes.model is None,
+    solver = None if use_gram else backend.make(
+        loss, rho, cfg.lam, H, block=cfg.block_size, axis_name=None
     )
 
     def local_solve(x, y, n, alpha, W_read, sigma_rows, key):
@@ -163,7 +156,7 @@ def make_local_solve(
                 lambda nn, kk: sample_coords(kk, H, nn, x.shape[1])
             )(n_local, keys)  # (m_loc, H)
             if cfg.dist_block_hoisted:
-                # §Perf it-3: hoisted BLOCK-Gram — collective bytes per
+                # docs/DESIGN.md §7: hoisted BLOCK-Gram — collective bytes per
                 # round are 3*H*B per task (vs H^2 for the full Gram);
                 # identical iterates to the block/naive modes.
                 nf = jnp.maximum(n, 1).astype(x.dtype)
@@ -211,7 +204,7 @@ def make_local_solve(
                 Xs = jnp.take_along_axis(
                     x, coords[:, :, None], axis=1
                 )  # (m_loc, H, d_loc)
-                # §Perf it-1: stream the sampled rows in bf16 for the MXU
+                # docs/DESIGN.md §7: stream the sampled rows in bf16 for the MXU
                 # contractions (fp32 accumulation); halves the dominant X-read
                 # traffic. Validated against the fp32 path in tests.
                 gemm_dtype = jnp.bfloat16 if cfg.gram_bf16 else Xs.dtype
@@ -276,6 +269,16 @@ def server_reduce(cfg: DMTRLConfig, axes: MeshAxes, sigma_rows, db):
     return sigma_rows @ dB / cfg.lam  # (m_loc, d_loc)
 
 
+def round_shard_map(cfg: DMTRLConfig, axes: MeshAxes, body, mesh, in_specs, out_specs):
+    """shard_map a round/tick body, disabling the replication check only
+    when the configured backend actually traces a pallas_call into the body
+    (jax has no replication rule for pallas_call; with a model axis the
+    gram path is used instead, so the check stays on)."""
+    if get_backend(cfg.solver).uses_pallas and axes.model is None:
+        return shard_map_unchecked(body, mesh, in_specs, out_specs)
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def make_distributed_round(
     cfg: DMTRLConfig,
     mesh: Mesh,
@@ -298,9 +301,7 @@ def make_distributed_round(
         dW = server_reduce(cfg, axes, sigma_rows, db)
         return alpha + cfg.eta * dalpha, W + dW
 
-    shmapped = shard_map(
-        round_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
-    )
+    shmapped = round_shard_map(cfg, axes, round_body, mesh, in_specs, out_specs)
     return jax.jit(shmapped)
 
 

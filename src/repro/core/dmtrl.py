@@ -28,7 +28,7 @@ from . import dual as dual_mod
 from . import omega as omega_mod
 from .losses import get_loss
 from .mtl_data import MTLData
-from .sdca import make_local_solver
+from .solver_backends import get_backend
 
 Array = jax.Array
 
@@ -41,20 +41,24 @@ class DMTRLConfig:
     outer_iters: int = 5  # P
     rounds: int = 20  # T (communication rounds per W-step)
     local_iters: int = 0  # H; 0 => n_max (one local epoch per round)
-    sdca_mode: str = "block"  # "naive" | "block"
+    solver: str = "block_gram"  # local-SDCA backend name, resolved through
+    #               core.solver_backends: "naive" | "block_gram" |
+    #               "pallas_block" | "pallas_round"
     block_size: int = 64
     rho_mode: str = "lemma10"  # "lemma10" | "spectral" | "fixed"
     rho_fixed: float = 1.0
     omega_jitter: float = 1e-6
     learn_omega: bool = True  # False => STL-style fixed Sigma
     seed: int = 0
-    use_kernel: bool = False  # route block solver through the Pallas kernel
     gram_bf16: bool = False  # bf16 MXU inputs in the distributed gram build
     dist_block_hoisted: bool = False  # hoisted block-Gram distributed round
     track_every: int = 1  # record objectives every k rounds
     # --- async engine (core/async_dmtrl.py) -------------------------------
-    tau: int = 0  # staleness bound: a worker may run at most tau rounds
-    #               ahead of the slowest worker (0 == bulk-synchronous)
+    tau: object = 0  # staleness bound: a worker may run at most tau rounds
+    #               ahead of the slowest worker (0 == bulk-synchronous);
+    #               "auto" adapts the bound online from the observed
+    #               staleness histogram (see async_dmtrl._adapt_tau)
+    tau_max: int = 8  # upper bound for the tau="auto" adaptation
     async_delays: Optional[tuple] = None  # per-worker solve duration in
     #               simulated ticks; None == all 1 (homogeneous workers)
     omega_delay: int = 0  # server commits the Omega-step install waits
@@ -86,18 +90,9 @@ def make_w_step_round(cfg: DMTRLConfig, data: MTLData, rho: float):
     Returns round(alpha, W, sigma, key) -> (alpha, W). jit-able.
     """
     loss = get_loss(cfg.loss)
-    H = cfg.local_iters or data.n_max
-    if cfg.sdca_mode == "block":
-        H = int(np.ceil(H / cfg.block_size)) * cfg.block_size
-    solver = make_local_solver(
-        loss,
-        rho,
-        cfg.lam,
-        H,
-        mode=cfg.sdca_mode,
-        block=cfg.block_size,
-        use_kernel=cfg.use_kernel,
-    )
+    backend = get_backend(cfg.solver)
+    H = backend.round_local_iters(cfg.local_iters or data.n_max, cfg.block_size)
+    solver = backend.make(loss, rho, cfg.lam, H, block=cfg.block_size)
 
     def round_fn(alpha, W, sigma, key):
         # same per-(task, pod=0) key derivation as distributed.py so the

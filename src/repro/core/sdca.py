@@ -8,7 +8,7 @@ un-normalized update direction ``r = X_i^T dalpha`` (so that
 
 naive      : literal Algorithm 2 — one coordinate per step, each step does a
              d-dim inner product + axpy. Reference semantics.
-block_gram : TPU adaptation (see DESIGN.md §4). H steps are processed in
+block_gram : TPU adaptation (see docs/DESIGN.md §4). H steps are processed in
              blocks of B sampled coordinates: the d-dim work becomes three
              matmuls per block (q = X_blk w, G = X_blk X_blk^T,
              r += X_blk^T delta) and the sequential part runs on the B x B
@@ -17,14 +17,18 @@ block_gram : TPU adaptation (see DESIGN.md §4). H steps are processed in
              block included), because inner products are corrected
              incrementally through G.
 
+Engines do not call these functions directly: they resolve a named backend
+through ``repro.core.solver_backends`` (docs/DESIGN.md §5), which wraps the
+math here (and the Pallas kernels in repro.kernels.sdca) behind one
+``solve(...)`` contract.
+
 Sharding: when ``axis_name`` is given (feature dim d sharded over a mesh
 axis), the d-contractions are psum'ed. naive then needs 2 collectives per
 coordinate; block_gram needs 3 per block — this is the communication
-argument for the block form recorded in EXPERIMENTS.md §Perf.
+argument for the block form (docs/DESIGN.md §7).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -99,13 +103,8 @@ def local_sdca_block(
     loss: Loss,
     block: int = 64,
     axis_name: Optional[str] = None,
-    use_kernel: bool = False,
 ) -> Tuple[Array, Array]:
-    """Block-Gram Local SDCA. Same iterates as naive, MXU-shaped.
-
-    use_kernel=True routes the per-block work through the Pallas kernel
-    (repro.kernels.sdca) — TPU target, interpret-mode on CPU.
-    """
+    """Block-Gram Local SDCA. Same iterates as naive, MXU-shaped."""
     H = coords.shape[0]
     assert H % block == 0, f"H={H} must be a multiple of block={block}"
     nb = H // block
@@ -113,57 +112,33 @@ def local_sdca_block(
     nf = jnp.maximum(n_i.astype(x.dtype), 1.0)
     kappa = rho * sigma_ii / (lam * nf)
 
-    if use_kernel:
-        from repro.kernels.sdca import ops as sdca_ops  # lazy: optional dep
+    def blk_fn(carry, cb):
+        dalpha, r = carry
+        xb = x[cb]  # (B, d)
+        q = _psum(xb @ w_i, axis_name)  # (B,)
+        xr = _psum(xb @ r, axis_name)  # (B,)
+        G = _psum(xb @ xb.T, axis_name)  # (B, B)
+        yb = y[cb]
 
-        assert axis_name is None, (
-            "Pallas SDCA kernel computes its own d-contractions; with a "
-            "sharded feature dim use the jnp block path (psum'ed) instead"
-        )
+        def inner(k, inner_carry):
+            dalpha_, deltas = inner_carry
+            j = cb[k]
+            # c_k = q_k + kappa * (x_k^T r + sum_{k'<k} G[k,k'] delta_k')
+            corr = jnp.dot(G[k], deltas)  # deltas[k:] are still 0
+            c = q[k] + kappa * (xr[k] + corr)
+            a = kappa * G[k, k]
+            atilde = alpha_i[j] + dalpha_[j]
+            delta = loss.sdca_delta(atilde, c, a, yb[k])
+            dalpha_ = dalpha_.at[j].add(delta)
+            deltas = deltas.at[k].set(delta)
+            return dalpha_, deltas
 
-        def blk_fn(carry, cb):
-            dalpha, r = carry
-            xb = x[cb]  # (B, d) gather
-            atilde0 = alpha_i[cb] + dalpha[cb]
-            yb = y[cb]
-            deltas = sdca_ops.sdca_block_update(
-                None, None, None, atilde0, yb, cb, kappa, loss.name,
-                xb=xb, w=w_i, r=r,
-            )
-            deltas = deltas.astype(x.dtype)
-            dalpha = dalpha.at[cb].add(deltas)
-            r = r + xb.T @ deltas
-            return (dalpha, r), None
-
-    else:
-
-        def blk_fn(carry, cb):
-            dalpha, r = carry
-            xb = x[cb]  # (B, d)
-            q = _psum(xb @ w_i, axis_name)  # (B,)
-            xr = _psum(xb @ r, axis_name)  # (B,)
-            G = _psum(xb @ xb.T, axis_name)  # (B, B)
-            yb = y[cb]
-
-            def inner(k, inner_carry):
-                dalpha_, deltas = inner_carry
-                j = cb[k]
-                # c_k = q_k + kappa * (x_k^T r + sum_{k'<k} G[k,k'] delta_k')
-                corr = jnp.dot(G[k], deltas)  # deltas[k:] are still 0
-                c = q[k] + kappa * (xr[k] + corr)
-                a = kappa * G[k, k]
-                atilde = alpha_i[j] + dalpha_[j]
-                delta = loss.sdca_delta(atilde, c, a, yb[k])
-                dalpha_ = dalpha_.at[j].add(delta)
-                deltas = deltas.at[k].set(delta)
-                return dalpha_, deltas
-
-            # derive from q so the carry carries the same varying-manual-axes
-            # type as the inputs under shard_map
-            deltas0 = q * 0.0
-            dalpha, deltas = jax.lax.fori_loop(0, block, inner, (dalpha, deltas0))
-            r = r + xb.T @ deltas
-            return (dalpha, r), None
+        # derive from q so the carry carries the same varying-manual-axes
+        # type as the inputs under shard_map
+        deltas0 = q * 0.0
+        dalpha, deltas = jax.lax.fori_loop(0, block, inner, (dalpha, deltas0))
+        r = r + xb.T @ deltas
+        return (dalpha, r), None
 
     dalpha0 = jnp.zeros_like(alpha_i) + y[0] * 0
     r0 = jnp.zeros_like(w_i) + x[0] * 0  # see local_sdca_naive note
@@ -228,7 +203,7 @@ def local_sdca_gram(
 
     vs 3 collectives PER BLOCK for the block mode — this is the
     communication-optimal form for a model-sharded feature dim and the one
-    the distributed path uses (EXPERIMENTS.md §Perf)."""
+    the distributed path uses (docs/DESIGN.md §7)."""
     Xs = x[coords]  # (H, d_shard)
     q = _psum(Xs @ w_i, axis_name)  # (H,)
     G = _psum(
@@ -268,50 +243,3 @@ def sdca_block_solve(
 
     deltas0 = q * 0.0
     return jax.lax.fori_loop(0, B, body, (dalpha, deltas0))
-
-
-def make_local_solver(
-    loss: Loss,
-    rho: float,
-    lam: float,
-    H: int,
-    mode: str = "block",
-    block: int = 64,
-    axis_name: Optional[str] = None,
-    use_kernel: bool = False,
-):
-    """Returns solver(x, y, alpha_i, w_i, n_i, sigma_ii, key) -> (dalpha, r).
-
-    Suitable for vmap over the task axis.
-    """
-
-    def solver(x, y, alpha_i, w_i, n_i, sigma_ii, key):
-        n_max = x.shape[0]
-        coords = sample_coords(key, H, n_i, n_max)
-        if mode == "naive":
-            return local_sdca_naive(
-                x, y, alpha_i, w_i, n_i, sigma_ii, coords, rho, lam, loss, axis_name
-            )
-        elif mode == "gram":
-            return local_sdca_gram(
-                x, y, alpha_i, w_i, n_i, sigma_ii, coords, rho, lam, loss, axis_name
-            )
-        elif mode == "block":
-            return local_sdca_block(
-                x,
-                y,
-                alpha_i,
-                w_i,
-                n_i,
-                sigma_ii,
-                coords,
-                rho,
-                lam,
-                loss,
-                block=block,
-                axis_name=axis_name,
-                use_kernel=use_kernel,
-            )
-        raise ValueError(f"unknown sdca mode {mode!r}")
-
-    return solver

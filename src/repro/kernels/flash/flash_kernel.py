@@ -10,7 +10,7 @@ scratch that persists across the kv loop:
 
 BlockSpecs stage (BQ, HD) query tiles and (BK, HD) key/value tiles in VMEM;
 the (BQ, BK) score tile exists only in VMEM/VREGs — the HBM score-tile
-traffic of the jnp reference path (see EXPERIMENTS.md §Perf) disappears.
+traffic of the jnp reference path (see docs/DESIGN.md §7) disappears.
 Causal masking is positional; fully-masked kv blocks still execute in this
 baseline kernel (the block-skip optimization is measured separately).
 """

@@ -1,4 +1,10 @@
 from . import ops, ref
-from .sdca_kernel import SUPPORTED_LOSSES, sdca_block_kernel
+from .sdca_kernel import SUPPORTED_LOSSES, sdca_block_kernel, sdca_round_kernel
 
-__all__ = ["ops", "ref", "SUPPORTED_LOSSES", "sdca_block_kernel"]
+__all__ = [
+    "ops",
+    "ref",
+    "SUPPORTED_LOSSES",
+    "sdca_block_kernel",
+    "sdca_round_kernel",
+]

@@ -1,14 +1,23 @@
-"""jit'd wrapper used by repro.core.sdca when use_kernel=True."""
+"""jit-level entry points for the SDCA Pallas kernels.
+
+Used by the solver-backend registry (repro.core.solver_backends):
+
+  * ``sdca_block_apply``  — one H-block of sampled coordinates; backs the
+    ``pallas_block`` backend (one pallas_call per block).
+  * ``sdca_round``        — one fused local round (all H/B blocks in a
+    single pallas_call); backs the ``pallas_round`` backend.
+
+Losses outside ``SUPPORTED_LOSSES`` (no closed-form delta in the kernel)
+fall back to the pure-jnp reference with identical iterate semantics.
+"""
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
-from .sdca_kernel import SUPPORTED_LOSSES, sdca_block_kernel
-from .ref import sdca_block_ref
+from .ref import sdca_block_ref, sdca_round_ref
+from .sdca_kernel import SUPPORTED_LOSSES, sdca_block_kernel, sdca_round_kernel
 
 Array = jax.Array
 
@@ -16,46 +25,39 @@ Array = jax.Array
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-def sdca_block_update(
-    G_unused: Array,
-    q_unused: Array,
-    xr_unused: Array,
-    at0: Array,
-    y: Array,
-    cb: Array,
-    kappa: Array,
+def sdca_block_apply(
+    xb: Array,  # (B, d) sampled rows
+    w: Array,  # (d,)
+    r: Array,  # (d,) running block correction
+    at0: Array,  # (B,) initial alpha~ per slot
+    y: Array,  # (B,)
+    cb: Array,  # (B,) coordinate ids (duplicate detection)
+    kappa: Array,  # scalar
     loss_name: str,
-    *,
-    xb: Array = None,
-    w: Array = None,
-    r: Array = None,
 ) -> Array:
-    """Compatibility shim: repro.core.sdca precomputes (G, q, xr) for the
-    jnp path; the kernel recomputes them from (xb, w, r) with its own d-tile
-    accumulation. When xb/w/r are not provided, fall back to the reference.
-    """
-    if xb is not None:
-        if loss_name in SUPPORTED_LOSSES:
-            return sdca_block_kernel(
-                xb, w, r, at0, y, cb, kappa, loss_name, interpret=INTERPRET
-            )
-        return sdca_block_ref(xb, w, r, at0, y, cb, kappa, loss_name)
-    # reference solve directly from the precomputed Gram pieces
-    return _solve_from_gram(G_unused, q_unused, xr_unused, at0, y, cb, kappa, loss_name)
+    """Deltas for ONE block; the caller scatters them and updates r."""
+    if loss_name in SUPPORTED_LOSSES:
+        return sdca_block_kernel(
+            xb, w, r, at0, y, cb, kappa, loss_name, interpret=INTERPRET
+        )
+    return sdca_block_ref(xb, w, r, at0, y, cb, kappa, loss_name)
 
 
-def _solve_from_gram(G, q, xr, at0, y, cb, kappa, loss_name):
-    from repro.core.losses import get_loss
-
-    loss = get_loss(loss_name)
-    B = q.shape[0]
-
-    def body(k, deltas):
-        corr = jnp.dot(G[k], deltas)
-        c = q[k] + kappa * (xr[k] + corr)
-        a = kappa * G[k, k]
-        dup = jnp.sum(jnp.where(cb == cb[k], deltas, 0.0))
-        atilde = at0[k] + dup
-        return deltas.at[k].set(loss.sdca_delta(atilde, c, a, y[k]))
-
-    return jax.lax.fori_loop(0, B, body, jnp.zeros((B,), q.dtype))
+def sdca_round(
+    x: Array,  # (n_max, d) full task block
+    y: Array,  # (n_max,)
+    alpha_i: Array,  # (n_max,)
+    w: Array,  # (d,)
+    u: Array,  # (H,) per-round uniform stream
+    n_i: Array,  # scalar int
+    kappa: Array,  # scalar
+    loss_name: str,
+    block: int = 64,
+):
+    """(dalpha, r) for one fused local round (single pallas_call)."""
+    if loss_name in SUPPORTED_LOSSES:
+        return sdca_round_kernel(
+            x, y, alpha_i, w, u, n_i, kappa, loss_name,
+            block=block, interpret=INTERPRET,
+        )
+    return sdca_round_ref(x, y, alpha_i, w, u, n_i, kappa, loss_name)

@@ -42,3 +42,40 @@ def sdca_block_ref(
         0, B, body, (jnp.zeros((B,), jnp.float32), r0)
     )
     return deltas
+
+
+def sdca_round_ref(
+    x: Array,  # (n_max, d)
+    y: Array,  # (n_max,)
+    alpha_i: Array,  # (n_max,)
+    w: Array,  # (d,)
+    u: Array,  # (H,) per-round uniform stream
+    n_i: Array,  # scalar int
+    kappa: Array,  # scalar
+    loss_name: str,
+):
+    """Sequential coordinate-at-a-time oracle for the fused round kernel:
+    same coordinate mapping (min(floor(u * n), n - 1)), literal Algorithm-2
+    updates, no Gram shortcut. Returns (dalpha, r) in float32."""
+    loss = get_loss(loss_name)
+    H = u.shape[0]
+    x = x.astype(jnp.float32)
+    yv = y.astype(jnp.float32)
+    al = alpha_i.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    n = jnp.asarray(n_i, jnp.int32)
+    coords = jnp.minimum((u * n.astype(u.dtype)).astype(jnp.int32), n - 1)
+
+    def body(h, carry):
+        dalpha, r = carry
+        j = coords[h]
+        xj = x[j]
+        c = jnp.dot(xj, w) + kappa * jnp.dot(xj, r)
+        a = kappa * jnp.dot(xj, xj)
+        atilde = al[j] + dalpha[j]
+        delta = loss.sdca_delta(atilde, c, a, yv[j])
+        return dalpha.at[j].add(delta), r + delta * xj
+
+    dalpha0 = jnp.zeros_like(al)
+    r0 = jnp.zeros_like(w)
+    return jax.lax.fori_loop(0, H, body, (dalpha0, r0))

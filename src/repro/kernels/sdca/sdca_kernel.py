@@ -1,6 +1,18 @@
-"""Pallas TPU kernel for the block-Gram SDCA inner update (DESIGN.md §4).
+"""Pallas TPU kernels for the block-Gram SDCA inner update (docs/DESIGN.md §4).
 
-Pipeline per H-block of sampled coordinates (B = block size):
+Two entry points:
+
+``sdca_block_kernel`` — ONE H-block per ``pallas_call`` (the ``pallas_block``
+backend). ``w``/``r`` are re-streamed from HBM on every call, so a local
+round of H iterations costs H/B kernel launches.
+
+``sdca_round_kernel`` — ALL H-blocks of one local round fused into a single
+``pallas_call`` (the ``pallas_round`` backend, docs/DESIGN.md §6): the task's
+data block, ``w`` and the running correction ``r`` stay VMEM-resident across
+blocks, coordinate sampling happens on-device from the round's uniform
+stream, and only ``(dalpha, r)`` leave the kernel.
+
+Per-block pipeline (B = block size), shared by both kernels:
   phase A (grid over d tiles, MXU):  q += X_blk_tile @ w_tile
                                      xr += X_blk_tile @ r_tile
                                      G += X_blk_tile @ X_blk_tile^T
@@ -176,3 +188,126 @@ def sdca_block_kernel(
         ],
         interpret=interpret,
     )(f32(xb), f32(w), f32(r), f32(at0), f32(y), f32(cb), kappa2d)
+
+
+def _round_kernel(
+    x_ref,  # (n_max, d)  the task's full (padded) data block
+    y_ref,  # (n_max,)
+    alpha_ref,  # (n_max,)  current dual block
+    w_ref,  # (d,)
+    u_ref,  # (H,)  per-round uniform stream (key-derived, data-independent)
+    n_ref,  # (1, 1) int32 in SMEM: valid sample count
+    kappa_ref,  # (1, 1) in SMEM
+    dalpha_ref,  # out (n_max,)
+    r_ref,  # out (d,)
+    *,
+    loss: str,
+    n_blocks: int,
+    block: int,
+):
+    # everything is staged into VMEM once and stays resident for the whole
+    # round; the H/B block loop below never touches HBM again.
+    X = x_ref[...]
+    yv = y_ref[...]
+    al = alpha_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+    n = n_ref[0, 0]
+    kappa = kappa_ref[0, 0]
+    delta_fn = _DELTAS[loss]
+    n_max, d = X.shape
+
+    # on-device coordinate sampling: identical arithmetic to
+    # repro.core.sdca.sample_coords so iterates bit-match the jnp backends
+    cs = jnp.minimum((u * n.astype(u.dtype)).astype(jnp.int32), n - 1)
+
+    def gather_rows(cb):
+        def g(k, xb):
+            row = jax.lax.dynamic_slice(X, (cb[k], 0), (1, d))
+            return jax.lax.dynamic_update_slice(xb, row, (k, 0))
+
+        return jax.lax.fori_loop(0, block, g, jnp.zeros((block, d), X.dtype))
+
+    def blk(b, carry):
+        dalpha, r = carry
+        cb = jax.lax.dynamic_slice(cs, (b * block,), (block,))
+        xb = gather_rows(cb)
+        q = xb @ w
+        xr = xb @ r
+        G = jax.lax.dot_general(xb, xb, (((1,), (1,)), ((), ())))
+
+        def inner(k, ic):
+            dalpha_, deltas = ic
+            Gk = jax.lax.dynamic_slice(G, (k, 0), (1, block))[0]
+            corr = jnp.dot(Gk, deltas)  # deltas[k:] are still 0
+            c = q[k] + kappa * (xr[k] + corr)
+            a = kappa * Gk[k]
+            j = cb[k]
+            atilde = al[j] + dalpha_[j]
+            delta = delta_fn(atilde, c, a, yv[j])
+            return dalpha_.at[j].add(delta), deltas.at[k].set(delta)
+
+        deltas0 = q * 0.0
+        dalpha, deltas = jax.lax.fori_loop(0, block, inner, (dalpha, deltas0))
+        return dalpha, r + xb.T @ deltas
+
+    dalpha0 = jnp.zeros((n_max,), jnp.float32)
+    r0 = jnp.zeros((d,), jnp.float32)
+    dalpha, r = jax.lax.fori_loop(0, n_blocks, blk, (dalpha0, r0))
+    dalpha_ref[...] = dalpha
+    r_ref[...] = r
+
+
+def sdca_round_kernel(
+    x,  # (n_max, d)
+    y,  # (n_max,)
+    alpha_i,  # (n_max,)
+    w,  # (d,)
+    u,  # (H,) uniforms in [0, 1) derived from the per-round key
+    n_i,  # scalar int: valid sample count
+    kappa,  # scalar: rho * sigma_ii / (lambda * n_i)
+    loss: str,
+    block: int = 64,
+    interpret: bool = True,
+):
+    """One fused local SDCA round: H = len(u) iterations in H/block Gram
+    blocks, ONE pallas_call. Returns (dalpha, r), both float32.
+
+    VMEM working set is the full (n_max, d) task block plus O(B^2); the
+    per-task data must fit on-chip (docs/DESIGN.md §6 sizes this — the
+    paper's per-worker task blocks do). For larger n_max the block kernel
+    with its d-tiled BlockSpec remains the fallback.
+    """
+    assert loss in _DELTAS, f"kernel supports {SUPPORTED_LOSSES}, got {loss}"
+    H = u.shape[0]
+    assert H % block == 0, f"H={H} must be a multiple of block={block}"
+    n_max, d = x.shape
+    f32 = lambda a: a.astype(jnp.float32)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(
+        _round_kernel, loss=loss, n_blocks=H // block, block=block
+    )
+    n2d = jnp.reshape(jnp.asarray(n_i, jnp.int32), (1, 1))
+    kappa2d = jnp.reshape(f32(jnp.asarray(kappa)), (1, 1))
+    return pl.pallas_call(
+        kern,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # x
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # y
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # alpha_i
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # w
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # u
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # n
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # kappa
+        ],
+        out_specs=(
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_max,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(f32(x), f32(y), f32(alpha_i), f32(w), f32(u), n2d, kappa2d)

@@ -12,8 +12,9 @@ Usage:
         --shape train_4k --mesh single --out results/dryrun
     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 
-Each run writes one JSON per (arch, shape, mesh) into --out; EXPERIMENTS.md
-tables are generated from those files by benchmarks/bench_roofline.py.
+Each run writes one JSON per (arch, shape, mesh) into --out;
+benchmarks/bench_roofline.py aggregates those files into the roofline
+tables (terms defined in docs/DESIGN.md §Roofline).
 """
 import argparse
 import dataclasses

@@ -39,7 +39,7 @@ def run(mesh_name: str, m: int, n_max: int, d: int, out_dir: str,
         data="data", model="model", pod="pod" if multi else None
     )
     cfg = DMTRLConfig(
-        loss="hinge", lam=1e-4, local_iters=H, sdca_mode="block",
+        loss="hinge", lam=1e-4, local_iters=H, solver="block_gram",
         block_size=block, gram_bf16=bf16,
         dist_block_hoisted=os.environ.get("DMTRL_BLOCK_HOISTED", "0") == "1",
     )

@@ -19,7 +19,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-# TPU v5e-class hardware constants used by the roofline (see EXPERIMENTS.md)
+# TPU v5e-class hardware constants used by the roofline (docs/DESIGN.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link

@@ -104,7 +104,7 @@ def chunked_attention(
     qpos = q_positions.reshape(nq, q_chunk)
     kpos = k_positions.reshape(nk, kv_chunk)
 
-    def q_block(carry_unused, qi):
+    def q_block(carry_none, qi):
         qb = qs[:, qi]  # (B, qc, H, hd)
         qp = qpos[qi]
 
@@ -140,7 +140,7 @@ def chunked_attention(
             jax.checkpoint(kv_block), (m0, l0, a0), jnp.arange(nk)
         )
         out = acc / jnp.maximum(l[..., None], 1e-30)
-        return carry_unused, out.astype(q.dtype)
+        return carry_none, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(jax.checkpoint(q_block), None, jnp.arange(nq))
     # outs: (nq, B, H, qc, hd) -> (B, Sq, H, hd)

@@ -53,7 +53,7 @@ def mlp(x: Array, p: Dict[str, Array], cfg: ModelConfig) -> Array:
 # assignment is a partial bijection, so BOTH directions of BOTH ops are pure
 # gathers. Without this, autodiff turns the forward gathers into backward
 # scatter-adds, which the SPMD partitioner replicates (hundreds of GB/device
-# at 4k x 256 batch; measured in EXPERIMENTS.md §Perf).
+# at 4k x 256 batch; see docs/DESIGN.md §7).
 
 
 @jax.custom_vjp

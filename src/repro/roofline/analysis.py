@@ -1,6 +1,6 @@
 """Roofline-term extraction from compiled dry-run artifacts.
 
-Terms (per EXPERIMENTS.md §Roofline; cost_analysis operates on the
+Terms (per docs/DESIGN.md §Roofline; cost_analysis operates on the
 post-SPMD per-device module, so "per device / per-chip bandwidth" equals the
 spec's "global / (chips x bandwidth)"):
 

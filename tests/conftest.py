@@ -56,7 +56,7 @@ def small_cfg():
         outer_iters=2,
         rounds=3,
         local_iters=32,
-        sdca_mode="block",
+        solver="block_gram",
         block_size=32,
         seed=0,
     )

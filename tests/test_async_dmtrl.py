@@ -69,7 +69,7 @@ _STRAGGLER_SUBPROC = textwrap.dedent(
 
     sp = synthetic(1, m=4, d=16, n_train_avg=40, n_test_avg=10, seed=3)
     base = dict(loss="hinge", lam=1e-3, outer_iters=1, rounds=4,
-                local_iters=32, sdca_mode="block", block_size=32, seed=0)
+                local_iters=32, solver="block_gram", block_size=32, seed=0)
     mesh = jax.make_mesh((4,), ("data",))
     ax = MeshAxes(data="data")
     _, _, _, h_sync = fit_distributed(DMTRLConfig(**base), sp.train, mesh, ax)
@@ -89,6 +89,12 @@ _STRAGGLER_SUBPROC = textwrap.dedent(
             all(np.any(alpha[i][mask[i] == 1.0] != 0.0)
                 for i in range(sp.train.m))
         )
+    cfg_auto = DMTRLConfig(**dict(base, outer_iters=2), tau="auto",
+                           async_delays=(1, 1, 1, 3))
+    _, _, _, h_auto = fit_async(cfg_auto, sp.train, mesh, ax)
+    out["auto_gap"] = float(h_auto["gap"][-1])
+    out["auto_tau_max"] = int(h_auto["tau_trace"].max())
+    out["auto_tau_start"] = int(h_auto["tau_trace"][0])
     print(json.dumps(out))
     """
 )
@@ -117,6 +123,11 @@ def test_straggler_converges_within_2x_sync_gap():
         assert r[f"tau{tau}_all_tasks_moved"], r
     # a larger staleness bound must actually allow more lag
     assert r["tau4_lag"] >= r["tau1_lag"], r
+    # tau="auto": starts bulk-synchronous, the straggler's gate refusals
+    # must widen the bound, and the run still converges within 2x of sync
+    assert r["auto_tau_start"] == 0, r
+    assert r["auto_tau_max"] >= 1, r
+    assert r["auto_gap"] <= 2.0 * abs(r["sync_gap"]) + 1e-9, r
 
 
 def test_stale_snapshots_never_mix_tasks(one_device_mesh):
@@ -130,7 +141,7 @@ def test_stale_snapshots_never_mix_tasks(one_device_mesh):
     for tau in (0, 2):
         cfg = DMTRLConfig(
             loss="squared", lam=1e-3, outer_iters=1, rounds=5, local_iters=32,
-            sdca_mode="block", block_size=32, seed=7, tau=tau,
+            solver="block_gram", block_size=32, seed=7, tau=tau,
         )
         _, _, state, _ = fit_async(
             cfg, data, one_device_mesh, MeshAxes(data="data")
@@ -145,12 +156,51 @@ def test_stale_snapshots_never_mix_tasks(one_device_mesh):
             assert np.any(alpha[i][mask[i] == 1.0] != 0.0)
 
 
+def test_adapt_tau_controller():
+    """tau="auto" decision rule: widen on gate refusals, narrow on unused
+    slack, clamp to [0, tau_max]."""
+    from repro.core.async_dmtrl import _adapt_tau
+
+    slack = {"max_lag": 0.0}
+    tight = {"max_lag": 3.0}
+    # gate refused starts -> widen (regardless of the window summary)
+    assert _adapt_tau(0, 2, slack, 8) == 1
+    assert _adapt_tau(3, 1, tight, 8) == 4
+    # cap
+    assert _adapt_tau(8, 5, slack, 8) == 8
+    # no refusals and lag strictly under the bound -> narrow
+    assert _adapt_tau(3, 0, slack, 8) == 2
+    # floor
+    assert _adapt_tau(0, 0, slack, 8) == 0
+    # no refusals but the slack was fully used -> hold
+    assert _adapt_tau(3, 0, tight, 8) == 3
+
+
+def test_tau_auto_one_device_matches_sync(
+    small_problem, small_cfg, one_device_mesh
+):
+    """A single worker can never be gated, so tau="auto" must stay at 0 and
+    reproduce the synchronous engine bit-exactly."""
+    import dataclasses
+
+    cfg = dataclasses.replace(small_cfg, tau="auto")
+    W1, s1, st1, _ = fit_distributed(
+        small_cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
+    )
+    W2, s2, st2, h2 = fit_async(
+        cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
+    )
+    assert np.array_equal(W1, W2)
+    assert np.array_equal(np.asarray(st1.alpha), np.asarray(st2.alpha))
+    assert h2["tau_trace"].max() == 0
+
+
 def test_omega_overlap_converges(small_problem, one_device_mesh):
     """omega_delay > 0: the Sigma install lands mid-W-step; the run must
     still reduce the duality gap and end with a valid trace-1 Sigma."""
     cfg = DMTRLConfig(
         loss="hinge", lam=1e-3, outer_iters=3, rounds=4, local_iters=32,
-        sdca_mode="block", block_size=32, seed=0, tau=1, omega_delay=2,
+        solver="block_gram", block_size=32, seed=0, tau=1, omega_delay=2,
     )
     W, sigma, _, hist = fit_async(
         cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
@@ -176,7 +226,7 @@ def test_omega_delay_exceeding_round_budget_still_installs(
     must land at the next barrier, never be silently dropped."""
     cfg = DMTRLConfig(
         loss="hinge", lam=1e-3, outer_iters=2, rounds=3, local_iters=32,
-        sdca_mode="block", block_size=32, seed=0, omega_delay=50,
+        solver="block_gram", block_size=32, seed=0, omega_delay=50,
     )
     _, sigma, _, _ = fit_async(
         cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
@@ -193,6 +243,13 @@ def test_bad_config_rejected(small_problem, one_device_mesh):
         fit_async(
             DMTRLConfig(tau=-1), small_problem.train, one_device_mesh, ax
         )
+    # only "auto" is a valid non-int staleness bound
+    for bad in ("adaptive", None, 1.5):
+        with pytest.raises(ValueError, match="tau"):
+            fit_async(
+                DMTRLConfig(tau=bad), small_problem.train,
+                one_device_mesh, ax,
+            )
     with pytest.raises(ValueError, match="async_delays"):
         fit_async(
             DMTRLConfig(async_delays=(1, 2)), small_problem.train,
@@ -223,7 +280,7 @@ _SUBPROC = textwrap.dedent(
 
     sp = synthetic(1, m=8, d=24, n_train_avg=50, n_test_avg=10, seed=2)
     base = dict(loss="hinge", lam=1e-3, outer_iters=2, rounds=4,
-                local_iters=32, sdca_mode="block", block_size=32, seed=0)
+                local_iters=32, solver="block_gram", block_size=32, seed=0)
     mesh = jax.make_mesh((8,), ("data",))
     ax = MeshAxes(data="data")
     cfg = DMTRLConfig(**base)

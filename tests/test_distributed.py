@@ -41,7 +41,7 @@ _SUBPROC = textwrap.dedent(
 
     sp = synthetic(1, m=8, d=32, n_train_avg=70, n_test_avg=20, seed=2)
     cfg = DMTRLConfig(loss={loss!r}, lam=1e-3, outer_iters=2, rounds=3,
-                      local_iters=64, sdca_mode="block", block_size=32, seed=0,
+                      local_iters=64, solver="block_gram", block_size=32, seed=0,
                       **{extra})
     res = fit(cfg, sp.train)
     mesh = jax.make_mesh({mesh_shape}, {mesh_axes})

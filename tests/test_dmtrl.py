@@ -19,7 +19,7 @@ def splits():
 def fitted(splits):
     cfg = DMTRLConfig(
         loss="hinge", lam=1e-3, outer_iters=4, rounds=8, local_iters=128,
-        sdca_mode="block", block_size=64, seed=0,
+        solver="block_gram", block_size=64, seed=0,
     )
     return cfg, fit(cfg, splits.train)
 

@@ -7,8 +7,8 @@ import pytest
 from repro.kernels.flash import flash_attention
 from repro.kernels.flash.ops import flash_attention_bshd
 from repro.kernels.flash.ref import attention_ref
-from repro.kernels.sdca import sdca_block_kernel
-from repro.kernels.sdca.ref import sdca_block_ref
+from repro.kernels.sdca import sdca_block_kernel, sdca_round_kernel
+from repro.kernels.sdca.ref import sdca_block_ref, sdca_round_ref
 from repro.kernels.ssd.ops import ssd_forward
 from repro.kernels.ssd.ref import chunk_ref, naive_recurrence
 from repro.kernels.ssd import ssd_chunk_kernel
@@ -95,6 +95,43 @@ def test_sdca_kernel_vs_ref(loss, B, d):
     dk = sdca_block_kernel(xb, w, r, at0, y, cb, kappa, loss, d_tile=256)
     dr = sdca_block_ref(xb, w, r, at0, y, cb, kappa, loss)
     np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), atol=5e-6)
+
+
+@pytest.mark.parametrize("loss", ["hinge", "squared", "smoothed_hinge"])
+@pytest.mark.parametrize(
+    "n,d,H,block",
+    [
+        (60, 40, 64, 16),
+        (100, 30, 96, 32),
+        pytest.param(256, 130, 256, 64, marks=pytest.mark.slow),
+    ],
+)
+def test_sdca_round_kernel_vs_ref(loss, n, d, H, block):
+    """Fused round kernel == sequential coordinate-at-a-time oracle,
+    including the on-device coordinate sampling and duplicate handling."""
+    key = jax.random.PRNGKey(n * d + H)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (n, d))
+    y = (
+        jnp.sign(jax.random.normal(ks[1], (n,)))
+        if loss != "squared"
+        else jax.random.normal(ks[1], (n,))
+    )
+    alpha = (
+        y * jnp.abs(0.4 * jax.random.normal(ks[2], (n,))).clip(0, 1)
+        if loss != "squared"
+        else 0.4 * jax.random.normal(ks[2], (n,))
+    )
+    w = 0.1 * jax.random.normal(ks[3], (d,))
+    u = jax.random.uniform(ks[4], (H,))
+    n_i = jnp.int32(max(n - 7, 1))  # padded tail + duplicate draws
+    kappa = jnp.float32(0.9)
+    dak, rk = sdca_round_kernel(x, y, alpha, w, u, n_i, kappa, loss, block=block)
+    dar, rr = sdca_round_ref(x, y, alpha, w, u, n_i, kappa, loss)
+    np.testing.assert_allclose(np.asarray(dak), np.asarray(dar), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=1e-5)
+    # padded coordinates must never be touched
+    assert np.all(np.asarray(dak)[int(n_i):] == 0.0)
 
 
 # ---------------------------------------------------------------------------

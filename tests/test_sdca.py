@@ -48,12 +48,20 @@ def test_block_equals_naive(data, loss_name, block):
 
 
 @pytest.mark.parametrize("loss_name", ["hinge", "squared", "smoothed_hinge"])
-def test_kernel_equals_jnp_block(data, loss_name):
+def test_kernel_backend_equals_jnp_block(data, loss_name):
+    """pallas_block (per-block kernel) matches block_gram for the same key."""
+    from repro.core.solver_backends import get_backend
+
     loss = get_loss(loss_name)
     key = jax.random.PRNGKey(13)
-    args = _args(data, 0, loss, key, H=64)
-    da1, r1 = local_sdca_block(*args, block=32, use_kernel=False)
-    da2, r2 = local_sdca_block(*args, block=32, use_kernel=True)
+    i, H = 0, 64
+    w = 0.05 * jax.random.normal(key, (data.d,))
+    alpha = jnp.zeros((data.n_max,))
+    solve_args = (data.x[i], data.y[i], alpha, w, data.n[i], jnp.float32(0.25), key)
+    s1 = get_backend("block_gram").make(loss, 2.0, 1e-3, H, block=32)
+    s2 = get_backend("pallas_block").make(loss, 2.0, 1e-3, H, block=32)
+    da1, r1 = s1(*solve_args)
+    da2, r2 = s2(*solve_args)
     np.testing.assert_allclose(np.asarray(da1), np.asarray(da2), atol=2e-5)
     np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=2e-5)
 
@@ -71,7 +79,7 @@ def test_w_step_round_monotone_dual_ascent(data, loss_name):
     safe rho guarantees ascent in expectation; with lemma-10 rho and eta=1
     the per-round ascent holds deterministically here)."""
     cfg = DMTRLConfig(
-        loss=loss_name, lam=1e-3, local_iters=64, sdca_mode="block", block_size=32
+        loss=loss_name, lam=1e-3, local_iters=64, solver="block_gram", block_size=32
     )
     loss = get_loss(loss_name)
     sigma, _ = om.init_sigma(data.m)
