@@ -20,7 +20,9 @@ import sys
 def run(n_dev: int, taus, straggler: int, seed: int = 0):
     import jax
 
-    from repro.core import DMTRLConfig, MeshAxes, fit_async, fit_distributed
+    from repro.core import DMTRLConfig, MeshAxes
+    from repro.core.async_dmtrl import fit_async
+    from repro.core.distributed import fit_distributed
     from repro.core import convergence as cv
     from repro.data.synthetic import synthetic
 

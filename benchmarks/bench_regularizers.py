@@ -1,0 +1,87 @@
+"""Omega-regularizer family sweep through the estimator facade.
+
+For each registered family member (core/omega_regularizers.py) this fits
+the same Synthetic-1 problem through ``DMTRLEstimator`` and records the
+final duality gap, test accuracy, rho trajectory, and the learned-coupling
+mass — the family-level counterpart of ``bench_kernels.py``'s backend
+sweep. Results land in ``BENCH_regularizers.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.bench_regularizers
+    PYTHONPATH=src python -m benchmarks.bench_regularizers --tiny
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def run(tiny: bool, seed: int = 0):
+    import numpy as np
+
+    from repro.core import DMTRLEstimator, available_regularizers
+    from repro.data.synthetic import synthetic
+
+    if tiny:
+        m, d, n_tr = 6, 24, 60
+        fit_kw = dict(outer_iters=2, rounds=4, local_iters=64)
+    else:
+        m, d, n_tr = 16, 64, 200
+        fit_kw = dict(outer_iters=3, rounds=8, local_iters=256)
+    sp = synthetic(1, m=m, d=d, n_train_avg=n_tr, n_test_avg=80, seed=seed)
+
+    # graph_laplacian needs a task graph: use the ground-truth parent groups
+    # (3 groups of sign-flipped children) as a block adjacency
+    A = (np.asarray(sp.corr_true) > 0.5).astype(np.float64)
+    np.fill_diagonal(A, 0.0)
+    member_params = {"graph_laplacian": {"adjacency": A}}
+
+    rows = []
+    for name in sorted(available_regularizers()):
+        est = DMTRLEstimator(
+            engine="reference", loss="hinge", lam=1e-4, block_size=32,
+            seed=seed, regularizer=name,
+            regularizer_params=member_params.get(name), **fit_kw,
+        )
+        t0 = time.perf_counter()
+        est.fit(sp.train)
+        wall = time.perf_counter() - t0
+        s = np.asarray(est.sigma_)
+        rows.append(
+            dict(
+                regularizer=name,
+                gap_first=float(est.history["gap"][0]),
+                gap_last=float(est.history["gap"][-1]),
+                test_accuracy=float(est.score(sp.test)),
+                rho_per_outer=[round(float(r), 4) for r in est.rho_per_outer_],
+                offdiag_mass=float(np.abs(s - np.diag(np.diag(s))).sum()),
+                sigma_min_eig=float(np.linalg.eigvalsh(s).min()),
+                wall_s=round(wall, 3),
+            )
+        )
+        print(
+            f"{name:18s} gap {rows[-1]['gap_first']:.3f} -> "
+            f"{rows[-1]['gap_last']:.4f}  acc {rows[-1]['test_accuracy']:.3f}  "
+            f"offdiag {rows[-1]['offdiag_mass']:.3f}"
+        )
+    return dict(m=m, d=d, n_train_avg=n_tr, seed=seed, tiny=tiny, rows=rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(args.tiny)
+    out = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_regularizers.json",
+    )
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

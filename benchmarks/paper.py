@@ -15,18 +15,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DMTRLConfig, fit
+from repro.core import DMTRLConfig
+from repro.core.dmtrl import fit
 from repro.core import dual as dm
 from repro.core import omega as om
-from repro.core.baselines import fit_centralized_mtrl, fit_ssdca, fit_stl
+from repro.core.baselines import fit_centralized_mtrl, fit_stl
 from repro.core.dmtrl import w_step
-from repro.core.losses import get_loss
 from repro.data import synthetic as ds
 
 

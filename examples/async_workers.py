@@ -1,23 +1,22 @@
-"""Bounded-staleness DMTRL with a straggler worker.
+"""Bounded-staleness DMTRL with a straggler worker, via the estimator.
 
 8 simulated workers (host devices), one of them 4x slower. The synchronous
 engine barriers every round on the straggler; the async engine (tau > 0)
 lets the fast workers keep committing against bounded-stale snapshots, so
 the duality gap falls much earlier on the simulated wall clock.
 
-    PYTHONPATH=src python examples/async_workers.py
+Install the package once (``pip install -e .``) or export
+``PYTHONPATH=src``, then:
+
+    python examples/async_workers.py
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import sys
-
-sys.path.insert(0, "src")
-
 import jax
 
-from repro.core import DMTRLConfig, MeshAxes, fit_async, fit_distributed
+from repro.core import AsyncOptions, DMTRLEstimator, MeshAxes
 from repro.core import convergence as cv
 from repro.data.synthetic import synthetic
 
@@ -26,7 +25,7 @@ def main():
     n_dev = len(jax.devices())
     print(f"devices: {n_dev} (each = one worker group)")
     sp = synthetic(1, m=8, d=48, n_train_avg=120, n_test_avg=40, seed=0)
-    delays = (1,) * (n_dev - 1) + (4,)  # worker 7 is a 4x straggler
+    delays = (1,) * (n_dev - 1) + (4,)  # last worker is a 4x straggler
 
     base = dict(
         loss="hinge", lam=1e-4, outer_iters=2, rounds=8, local_iters=128, seed=0
@@ -35,20 +34,24 @@ def main():
     ax = MeshAxes(data="data")
 
     print("synchronous (every round barriers on the straggler)...")
-    _, _, _, h_sync = fit_distributed(DMTRLConfig(**base), sp.train, mesh, ax)
-    sync_ticks = cv.sync_effective_ticks(h_sync, delays)
+    sync = DMTRLEstimator(
+        engine="distributed", mesh=mesh, axes=ax, **base
+    ).fit(sp.train)
+    sync_ticks = cv.sync_effective_ticks(sync.history, delays)
 
     print("async, tau=2, deterministic straggler schedule...")
-    cfg = DMTRLConfig(**base, tau=2, async_delays=delays)
-    _, _, _, h_async = fit_async(cfg, sp.train, mesh, ax)
-    a_ticks, a_gaps = cv.effective_gap_curve(h_async)
+    anc = DMTRLEstimator(
+        engine="async", mesh=mesh, axes=ax,
+        async_options=AsyncOptions(tau=2, async_delays=delays), **base
+    ).fit(sp.train)
+    a_ticks, a_gaps = cv.effective_gap_curve(anc.history)
 
-    target = 2.0 * h_sync["gap"][-1]
-    t_sync = cv.ticks_to_gap(sync_ticks, h_sync["gap"], target)
+    target = 2.0 * sync.history["gap"][-1]
+    t_sync = cv.ticks_to_gap(sync_ticks, sync.history["gap"], target)
     t_async = cv.ticks_to_gap(a_ticks, a_gaps, target)
-    print(f"  final gap      sync {h_sync['gap'][-1]:.4f}  async {a_gaps[-1]:.4f}")
+    print(f"  final gap      sync {sync.history['gap'][-1]:.4f}  async {a_gaps[-1]:.4f}")
     print(f"  ticks to gap<={target:.4f}:  sync {t_sync:.0f}  async {t_async:.0f}")
-    s = cv.staleness_summary(h_async)
+    s = cv.staleness_summary(anc.history)
     print(
         f"  staleness: max {s['max_staleness']:.0f} commits, "
         f"mean {s['mean_staleness']:.2f}, max lag {s['max_lag']:.0f} rounds"

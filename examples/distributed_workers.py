@@ -1,20 +1,19 @@
 """Geo-distributed DMTRL simulation: 8 'workers' (host devices), one task's
 data pinned per worker; only delta_b vectors and task weights cross workers.
 
-    PYTHONPATH=src python examples/distributed_workers.py
+Install the package once (``pip install -e .``) or export
+``PYTHONPATH=src``, then:
+
+    python examples/distributed_workers.py
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import sys
-
-sys.path.insert(0, "src")
-
 import jax
 import numpy as np
 
-from repro.core import DMTRLConfig, MeshAxes, fit, fit_distributed
+from repro.core import DMTRLEstimator, MeshAxes
 from repro.data.synthetic import synthetic
 
 
@@ -23,16 +22,19 @@ def main():
     print(f"devices: {n_dev} (each = one of the paper's workers)")
     sp = synthetic(1, m=8, d=64, n_train_avg=200, n_test_avg=60, seed=0)
 
-    cfg = DMTRLConfig(
+    base = dict(
         loss="hinge", lam=1e-4, outer_iters=3, rounds=8, local_iters=256, seed=0
     )
     mesh = jax.make_mesh((min(8, n_dev),), ("data",))
     print("fitting DMTRL with tasks sharded over the 'data' axis...")
-    W, sigma, _, hist = fit_distributed(cfg, sp.train, mesh, MeshAxes(data="data"))
-    print(f"  gap: {hist['gap'][0]:.3f} -> {hist['gap'][-1]:.4f}")
+    dist = DMTRLEstimator(
+        engine="distributed", mesh=mesh, axes=MeshAxes(data="data"), **base
+    ).fit(sp.train)
+    h = dist.history
+    print(f"  gap: {h['gap'][0]:.3f} -> {h['gap'][-1]:.4f}")
 
-    res = fit(cfg, sp.train)  # single-process reference
-    werr = float(np.max(np.abs(W - np.asarray(res.W))))
+    ref = DMTRLEstimator(engine="reference", **base).fit(sp.train)
+    werr = float(np.max(np.abs(dist.W_ - ref.W_)))
     print(f"  max |W_distributed - W_reference| = {werr:.2e} (bit-equal rounds)")
     print("  per-round communication = m*d floats (delta_b gather + W scatter),")
     print("  the raw task data never left its worker.")

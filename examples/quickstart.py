@@ -1,51 +1,66 @@
-"""Quickstart: DMTRL on the paper's Synthetic-1 dataset.
+"""Quickstart: DMTRL on the paper's Synthetic-1 dataset via the estimator.
 
-    PYTHONPATH=src python examples/quickstart.py
+Install the package once (``pip install -e .``) or export
+``PYTHONPATH=src``, then:
 
-Learns 16 related binary tasks jointly with the distributed primal-dual
-algorithm, recovers the task-correlation structure, and compares against
-single-task learning.
+    python examples/quickstart.py [--tiny]
+
+Learns 16 related binary tasks jointly through the engine-agnostic
+``DMTRLEstimator`` facade, recovers the task-correlation structure, and
+compares against single-task learning (the identity_stl regularizer).
 """
-import sys
+import argparse
 
-sys.path.insert(0, "src")
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DMTRLConfig, fit, correlation_from_sigma
-from repro.core import dual as dm
-from repro.core.baselines import fit_stl
+from repro.core import DMTRLEstimator, correlation_from_sigma
 from repro.data.synthetic import synthetic
 
 
 def main():
-    print("generating Synthetic-1 (16 tasks, 3 parent groups, +- children)...")
-    sp = synthetic(1, m=16, d=100, n_train_avg=300, n_test_avg=150, seed=0)
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny", action="store_true",
+        help="CI-sized shapes (seconds instead of minutes)",
+    )
+    args = ap.parse_args()
+    if args.tiny:
+        m, d, n_tr, n_te = 6, 24, 60, 30
+        fit_kw = dict(outer_iters=2, rounds=4, local_iters=64)
+    else:
+        m, d, n_tr, n_te = 16, 100, 300, 150
+        fit_kw = dict(outer_iters=4, rounds=10, local_iters=512)
 
-    cfg = DMTRLConfig(
+    print(f"generating Synthetic-1 ({m} tasks, 3 parent groups, +- children)...")
+    sp = synthetic(1, m=m, d=d, n_train_avg=n_tr, n_test_avg=n_te, seed=0)
+
+    est = DMTRLEstimator(
+        engine="reference",  # | "distributed" | "async" (core.engines)
         loss="hinge",
         lam=1e-4,
-        outer_iters=4,  # P: alternations of (W-step, Omega-step)
-        rounds=10,  # T: communication rounds per W-step
-        local_iters=512,  # H: local SDCA iterations per round
-        solver="block_gram",  # local-SDCA backend (core.solver_backends):
-        #   "naive" | "block_gram" | "pallas_block" | "pallas_round"
+        solver="block_gram",  # local-SDCA backend (core.solver_backends)
         block_size=64,
         seed=0,
+        regularizer="trace_constraint",  # the paper's Omega family member
+        **fit_kw,
     )
-    print("fitting DMTRL (Algorithm 1)...")
-    res = fit(cfg, sp.train)
-    print(f"  duality gap: {res.history['gap'][0]:.3f} -> {res.history['gap'][-1]:.4f}")
-    print(f"  rho per outer iteration: {[round(r,2) for r in res.rho_per_outer]}")
+    print("fitting DMTRL (Algorithm 1) via the estimator facade...")
+    est.fit(sp.train)
+    gaps = est.history["gap"]
+    print(f"  duality gap: {gaps[0]:.3f} -> {gaps[-1]:.4f}")
+    print(f"  rho per outer iteration: {[round(r, 2) for r in est.rho_per_outer_]}")
 
-    stl = fit_stl(cfg, sp.train)
-    err_mtl = float(dm.error_rate(sp.test, jnp.asarray(res.W)))
-    err_stl = float(dm.error_rate(sp.test, jnp.asarray(stl.W)))
-    print(f"  test error: DMTRL {err_mtl:.3f}  vs  STL {err_stl:.3f}")
+    # single-task baseline == the identity_stl member of the same family
+    stl = DMTRLEstimator(
+        config=est.config, regularizer="identity_stl"
+    ).fit(sp.train)
+    print(
+        f"  test accuracy: DMTRL {est.score(sp.test):.3f}"
+        f"  vs  STL {stl.score(sp.test):.3f}"
+    )
 
-    learned = np.asarray(correlation_from_sigma(res.sigma))
-    iu = np.triu_indices(16, k=1)
+    learned = np.asarray(correlation_from_sigma(est.sigma_))
+    iu = np.triu_indices(m, k=1)
     align = np.corrcoef(learned[iu], sp.corr_true[iu])[0, 1]
     print(f"  task-correlation recovery alignment: {align:.3f}")
     print("\nlearned correlation matrix (rounded):")

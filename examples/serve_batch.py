@@ -1,27 +1,28 @@
-"""Batched serving demo: prefill + decode with KV / SSM-state caches.
+"""Batched serving demos.
 
-    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-780m
+Install the package once (``pip install -e .``) or export
+``PYTHONPATH=src``, then:
+
+    python examples/serve_batch.py --arch mamba2-780m     # LM decode demo
+    python examples/serve_batch.py --mtl [--tiny]         # MTL scoring demo
+
+The LM path exercises prefill + decode with KV / SSM-state caches; the
+``--mtl`` path fits a small DMTRL estimator and serves per-task scoring
+requests through the batched MTL scoring engine (serve/mtl.py).
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
-
-import jax
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.models import init_params
-from repro.serve import Request, ServeConfig, ServingEngine
 
+def lm_demo(arch: str, max_new: int):
+    import jax
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b", choices=list(ARCH_IDS))
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import Request, ServeConfig, ServingEngine
 
-    cfg = get_config(args.arch).reduced()
+    cfg = get_config(arch).reduced()
     print(f"loading {cfg.name} (reduced) ...")
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params, ServeConfig(batch=4, max_len=128))
@@ -29,13 +30,60 @@ def main():
     rng = np.random.RandomState(0)
     reqs = [
         Request(prompt=rng.randint(2, cfg.vocab_size, size=n).astype(np.int32),
-                max_new_tokens=args.max_new)
+                max_new_tokens=max_new)
         for n in (5, 9, 3)
     ]
     print(f"serving {len(reqs)} requests (batched prefill + decode loop)...")
     done = engine.run(reqs)
     for i, r in enumerate(done[:3]):
         print(f"  req{i}: prompt[{r.prompt.shape[0]} toks] -> {r.output}")
+
+
+def mtl_demo(tiny: bool):
+    from repro.core import DMTRLEstimator
+    from repro.data.synthetic import synthetic
+    from repro.serve import ScoreRequest
+
+    m, d = (6, 24) if tiny else (16, 100)
+    n_tr = 60 if tiny else 200
+    print(f"fitting DMTRL on Synthetic-1 ({m} tasks) for the scoring demo...")
+    sp = synthetic(1, m=m, d=d, n_train_avg=n_tr, n_test_avg=40, seed=0)
+    est = DMTRLEstimator(
+        loss="hinge", lam=1e-4, outer_iters=2, rounds=4, local_iters=64,
+        block_size=32, seed=0,
+    ).fit(sp.train)
+    print(f"  test accuracy: {est.score(sp.test):.3f}")
+
+    engine = est.scoring_engine(batch=4)
+    rng = np.random.RandomState(1)
+    reqs = []
+    for _ in range(7):  # odd count: exercises the padded final batch
+        t = int(rng.randint(m))
+        j = int(rng.randint(int(sp.test.n[t])))
+        reqs.append(ScoreRequest(task=t, x=np.asarray(sp.test.x[t, j])))
+    print(f"serving {len(reqs)} scoring requests (batch=4, fixed-shape step)...")
+    done = engine.run(reqs)
+    for i, r in enumerate(done):
+        print(f"  req{i}: task={r.task}  score={r.score:+.3f}  label={r.label:+.0f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mtl", action="store_true",
+                    help="run the MTL scoring demo instead of the LM demo")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized shapes for the MTL demo")
+    args = ap.parse_args()
+    if args.mtl:
+        mtl_demo(args.tiny)
+    else:
+        from repro.configs import ARCH_IDS
+
+        if args.arch not in ARCH_IDS:
+            raise SystemExit(f"unknown arch {args.arch!r}; have {sorted(ARCH_IDS)}")
+        lm_demo(args.arch, args.max_new)
 
 
 if __name__ == "__main__":

@@ -2,17 +2,16 @@
 multi-task heads on its features — the full backbone <-> paper-technique
 bridge.
 
-    PYTHONPATH=src python examples/train_lm_mtl.py --steps 200 --arch gemma3-1b
+Install the package once (``pip install -e .``) or export
+``PYTHONPATH=src``, then:
+
+    python examples/train_lm_mtl.py --steps 200 --arch gemma3-1b
 
 (reduced config on CPU; on a pod the same script scales via --no-reduced +
 repro.launch.train's sharded path.)
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 
 def _round_up(x: int, k: int) -> int:

@@ -1,13 +1,43 @@
-"""DMTRL core: the paper's contribution as composable JAX modules."""
-from .dmtrl import DMTRLConfig, DMTRLResult, fit, w_step, make_w_step_round
+"""DMTRL core: the paper's contribution as composable JAX modules.
+
+The supported training surface is the engine-agnostic facade:
+
+    from repro.core import DMTRLEstimator
+    est = DMTRLEstimator(engine="distributed", mesh=mesh, loss="hinge")
+    est.fit(train).score(test)
+
+``fit`` / ``fit_distributed`` / ``fit_async`` remain importable as thin
+deprecated wrappers over the same engine implementations.
+"""
+import functools as _functools
+import warnings as _warnings
+
+from .dmtrl import (
+    DMTRLConfig,
+    DMTRLResult,
+    WarmStart,
+    w_step,
+    make_w_step_round,
+)
+from .dmtrl import fit as _fit_impl
 from .distributed import (
+    DistributedOptions,
     MeshAxes,
-    fit_distributed,
     make_distributed_round,
     make_local_solve,
     server_reduce,
 )
-from .async_dmtrl import fit_async, make_async_tick
+from .distributed import fit_distributed as _fit_distributed_impl
+from .async_dmtrl import AsyncOptions, make_async_tick
+from .async_dmtrl import fit_async as _fit_async_impl
+from .engines import (
+    Engine,
+    EngineResult,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+from .estimator import DMTRLEstimator, NotFittedError
 from .losses import Loss, get_loss, registered_losses
 from .mtl_data import MTLData, from_task_list, normalize_rows
 from .omega import (
@@ -17,27 +47,85 @@ from .omega import (
     rho_lemma10,
     rho_spectral,
 )
+from .omega_regularizers import (
+    OmegaRegularizer,
+    available_regularizers,
+    get_regularizer,
+    register_regularizer,
+)
 from .solver_backends import (
     SolverBackend,
     available_backends,
     get_backend,
     register_backend,
 )
-from . import baselines, convergence, dual, feature_maps, sdca, solver_backends
+from . import (
+    baselines,
+    convergence,
+    dual,
+    engines,
+    estimator,
+    feature_maps,
+    omega_regularizers,
+    sdca,
+    solver_backends,
+)
+
+
+def _deprecated(fn, replacement: str):
+    @_functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        _warnings.warn(
+            f"repro.core.{fn.__name__} is deprecated; use {replacement} "
+            "(see docs/DESIGN.md §8 for the migration table)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    wrapper.__doc__ = (
+        f"Deprecated: use {replacement}.\n\n{fn.__doc__ or ''}"
+    )
+    return wrapper
+
+
+fit = _deprecated(_fit_impl, 'DMTRLEstimator(engine="reference").fit')
+fit_distributed = _deprecated(
+    _fit_distributed_impl, 'DMTRLEstimator(engine="distributed", mesh=...).fit'
+)
+fit_async = _deprecated(
+    _fit_async_impl,
+    'DMTRLEstimator(engine="async", mesh=..., '
+    "async_options=AsyncOptions(...)).fit",
+)
 
 __all__ = [
     "DMTRLConfig",
     "DMTRLResult",
+    "DMTRLEstimator",
+    "NotFittedError",
+    "WarmStart",
     "fit",
     "w_step",
     "make_w_step_round",
     "MeshAxes",
+    "DistributedOptions",
+    "AsyncOptions",
     "fit_distributed",
     "make_distributed_round",
     "make_local_solve",
     "server_reduce",
     "fit_async",
     "make_async_tick",
+    "Engine",
+    "EngineResult",
+    "available_engines",
+    "get_engine",
+    "register_engine",
+    "OmegaRegularizer",
+    "available_regularizers",
+    "get_regularizer",
+    "register_regularizer",
     "Loss",
     "get_loss",
     "registered_losses",
@@ -56,7 +144,10 @@ __all__ = [
     "baselines",
     "convergence",
     "dual",
+    "engines",
+    "estimator",
     "feature_maps",
+    "omega_regularizers",
     "sdca",
     "solver_backends",
 ]

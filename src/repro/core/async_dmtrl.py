@@ -75,6 +75,7 @@ the correctness anchor for the whole sync/async refactor.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -83,11 +84,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import convergence as conv_mod
 from . import dual as dual_mod
-from . import omega as omega_mod
+from . import omega_regularizers as omega_reg
 from .distributed import (
     MeshAxes,
     _axis_size,
     init_state,
+    install_initial_state,
     make_local_solve,
     pad_sigma_blocks,
     round_in_specs,
@@ -96,11 +98,41 @@ from .distributed import (
     server_reduce,
     shard_mtl_data,
 )
-from .dmtrl import DMTRLConfig, _rho_value
+from .dmtrl import DMTRLConfig, WarmStart, _rho_value, validate_async_fields
 from .losses import get_loss
 from .mtl_data import MTLData
 
 Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncOptions:
+    """Staleness knobs of the async engine, split out of the legacy
+    kitchen-sink config (the new home of ``DMTRLConfig.tau`` & friends).
+
+    Validation is eager: ``AsyncOptions(tau="fast")`` raises at
+    construction with a clear message, not mid-fit.
+    """
+
+    tau: Union[int, str] = 0  # SSP staleness bound; "auto" adapts online
+    tau_max: int = 8  # clamp for the tau="auto" controller
+    async_delays: Optional[Tuple[int, ...]] = None  # simulated per-worker
+    #               solve ticks; None == homogeneous workers
+    omega_delay: int = 0  # server commits the Sigma install may lag behind
+
+    def __post_init__(self):
+        validate_async_fields(
+            self.tau, self.tau_max, self.async_delays, self.omega_delay
+        )
+
+    def merge_into(self, cfg: DMTRLConfig) -> DMTRLConfig:
+        return dataclasses.replace(
+            cfg,
+            tau=self.tau,
+            tau_max=self.tau_max,
+            async_delays=self.async_delays,
+            omega_delay=self.omega_delay,
+        )
 
 
 def make_async_tick(
@@ -188,22 +220,32 @@ def fit_async(
     cfg: DMTRLConfig,
     raw: MTLData,
     mesh: Mesh,
-    axes: MeshAxes = MeshAxes(),
+    axes: Optional[MeshAxes] = None,
     track: bool = True,
+    *,
+    options: Optional[AsyncOptions] = None,
+    init: Optional[WarmStart] = None,
+    regularizer=None,
 ):
     """Algorithm 1 under the bounded-staleness execution model.
 
     Same signature/returns as ``fit_distributed``: (W, sigma, state, hist).
     The history additionally carries per-commit staleness events and the
     simulated-clock tick of every objective sample.
+
+    ``options`` (AsyncOptions) overrides the legacy staleness fields of the
+    config; ``init`` warm-starts from raw-shaped (alpha, sigma, omega);
+    ``regularizer`` overrides the Omega family member.
     """
+    if axes is None:
+        axes = MeshAxes()
+    if options is not None:
+        cfg = options.merge_into(cfg)
+    # cfg may predate the eager __post_init__ validation (e.g. built via
+    # dataclasses.replace on old pickles); keep the fit-time check too.
+    validate_async_fields(cfg.tau, cfg.tau_max, cfg.async_delays, cfg.omega_delay)
     tau_auto = cfg.tau == "auto"
-    if not tau_auto and not isinstance(cfg.tau, int):
-        raise ValueError(f'tau must be an int >= 0 or "auto", got {cfg.tau!r}')
-    if not tau_auto and cfg.tau < 0:
-        raise ValueError(f"tau must be >= 0, got {cfg.tau}")
-    if cfg.omega_delay < 0:
-        raise ValueError(f"omega_delay must be >= 0, got {cfg.omega_delay}")
+    reg = omega_reg.resolve_regularizer(cfg, regularizer)
     loss = get_loss(cfg.loss)
     data, m, d = shard_mtl_data(raw, mesh, axes)
     state = init_state(data, mesh, axes, m, d)
@@ -256,6 +298,10 @@ def fit_async(
             mask[g * m_loc : (g + 1) * m_loc] = True
         return jnp.asarray(mask)
 
+    state = install_initial_state(
+        state, raw, data, m, cfg, mesh, axes, reg, init, w_from_alpha
+    )
+
     # snapshots start in sync with the live state
     W_snap = state.W
     sigma_snap = state.sigma
@@ -274,7 +320,8 @@ def fit_async(
 
     for p in range(cfg.outer_iters):
         rho = _rho_value(cfg, state.sigma if pending_install is None
-                         else pending_install[0], n_blocks_scale=float(n_pods))
+                         else pending_install[0],
+                         n_blocks_scale=float(n_pods), reg=reg)
         tick_fn = make_async_tick(cfg, mesh, axes, m, data.n_max, d, rho)
         # same key schedule as fit_distributed => bit-equal coordinate draws
         key, outer_key = jax.random.split(key)
@@ -380,8 +427,8 @@ def fit_async(
             # Sigma must never be dropped — it lands at the barrier instead
             state = install_sigma(*pending_install)
             pending_install = None
-        if cfg.learn_omega:
-            sigma_t, omega_t = omega_mod.omega_step(
+        if reg.learns:
+            sigma_t, omega_t = reg.step(
                 state.W[: raw.m], cfg.omega_jitter
             )
             sig, om = pad_sigma_blocks(

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dual as dual_mod
-from .losses import Loss, get_loss
+from .losses import get_loss
 from .mtl_data import MTLData
 
 Array = jax.Array
@@ -123,7 +123,6 @@ def rho_min_power_iteration(
     val = 0.0
     for _ in range(iters):
         # whitened operator: A = D^{-1/2} S D^{-1/2}, then project
-        bw = b * dd[:, None]
         num = jnp.einsum("ij,jd->id", sigma, b)
         b_new = project(num / (dd**2)[:, None])
         nrm = jnp.sqrt(jnp.sum((b_new * dd[:, None]) ** 2))

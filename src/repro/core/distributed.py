@@ -28,7 +28,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import shard_map, shard_map_unchecked
 from . import dual as dual_mod
 from . import omega as omega_mod
-from .dmtrl import DMTRLConfig, _rho_value
+from . import omega_regularizers as omega_reg
+from .dmtrl import DMTRLConfig, WarmStart, _rho_value
 from .losses import get_loss
 from .mtl_data import MTLData
 from .solver_backends import get_backend
@@ -41,6 +42,27 @@ class MeshAxes:
     data: str = "data"  # tasks
     model: Optional[str] = None  # feature dim
     pod: Optional[str] = None  # intra-task samples
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedOptions:
+    """Mesh-engine knobs, split out of the legacy kitchen-sink config.
+
+    The estimator facade passes these alongside the core ``DMTRLConfig``;
+    the deprecated ``fit_distributed`` keeps reading the equivalent legacy
+    config fields when no options object is given.
+    """
+
+    axes: MeshAxes = MeshAxes()
+    dist_block_hoisted: bool = False  # hoisted block-Gram distributed round
+    gram_bf16: bool = False  # bf16 MXU inputs in the distributed gram build
+
+    def merge_into(self, cfg: DMTRLConfig) -> DMTRLConfig:
+        return dataclasses.replace(
+            cfg,
+            dist_block_hoisted=self.dist_block_hoisted,
+            gram_bf16=self.gram_bf16,
+        )
 
 
 def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
@@ -260,6 +282,48 @@ def pad_sigma_blocks(sigma_t, omega_t, m: int, m_true: int, jitter: float):
     return sigma, omega
 
 
+def install_initial_state(
+    state: "DistributedState",
+    raw: MTLData,
+    data: MTLData,
+    m: int,
+    cfg: DMTRLConfig,
+    mesh: Mesh,
+    axes: MeshAxes,
+    reg,
+    init,
+    w_from_alpha,
+) -> "DistributedState":
+    """Install a warm start (``init``) or a custom-init regularizer's Sigma
+    into freshly padded mesh state, rederiving W(alpha). Shared by the sync
+    and async engines so their tau=0 bit-parity anchor cannot drift."""
+    if init is None and not reg.custom_init:
+        return state
+    if init is not None:
+        sigma_t = jnp.asarray(init.sigma, data.x.dtype)
+        omega_t = jnp.asarray(init.omega, data.x.dtype)
+    else:
+        sigma_t, omega_t = reg.init(raw.m, data.x.dtype)
+    sig, om = pad_sigma_blocks(sigma_t, omega_t, m, raw.m, cfg.omega_jitter)
+    sr = NamedSharding(mesh, P(axes.data, None))
+    state = dataclasses.replace(
+        state,
+        sigma=jax.device_put(sig, sr),
+        omega=jax.device_put(om, sr),
+    )
+    if init is not None:
+        alpha0 = jnp.zeros((m, data.n_max), data.x.dtype)
+        alpha0 = alpha0.at[: raw.m, : raw.n_max].set(
+            jnp.asarray(init.alpha, data.x.dtype)
+        )
+        sv = NamedSharding(mesh, P(axes.data, axes.pod))
+        state = dataclasses.replace(state, alpha=jax.device_put(alpha0, sv))
+        state = dataclasses.replace(
+            state, W=w_from_alpha(state.alpha, state.sigma)
+        )
+    return state
+
+
 def server_reduce(cfg: DMTRLConfig, axes: MeshAxes, sigma_rows, db):
     """The server half of one round, as a shard_map body fragment:
     all_gather the workers' delta_b rows and apply the Sigma-coupled
@@ -331,12 +395,28 @@ def fit_distributed(
     cfg: DMTRLConfig,
     raw: MTLData,
     mesh: Mesh,
-    axes: MeshAxes = MeshAxes(),
+    axes: Optional[MeshAxes] = None,
     track: bool = True,
+    *,
+    options: Optional[DistributedOptions] = None,
+    init: Optional[WarmStart] = None,
+    regularizer=None,
 ):
     """Full Algorithm 1 on a mesh. Semantically equal to dmtrl.fit when
     pod axis is absent (tested); with pods the CoCoA block structure is finer
-    (m*pods blocks) so iterates differ but convergence is preserved."""
+    (m*pods blocks) so iterates differ but convergence is preserved.
+
+    ``options`` overrides the legacy per-engine config fields; ``init``
+    warm-starts from raw-shaped (alpha, sigma, omega); ``regularizer``
+    overrides the Omega family member (see core.omega_regularizers).
+    """
+    if axes is None:
+        # an explicit axes argument wins; otherwise the options object may
+        # carry the mesh mapping (the estimator path resolves it the same way)
+        axes = options.axes if options is not None else MeshAxes()
+    if options is not None:
+        cfg = options.merge_into(cfg)
+    reg = omega_reg.resolve_regularizer(cfg, regularizer)
     loss = get_loss(cfg.loss)
     data, m, d = shard_mtl_data(raw, mesh, axes)
     state = init_state(data, mesh, axes, m, d)
@@ -356,8 +436,12 @@ def fit_distributed(
     def w_from_alpha(alpha, sigma):
         return dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
 
+    state = install_initial_state(
+        state, raw, data, m, cfg, mesh, axes, reg, init, w_from_alpha
+    )
+
     for p in range(cfg.outer_iters):
-        rho = _rho_value(cfg, state.sigma, n_blocks_scale=float(n_pods))
+        rho = _rho_value(cfg, state.sigma, n_blocks_scale=float(n_pods), reg=reg)
         round_fn = make_distributed_round(cfg, mesh, axes, m, data.n_max, d, rho)
         # same key schedule as dmtrl.fit/w_step => bit-equal coordinate draws
         key, outer_key = jax.random.split(key)
@@ -382,11 +466,11 @@ def fit_distributed(
                 hist["primal"].append(float(pp))
                 hist["gap"].append(float(pp - dd))
         rounds_seen += cfg.rounds
-        if cfg.learn_omega:
+        if reg.learns:
             # Omega-step must see only the REAL tasks: padded (inert) tasks
             # would otherwise distort the trace-1 normalization.
             W_true = state.W[: raw.m]
-            sigma_t, omega_t = omega_mod.omega_step(W_true, cfg.omega_jitter)
+            sigma_t, omega_t = reg.step(W_true, cfg.omega_jitter)
             sigma, omega = pad_sigma_blocks(
                 sigma_t, omega_t, m, raw.m, cfg.omega_jitter
             )

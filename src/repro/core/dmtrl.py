@@ -18,14 +18,15 @@ per-round math; this module is the semantic oracle it is tested against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import numbers
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import dual as dual_mod
-from . import omega as omega_mod
+from . import omega_regularizers as omega_reg
 from .losses import get_loss
 from .mtl_data import MTLData
 from .solver_backends import get_backend
@@ -33,8 +34,56 @@ from .solver_backends import get_backend
 Array = jax.Array
 
 
+def validate_tau(tau) -> None:
+    """Eagerly reject malformed staleness bounds (e.g. tau="fast") so the
+    error surfaces at config/option construction, not mid-fit."""
+    if tau == "auto":
+        return
+    if not isinstance(tau, int) or isinstance(tau, bool):
+        raise ValueError(f'tau must be an int >= 0 or "auto", got {tau!r}')
+    if tau < 0:
+        raise ValueError(f"tau must be >= 0, got {tau}")
+
+
+def validate_async_fields(tau, tau_max, async_delays, omega_delay) -> None:
+    """Shared eager validation for DMTRLConfig (legacy surface) and
+    AsyncOptions (the new home of these knobs)."""
+    validate_tau(tau)
+    if not isinstance(tau_max, int) or isinstance(tau_max, bool) or tau_max < 0:
+        raise ValueError(f"tau_max must be an int >= 0, got {tau_max!r}")
+    if (
+        not isinstance(omega_delay, int)
+        or isinstance(omega_delay, bool)
+        or omega_delay < 0
+    ):
+        raise ValueError(f"omega_delay must be an int >= 0, got {omega_delay!r}")
+    if async_delays is not None:
+        # numbers.Integral admits numpy ints (delay schedules are often
+        # built from numpy arrays); _worker_delays coerces them with int()
+        bad = [
+            v
+            for v in async_delays
+            if not isinstance(v, numbers.Integral)
+            or isinstance(v, bool)
+            or v < 1
+        ]
+        if bad:
+            raise ValueError(
+                f"async_delays entries must be ints >= 1, got {async_delays!r}"
+            )
+
+
 @dataclasses.dataclass(frozen=True)
 class DMTRLConfig:
+    """Core algorithm config shared by every engine.
+
+    The per-engine knobs at the bottom (async staleness, distributed gram
+    options) are the LEGACY kitchen-sink surface kept for the deprecated
+    ``fit_*`` entry points; the estimator facade takes them as typed
+    ``AsyncOptions`` / ``DistributedOptions`` instead and rejects them here
+    (core/estimator.py).
+    """
+
     loss: str = "hinge"
     lam: float = 1e-3  # lambda in Eq. (1)
     eta: float = 1.0  # aggregation parameter (paper uses 1.0)
@@ -48,22 +97,49 @@ class DMTRLConfig:
     rho_mode: str = "lemma10"  # "lemma10" | "spectral" | "fixed"
     rho_fixed: float = 1.0
     omega_jitter: float = 1e-6
-    learn_omega: bool = True  # False => STL-style fixed Sigma
+    learn_omega: bool = True  # False => STL-style fixed Sigma (legacy alias
+    #               for omega_regularizer="identity_stl")
+    omega_regularizer: str = "trace_constraint"  # family member name,
+    #               resolved through core.omega_regularizers
     seed: int = 0
     gram_bf16: bool = False  # bf16 MXU inputs in the distributed gram build
     dist_block_hoisted: bool = False  # hoisted block-Gram distributed round
     track_every: int = 1  # record objectives every k rounds
-    # --- async engine (core/async_dmtrl.py) -------------------------------
-    tau: object = 0  # staleness bound: a worker may run at most tau rounds
-    #               ahead of the slowest worker (0 == bulk-synchronous);
-    #               "auto" adapts the bound online from the observed
-    #               staleness histogram (see async_dmtrl._adapt_tau)
+    # --- async engine (legacy; see async_dmtrl.AsyncOptions) ---------------
+    tau: Union[int, str] = 0  # staleness bound: a worker may run at most tau
+    #               rounds ahead of the slowest worker (0 == bulk-
+    #               synchronous); "auto" adapts the bound online from the
+    #               observed staleness histogram (async_dmtrl._adapt_tau)
     tau_max: int = 8  # upper bound for the tau="auto" adaptation
     async_delays: Optional[tuple] = None  # per-worker solve duration in
     #               simulated ticks; None == all 1 (homogeneous workers)
     omega_delay: int = 0  # server commits the Omega-step install waits
     #               for; >0 lets the first commits of the next W-step run
     #               against the stale Sigma (0 == barrier, same as sync)
+
+    def __post_init__(self):
+        validate_async_fields(
+            self.tau, self.tau_max, self.async_delays, self.omega_delay
+        )
+        if self.omega_regularizer not in omega_reg.available_regularizers():
+            raise ValueError(
+                f"unknown omega_regularizer {self.omega_regularizer!r}; "
+                f"have {sorted(omega_reg.available_regularizers())}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmStart:
+    """Prior state to continue training from (estimator.partial_fit).
+
+    ``alpha``: (m, n_max) dual variables, ``sigma``/``omega``: (m, m) task
+    covariance/precision — all at the RAW (unpadded) problem size. W is
+    always rederived as W(alpha) under sigma, never carried separately.
+    """
+
+    alpha: Array
+    sigma: Array
+    omega: Array
 
 
 @dataclasses.dataclass
@@ -76,12 +152,20 @@ class DMTRLResult:
     rho_per_outer: List[float]
 
 
-def _rho_value(cfg: DMTRLConfig, sigma: Array, n_blocks_scale: float = 1.0) -> float:
+def _rho_value(
+    cfg: DMTRLConfig,
+    sigma: Array,
+    n_blocks_scale: float = 1.0,
+    reg: Optional[omega_reg.OmegaRegularizer] = None,
+) -> float:
+    """rho safety bound for the current Sigma, via the regularizer family
+    (every member supplies its bound; the default is the paper's)."""
+    if reg is None:
+        reg = omega_reg.resolve_regularizer(cfg)
+    rho = reg.rho(sigma, cfg.eta, cfg.rho_mode, cfg.rho_fixed)
     if cfg.rho_mode == "fixed":
-        return float(cfg.rho_fixed)
-    if cfg.rho_mode == "spectral":
-        return float(omega_mod.rho_spectral(sigma, cfg.eta)) * n_blocks_scale
-    return float(omega_mod.rho_lemma10(sigma, cfg.eta)) * n_blocks_scale
+        return float(rho)
+    return float(rho) * n_blocks_scale
 
 
 def make_w_step_round(cfg: DMTRLConfig, data: MTLData, rho: float):
@@ -148,13 +232,32 @@ def w_step(
     return alpha, W, {k: np.asarray(v) for k, v in hist.items()}
 
 
-def fit(cfg: DMTRLConfig, data: MTLData, track: bool = True) -> DMTRLResult:
-    """Full Algorithm 1: P alternations of (W-step, Omega-step)."""
+def fit(
+    cfg: DMTRLConfig,
+    data: MTLData,
+    track: bool = True,
+    *,
+    init: Optional[WarmStart] = None,
+    regularizer=None,
+) -> DMTRLResult:
+    """Full Algorithm 1: P alternations of (W-step, Omega-step).
+
+    ``init`` warm-starts from a prior (alpha, sigma, omega) — W is rederived
+    as W(alpha); ``regularizer`` overrides the Omega family member resolved
+    from the config (an ``OmegaRegularizer`` instance or name).
+    """
+    reg = omega_reg.resolve_regularizer(cfg, regularizer)
     key = jax.random.PRNGKey(cfg.seed)
     m, n_max = data.m, data.n_max
-    alpha = jnp.zeros((m, n_max), data.x.dtype)
-    W = jnp.zeros((m, data.d), data.x.dtype)
-    sigma, omega = omega_mod.init_sigma(m, data.x.dtype)
+    if init is not None:
+        alpha = jnp.asarray(init.alpha, data.x.dtype)
+        sigma = jnp.asarray(init.sigma, data.x.dtype)
+        omega = jnp.asarray(init.omega, data.x.dtype)
+        W = dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
+    else:
+        alpha = jnp.zeros((m, n_max), data.x.dtype)
+        W = jnp.zeros((m, data.d), data.x.dtype)
+        sigma, omega = reg.init(m, data.x.dtype)
 
     history: Dict[str, List[np.ndarray]] = {
         "round": [],
@@ -166,7 +269,7 @@ def fit(cfg: DMTRLConfig, data: MTLData, track: bool = True) -> DMTRLResult:
     rhos: List[float] = []
     rounds_seen = 0
     for p in range(cfg.outer_iters):
-        rho = _rho_value(cfg, sigma)
+        rho = _rho_value(cfg, sigma, reg=reg)
         rhos.append(rho)
         key, sub = jax.random.split(key)
         alpha, W, hist = w_step(cfg, data, alpha, W, sigma, rho, sub, track=track)
@@ -177,9 +280,9 @@ def fit(cfg: DMTRLConfig, data: MTLData, track: bool = True) -> DMTRLResult:
             history["gap"].append(hist["gap"])
             history["outer"].append(np.full_like(hist["round"], p))
         rounds_seen += cfg.rounds
-        if cfg.learn_omega:
+        if reg.learns:
             # Algorithm 1 row 11 runs after every W-step, including the last.
-            sigma, omega = omega_mod.omega_step(W, cfg.omega_jitter)
+            sigma, omega = reg.step(W, cfg.omega_jitter)
             # Sigma changed => the dual problem (K) changed; W(alpha) must be
             # recomputed under the new Sigma (B is Sigma-independent).
             W = dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)

@@ -144,6 +144,15 @@ def predictions(data: MTLData, W: Array) -> Array:
     return jnp.einsum("mnd,md->mn", data.x, W)
 
 
+def task_scores(W: Array, X: Array, tasks: Array) -> Array:
+    """Per-row scores z_n = w_{tasks[n]}^T x_n for flat request batches.
+
+    The single scoring kernel shared by the estimator's predict path and
+    the batched serving engine (serve/mtl.py) — W: (m, d), X: (n, d),
+    tasks: (n,) int -> (n,)."""
+    return jnp.einsum("nd,nd->n", X, W[tasks])
+
+
 def error_rate(data: MTLData, W: Array) -> Array:
     """Masked averaged-over-tasks classification error (paper's metric)."""
     z = predictions(data, W)

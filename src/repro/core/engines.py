@@ -1,0 +1,187 @@
+"""Training-engine registry: one facade contract over the three drivers.
+
+Mirrors the solver-backend registry (docs/DESIGN.md §5): a config names an
+engine, the estimator resolves it with ``get_engine`` and calls the uniform
+
+    engine.run(cfg, data, mesh=..., axes=..., options=..., regularizer=...,
+               init=..., track=...) -> EngineResult
+
+contract. The registered engines wrap the existing drivers bit-identically
+(the adapters only normalize signatures and returns — parity-tested):
+
+  reference    single-process Algorithm 1 (core/dmtrl.py:fit); the
+               semantic oracle. No mesh, no options.
+  distributed  parameter-server W-step on a JAX mesh
+               (core/distributed.py:fit_distributed); DistributedOptions.
+  async        bounded-staleness SSP engine
+               (core/async_dmtrl.py:fit_async); AsyncOptions (+ the
+               distributed knobs via DistributedOptions merged upstream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .async_dmtrl import AsyncOptions, fit_async as _fit_async
+from .distributed import (
+    DistributedOptions,
+    MeshAxes,
+    fit_distributed as _fit_distributed,
+)
+from .dmtrl import DMTRLConfig, WarmStart, fit as _fit_reference
+from .mtl_data import MTLData
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Engine-agnostic fit result, always at the RAW (unpadded) problem
+    size regardless of mesh padding — what the estimator stores."""
+
+    W: np.ndarray  # (m, d) task weight rows
+    alpha: np.ndarray  # (m, n_max) dual variables
+    sigma: np.ndarray  # (m, m) task covariance
+    omega: np.ndarray  # (m, m) task precision
+    history: Dict[str, np.ndarray]
+    rho_per_outer: Optional[List[float]] = None  # reference engine only
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """A named way to run Algorithm 1 end to end."""
+
+    name: str
+    description: str
+    needs_mesh: bool
+    options_cls: Optional[type]
+    # run(cfg, data, *, mesh, axes, options, regularizer, init, track)
+    run: Callable[..., EngineResult]
+
+
+_REGISTRY: Dict[str, Engine] = {}
+
+
+def register_engine(engine: Engine) -> Engine:
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> Engine:
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown engine {name!r}; have {sorted(_REGISTRY)}"
+        ) from e
+
+
+def available_engines() -> Dict[str, Engine]:
+    return dict(sorted(_REGISTRY.items()))
+
+
+def _default_mesh(axes: MeshAxes):
+    """A 1-device mesh so mesh engines stay usable without ceremony."""
+    return jax.make_mesh((1,), (axes.data,))
+
+
+def _unpad_state(state, raw: MTLData) -> tuple:
+    """(alpha, omega) rows/cols of the REAL tasks from padded mesh state."""
+    alpha = np.asarray(state.alpha)[: raw.m, : raw.n_max]
+    omega = np.asarray(state.omega)[: raw.m, : raw.m]
+    return alpha, omega
+
+
+def _run_reference(
+    cfg: DMTRLConfig,
+    data: MTLData,
+    *,
+    mesh=None,
+    axes: Optional[MeshAxes] = None,
+    options: Any = None,
+    regularizer=None,
+    init: Optional[WarmStart] = None,
+    track: bool = True,
+) -> EngineResult:
+    if mesh is not None or axes is not None or options is not None:
+        raise ValueError(
+            "the reference engine runs single-process: mesh/axes/options "
+            'are distributed-only (use engine="distributed" or "async")'
+        )
+    res = _fit_reference(cfg, data, track=track, init=init, regularizer=regularizer)
+    return EngineResult(
+        W=np.asarray(res.W),
+        alpha=np.asarray(res.alpha),
+        sigma=np.asarray(res.sigma),
+        omega=np.asarray(res.omega),
+        history=res.history,
+        rho_per_outer=list(res.rho_per_outer),
+    )
+
+
+def _make_mesh_run(fit_fn: Callable) -> Callable[..., EngineResult]:
+    """One adapter for both mesh engines: resolve a default mesh, forward
+    to the driver (which resolves axes itself), unpad, pack EngineResult."""
+
+    def run(
+        cfg: DMTRLConfig,
+        data: MTLData,
+        *,
+        mesh=None,
+        axes: Optional[MeshAxes] = None,
+        options=None,
+        regularizer=None,
+        init: Optional[WarmStart] = None,
+        track: bool = True,
+    ) -> EngineResult:
+        if mesh is None:
+            ax = axes or getattr(options, "axes", None) or MeshAxes()
+            mesh = _default_mesh(ax)
+        W, sigma, state, hist = fit_fn(
+            cfg, data, mesh, axes, track=track,
+            options=options, init=init, regularizer=regularizer,
+        )
+        alpha, omega = _unpad_state(state, data)
+        return EngineResult(
+            W=np.asarray(W), alpha=alpha, sigma=np.asarray(sigma),
+            omega=omega, history=hist,
+        )
+
+    return run
+
+
+_run_distributed = _make_mesh_run(_fit_distributed)
+_run_async = _make_mesh_run(_fit_async)
+
+
+register_engine(
+    Engine(
+        name="reference",
+        description="single-process Algorithm 1 (vmap over tasks); the "
+        "semantic oracle the mesh engines are tested against",
+        needs_mesh=False,
+        options_cls=None,
+        run=_run_reference,
+    )
+)
+register_engine(
+    Engine(
+        name="distributed",
+        description="parameter-server W-step sharded over a JAX mesh "
+        "(data/model/pod axes); bulk-synchronous rounds",
+        needs_mesh=True,
+        options_cls=DistributedOptions,
+        run=_run_distributed,
+    )
+)
+register_engine(
+    Engine(
+        name="async",
+        description="bounded-staleness (SSP) engine: workers commit "
+        "against snapshots at most tau rounds stale; tau=0 == distributed",
+        needs_mesh=True,
+        options_cls=AsyncOptions,
+        run=_run_async,
+    )
+)

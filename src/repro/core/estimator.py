@@ -1,0 +1,354 @@
+"""DMTRLEstimator — the engine-agnostic training/serving facade.
+
+One object covers what used to take three divergent entry points
+(``fit`` / ``fit_distributed`` / ``fit_async``) plus hand-rolled predict
+code:
+
+    est = DMTRLEstimator(engine="async", mesh=mesh,
+                         async_options=AsyncOptions(tau=2),
+                         loss="hinge", lam=1e-4, rounds=8)
+    est.fit(train).score(test)
+    z = est.decision_function(x_batch, tasks=task_ids)
+
+Design (docs/DESIGN.md §8):
+  * engines resolve through ``core.engines`` (same registry pattern as the
+    solver backends) — the estimator is bit-identical to the engine's
+    deprecated direct entry point (parity-tested);
+  * per-engine knobs arrive as typed ``DistributedOptions`` /
+    ``AsyncOptions`` objects; passing them as core config fields raises so
+    async-only knobs can no longer leak into the reference engine;
+  * the Omega regularizer is a named family member
+    (``core.omega_regularizers``) — the paper's trace_constraint by
+    default;
+  * ``partial_fit`` warm-starts from the previous (alpha, Sigma) so
+    training continues instead of restarting;
+  * ``predict``/``decision_function``/``score`` serve the fitted W, and
+    ``scoring_engine()`` wires it into the batched serving surface
+    (serve/mtl.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import dual as dual_mod
+from .async_dmtrl import AsyncOptions
+from .distributed import DistributedOptions, MeshAxes
+from .dmtrl import DMTRLConfig, WarmStart
+from .engines import Engine, EngineResult, get_engine
+from .losses import get_loss
+from .mtl_data import MTLData
+from .omega_regularizers import OmegaRegularizer, get_regularizer
+
+# engine-specific legacy config fields the facade refuses as core params
+_ASYNC_FIELDS = frozenset({"tau", "tau_max", "async_delays", "omega_delay"})
+_DIST_FIELDS = frozenset({"dist_block_hoisted", "gram_bf16"})
+_CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(DMTRLConfig))
+
+# history keys that index time and must continue, not restart, across
+# partial_fit calls (value added to the new segment = last max seen)
+_TIME_KEYS = ("round", "tick", "w_tick")
+# 0-based counters: continue at prev_max + 1
+_COUNTER_KEYS = ("outer", "w_round", "min_round")
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class DMTRLEstimator:
+    """Engine-agnostic DMTRL estimator with an sklearn-flavoured surface.
+
+    Parameters
+    ----------
+    engine : "reference" | "distributed" | "async" (core.engines registry)
+    config : optional pre-built core DMTRLConfig; core field kwargs
+        (``loss=``, ``lam=``, ``rounds=`` ...) override it. Engine-specific
+        legacy fields (``tau``, ``dist_block_hoisted``, ...) are rejected
+        here — pass ``async_options=AsyncOptions(...)`` /
+        ``distributed=DistributedOptions(...)`` instead.
+    mesh / axes : mesh engines only; a 1-device mesh is built when omitted.
+    regularizer : Omega family member name or OmegaRegularizer instance
+        (core.omega_regularizers); ``regularizer_params`` configure named
+        members (e.g. ``{"adjacency": A}`` for graph_laplacian).
+
+    Fitted attributes (trailing underscore): ``W_``, ``alpha_``,
+    ``sigma_``, ``omega_``, ``history_``, ``rho_per_outer_``.
+    """
+
+    def __init__(
+        self,
+        engine: str = "reference",
+        *,
+        config: Optional[DMTRLConfig] = None,
+        mesh=None,
+        axes: Optional[MeshAxes] = None,
+        distributed: Optional[DistributedOptions] = None,
+        async_options: Optional[AsyncOptions] = None,
+        regularizer: Union[str, OmegaRegularizer, None] = None,
+        regularizer_params: Optional[dict] = None,
+        **params,
+    ):
+        self.engine: Engine = get_engine(engine)
+
+        leaked = sorted((_ASYNC_FIELDS | _DIST_FIELDS) & params.keys())
+        if leaked:
+            raise ValueError(
+                f"{leaked} are per-engine options, not core config fields; "
+                "pass async_options=AsyncOptions(...) / "
+                "distributed=DistributedOptions(...) instead"
+            )
+        unknown = sorted(params.keys() - _CONFIG_FIELDS)
+        if unknown:
+            raise ValueError(
+                f"unknown config fields {unknown}; valid core fields: "
+                f"{sorted(_CONFIG_FIELDS - _ASYNC_FIELDS - _DIST_FIELDS)}"
+            )
+        cfg = config if config is not None else DMTRLConfig()
+        if params:
+            cfg = dataclasses.replace(cfg, **params)
+        self.config: DMTRLConfig = cfg
+
+        if self.engine.name == "reference":
+            if mesh is not None or axes is not None:
+                raise ValueError(
+                    'engine="reference" is single-process; mesh/axes need '
+                    'engine="distributed" or "async"'
+                )
+            if distributed is not None or async_options is not None:
+                raise ValueError(
+                    'engine="reference" takes no DistributedOptions/'
+                    "AsyncOptions — the facade keeps per-engine knobs out "
+                    "of the reference path"
+                )
+        if async_options is not None and self.engine.name != "async":
+            raise ValueError(
+                f'AsyncOptions need engine="async", got engine='
+                f"{self.engine.name!r}"
+            )
+        if distributed is not None and not isinstance(
+            distributed, DistributedOptions
+        ):
+            raise TypeError(
+                f"distributed= takes DistributedOptions, got "
+                f"{type(distributed).__name__}"
+            )
+        if async_options is not None and not isinstance(
+            async_options, AsyncOptions
+        ):
+            raise TypeError(
+                f"async_options= takes AsyncOptions, got "
+                f"{type(async_options).__name__}"
+            )
+        self.mesh = mesh
+        self.axes = axes
+        self.distributed_options = distributed
+        self.async_options = async_options
+
+        if regularizer is None:
+            # legacy learn_omega=False maps to the identity_stl member, same
+            # as the deprecated entry points (resolve_regularizer precedence)
+            regularizer = (
+                cfg.omega_regularizer if cfg.learn_omega else "identity_stl"
+            )
+        if isinstance(regularizer, str):
+            regularizer = get_regularizer(
+                regularizer, **(regularizer_params or {})
+            )
+        elif regularizer_params:
+            raise ValueError(
+                "regularizer_params only apply when regularizer is a name"
+            )
+        self.regularizer: OmegaRegularizer = regularizer
+        self._loss = get_loss(cfg.loss)
+        self._fitted = False
+        self.history_: Dict[str, np.ndarray] = {}
+        self.rho_per_outer_: list = []
+        self.n_fit_calls_: int = 0
+
+    # -- training -----------------------------------------------------------
+    def _engine_kwargs(self) -> dict:
+        options = None
+        if self.engine.options_cls is AsyncOptions:
+            options = self.async_options
+        elif self.engine.options_cls is DistributedOptions:
+            options = self.distributed_options
+        cfg = self.config
+        if (
+            self.engine.name == "async"
+            and self.distributed_options is not None
+        ):
+            # async reuses the distributed round internals; its gram knobs
+            # ride in through the merged config
+            cfg = self.distributed_options.merge_into(cfg)
+        axes = self.axes
+        if axes is None and self.distributed_options is not None:
+            axes = self.distributed_options.axes
+        return dict(cfg=cfg, mesh=self.mesh, axes=axes, options=options)
+
+    def _run(self, data: MTLData, init: Optional[WarmStart], track: bool):
+        kw = self._engine_kwargs()
+        cfg = kw.pop("cfg")
+        res: EngineResult = self.engine.run(
+            cfg, data, regularizer=self.regularizer, init=init, track=track, **kw
+        )
+        self._install(res, continued=init is not None)
+        return res
+
+    def _install(self, res: EngineResult, continued: bool) -> None:
+        self.W_ = res.W
+        self.alpha_ = res.alpha
+        self.sigma_ = res.sigma
+        self.omega_ = res.omega
+        if continued and self.history_:
+            self.history_ = _merge_histories(self.history_, res.history)
+        else:
+            self.history_ = dict(res.history)
+        if res.rho_per_outer is not None:
+            if continued:
+                self.rho_per_outer_.extend(res.rho_per_outer)
+            else:
+                self.rho_per_outer_ = list(res.rho_per_outer)
+        self._fitted = True
+        self.n_fit_calls_ += 1
+
+    def fit(self, data: MTLData, track: bool = True) -> "DMTRLEstimator":
+        """Run the full alternating procedure from scratch. Returns self."""
+        self.n_fit_calls_ = 0
+        self._run(data, init=None, track=track)
+        return self
+
+    def partial_fit(self, data: MTLData, track: bool = True) -> "DMTRLEstimator":
+        """Continue training from the current (alpha, Sigma) state.
+
+        The first call behaves like ``fit``; later calls warm-start every
+        engine from the previous dual variables and task covariance (W is
+        rederived as W(alpha)), appending to ``history_``.
+        """
+        init = None
+        if self._fitted:
+            init = WarmStart(
+                alpha=jnp.asarray(self.alpha_),
+                sigma=jnp.asarray(self.sigma_),
+                omega=jnp.asarray(self.omega_),
+            )
+        self._run(data, init=init, track=track)
+        return self
+
+    # -- inference ----------------------------------------------------------
+    def _check_fitted(self) -> None:
+        if not self._fitted:
+            raise NotFittedError(
+                "this DMTRLEstimator is not fitted yet; call fit(data) first"
+            )
+
+    def decision_function(
+        self,
+        X: Union[MTLData, np.ndarray],
+        tasks: Union[int, Sequence[int], None] = None,
+    ) -> np.ndarray:
+        """Raw scores z = w_task^T x.
+
+        ``X`` may be an MTLData (returns the (m, n_max) masked score matrix)
+        or an (n, d) / (d,) array with ``tasks`` a scalar or (n,) task ids.
+        """
+        self._check_fitted()
+        W = jnp.asarray(self.W_)
+        if isinstance(X, MTLData):
+            if tasks is not None:
+                raise ValueError(
+                    "tasks= only applies to array inputs; an MTLData is "
+                    "scored per task already (rows of the returned matrix)"
+                )
+            return np.asarray(dual_mod.predictions(X, W) * X.mask)
+        X = jnp.atleast_2d(jnp.asarray(X))
+        if X.shape[-1] != W.shape[1]:
+            raise ValueError(
+                f"X has {X.shape[-1]} features, the fitted W has {W.shape[1]}"
+            )
+        if tasks is None:
+            raise ValueError(
+                "array inputs need tasks= (scalar task id or one per row)"
+            )
+        t = np.broadcast_to(np.asarray(tasks, np.int32), (X.shape[0],))
+        if t.size and (t.min() < 0 or t.max() >= W.shape[0]):
+            raise ValueError(
+                f"task ids must be in [0, {W.shape[0]}), got "
+                f"[{t.min()}, {t.max()}]"
+            )
+        return np.asarray(dual_mod.task_scores(W, X, jnp.asarray(t)))
+
+    def predict(
+        self,
+        X: Union[MTLData, np.ndarray],
+        tasks: Union[int, Sequence[int], None] = None,
+    ) -> np.ndarray:
+        """Class labels (+-1) for classification losses, raw scores for
+        regression losses."""
+        z = self.decision_function(X, tasks)
+        if self._loss.is_classification:
+            return np.where(z >= 0.0, 1.0, -1.0).astype(z.dtype)
+        return z
+
+    def score(self, data: MTLData) -> float:
+        """Masked mean-per-task accuracy for classification losses,
+        explained variance for regression losses (paper's School metric)."""
+        self._check_fitted()
+        W = jnp.asarray(self.W_)
+        if self._loss.is_classification:
+            return 1.0 - float(dual_mod.error_rate(data, W))
+        return float(dual_mod.explained_variance(data, W))
+
+    @property
+    def history(self) -> Dict[str, np.ndarray]:
+        """Objective/staleness traces accumulated over fit/partial_fit."""
+        self._check_fitted()
+        return self.history_
+
+    # -- serving ------------------------------------------------------------
+    def scoring_engine(self, batch: int = 32):
+        """Batched MTL scoring engine over the fitted W (serve/mtl.py)."""
+        self._check_fitted()
+        from ..serve.mtl import MTLScoringEngine
+
+        return MTLScoringEngine(
+            self.W_, batch=batch, classify=self._loss.is_classification
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        state = "fitted" if self._fitted else "unfitted"
+        return (
+            f"DMTRLEstimator(engine={self.engine.name!r}, "
+            f"loss={self.config.loss!r}, "
+            f"regularizer={self.regularizer.name!r}, {state})"
+        )
+
+
+def _merge_histories(
+    old: Dict[str, np.ndarray], new: Dict[str, np.ndarray]
+) -> Dict[str, np.ndarray]:
+    """Append a continuation run's history: time-like keys are offset so
+    they continue where the previous run stopped, the rest concatenate."""
+    merged: Dict[str, np.ndarray] = {}
+    for k in new.keys() | old.keys():
+        if k not in old:
+            merged[k] = np.asarray(new[k])
+            continue
+        if k not in new:
+            merged[k] = np.asarray(old[k])
+            continue
+        o, n = np.asarray(old[k]), np.asarray(new[k])
+        if o.shape[1:] != n.shape[1:]:
+            raise ValueError(
+                f"history key {k!r} changed shape across partial_fit calls: "
+                f"{o.shape} vs {n.shape}"
+            )
+        if o.size and n.size and o.ndim == 1 and (
+            k in _TIME_KEYS or k in _COUNTER_KEYS
+        ):
+            n = n + o.max() + (1 if k in _COUNTER_KEYS else 0)
+        merged[k] = np.concatenate([o, n], axis=0)
+    return merged

@@ -14,7 +14,7 @@ materializable across workers). Provided maps:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,6 @@ qualitative structure the paper's claims rely on:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
-
 import numpy as np
 
 from repro.core.mtl_data import MTLData, from_task_list, train_test_split_tasks

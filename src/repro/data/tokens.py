@@ -11,7 +11,6 @@ import dataclasses
 from typing import Dict, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array

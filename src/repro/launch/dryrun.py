@@ -21,7 +21,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

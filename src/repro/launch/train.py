@@ -14,8 +14,6 @@ import json
 import os
 import time
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data.tokens import SyntheticTokenPipeline, TokenPipelineConfig, embedding_side_inputs

@@ -8,8 +8,7 @@ also the jnp oracle for the Pallas flash kernel (same math, same tiling).
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

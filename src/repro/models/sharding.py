@@ -14,7 +14,7 @@ models/transformer.init_params gets specs without manual bookkeeping.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -1,4 +1,22 @@
-"""Serving: batched prefill + decode engine with KV/SSM-state caches."""
-from .engine import Request, ServeConfig, ServingEngine, make_serve_step
+"""Serving: batched LM prefill+decode engine and batched MTL scoring.
 
-__all__ = ["Request", "ServeConfig", "ServingEngine", "make_serve_step"]
+Submodules load lazily (PEP 562): the MTL scoring surface must not pull
+in the LM model stack that ``engine`` imports (transformers, flash
+kernels), and vice versa.
+"""
+_LM = {"Request", "ServeConfig", "ServingEngine", "make_serve_step"}
+_MTL = {"MTLScoringEngine", "ScoreRequest", "make_score_step"}
+
+__all__ = sorted(_LM | _MTL)
+
+
+def __getattr__(name):
+    if name in _LM:
+        from . import engine
+
+        return getattr(engine, name)
+    if name in _MTL:
+        from . import mtl
+
+        return getattr(mtl, name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

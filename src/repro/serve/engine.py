@@ -6,14 +6,14 @@ the unit the dry-run lowers for the decode_32k / long_500k shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import DecodeCache, decode_step, init_decode_cache, prefill
+from repro.models import decode_step, prefill
 
 Array = jax.Array
 

@@ -1,0 +1,129 @@
+"""Batched MTL scoring: request queue -> fixed-shape jitted score step.
+
+The MTL analogue of ``serve/engine.py``: requests carry (task_id, feature
+vector), the engine packs them into fixed (batch, d) tiles so ONE jitted
+computation serves every batch (no per-request recompilation), gathers the
+per-task weight rows, and returns raw scores plus +-1 labels for
+classification models.
+
+    est = DMTRLEstimator(...).fit(train)
+    eng = est.scoring_engine(batch=64)          # or MTLScoringEngine(W)
+    done = eng.run([ScoreRequest(task=3, x=phi), ...])
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    """One scoring request: task id + feature vector (phi already applied).
+
+    The engine fills ``score`` (raw margin w_task^T x) and, for
+    classification models, ``label`` (+-1).
+    """
+
+    task: int
+    x: np.ndarray  # (d,)
+    score: Optional[float] = None
+    label: Optional[float] = None
+
+
+def make_score_step(W: Array):
+    """score_step(X (B, d), tasks (B,)) -> (B,) margins; jit-able, fixed
+    batch shape so all batches share one executable. Same kernel as the
+    estimator's predict path (core/dual.py:task_scores)."""
+    from repro.core.dual import task_scores
+
+    def score_step(X, tasks):
+        return task_scores(W, X, tasks)
+
+    return score_step
+
+
+class MTLScoringEngine:
+    """Minimal batched scorer over a fitted task-weight matrix W (m, d).
+
+    Requests are packed into fixed-size (batch, d) tiles (the last tile is
+    padded with task-0 zero rows) so the jitted step never retraces; the
+    padding rows are dropped before results are written back.
+    """
+
+    def __init__(self, W, batch: int = 32, classify: bool = True):
+        self.W = jnp.asarray(W)
+        if self.W.ndim != 2:
+            raise ValueError(f"W must be (m, d), got {self.W.shape}")
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.batch = int(batch)
+        self.classify = bool(classify)
+        self._step = jax.jit(make_score_step(self.W))
+
+    @property
+    def m(self) -> int:
+        return int(self.W.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.W.shape[1])
+
+    def _validate(self, r: ScoreRequest) -> None:
+        if not 0 <= int(r.task) < self.m:
+            raise ValueError(
+                f"task id {r.task} out of range [0, {self.m})"
+            )
+        x = np.asarray(r.x)
+        if x.shape != (self.d,):
+            raise ValueError(
+                f"request feature shape {x.shape} != ({self.d},)"
+            )
+
+    def run(self, requests: List[ScoreRequest]) -> List[ScoreRequest]:
+        """Score all requests in fixed-shape batches; fills score/label
+        in place and returns the same list. Delegates the pad/tile/score
+        loop to ``score_batch`` so there is exactly one scoring path."""
+        for r in requests:
+            self._validate(r)
+        if not requests:
+            return requests
+        X = np.stack([np.asarray(r.x, np.float32) for r in requests])
+        t = np.asarray([int(r.task) for r in requests], np.int32)
+        z = self.score_batch(X, t)
+        for r, zi in zip(requests, z):
+            r.score = float(zi)
+            if self.classify:
+                r.label = 1.0 if zi >= 0.0 else -1.0
+        return requests
+
+    def score_batch(self, X, tasks) -> np.ndarray:
+        """Array-in/array-out fast path: (n, d) features + (n,) task ids ->
+        (n,) margins through the same fixed-shape jitted step, with no
+        per-row request objects (pad with numpy, slice tiles)."""
+        X = np.asarray(X, np.float32)
+        if X.ndim != 2 or X.shape[1] != self.d:
+            raise ValueError(f"X must be (n, {self.d}), got {X.shape}")
+        t = np.ascontiguousarray(
+            np.broadcast_to(np.asarray(tasks, np.int32), (X.shape[0],))
+        )
+        if t.size and (t.min() < 0 or t.max() >= self.m):
+            raise ValueError(
+                f"task id out of range [0, {self.m}): [{t.min()}, {t.max()}]"
+            )
+        n, B = X.shape[0], self.batch
+        pad = (-n) % B
+        if pad:
+            X = np.concatenate([X, np.zeros((pad, self.d), np.float32)])
+            t = np.concatenate([t, np.zeros((pad,), np.int32)])
+        out = np.empty((X.shape[0],), np.float32)
+        for lo in range(0, X.shape[0], B):
+            out[lo : lo + B] = np.asarray(
+                self._step(jnp.asarray(X[lo : lo + B]), jnp.asarray(t[lo : lo + B]))
+            )
+        return out[:n]

@@ -9,16 +9,16 @@ never leaves its worker; only the d-dimensional delta_b vectors move.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import DMTRLConfig, MTLData, fit as dmtrl_fit, from_task_list
+from repro.core import DMTRLConfig, MTLData, from_task_list
+from repro.core.dmtrl import fit as dmtrl_fit
 from repro.core.dmtrl import DMTRLResult
-from repro.models import forward_train
 
 Array = jax.Array
 

@@ -3,7 +3,7 @@ the params (same PartitionSpecs, moments inherit the param sharding)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ each family — one forward + one train step on CPU, asserting output shapes
 and no NaNs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config

@@ -92,10 +92,6 @@ def test_ssdca_converges_to_same_dual(splits):
 def test_centralized_mtrl_parity_squared_loss():
     """Paper Table 2: DMTRL reaches the centralized MTRL solution."""
     sp = synthetic(1, m=5, d=16, n_train_avg=80, n_test_avg=40, seed=4)
-    # regression-ize the labels for squared loss
-    import dataclasses as dc
-    from repro.core.mtl_data import MTLData
-
     tr = sp.train
     cfg = DMTRLConfig(
         loss="squared", lam=1e-2, outer_iters=3, rounds=10, local_iters=160, seed=0

@@ -1,5 +1,4 @@
 """Duality-gap and primal-dual map properties (paper Thm. 1 machinery)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,7 +4,6 @@ hypothesis is an optional test dependency (see pyproject's [test] extra);
 property tests import it via ``pytest.importorskip`` at call time so a
 missing install skips just those tests instead of erroring collection.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

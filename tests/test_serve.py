@@ -1,12 +1,9 @@
 """Serving invariants: prefill+decode == full forward; ring buffers; engine."""
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.models import decode_step, forward_train, init_params, prefill
 from repro.serve import Request, ServeConfig, ServingEngine
 

@@ -1,0 +1,69 @@
+"""Batched MTL scoring engine (serve/mtl.py) + estimator wiring."""
+import numpy as np
+import pytest
+
+from repro.core import DMTRLEstimator
+from repro.serve import MTLScoringEngine, ScoreRequest
+
+
+@pytest.fixture(scope="module")
+def W():
+    rng = np.random.RandomState(0)
+    return rng.randn(5, 12).astype(np.float32)
+
+
+def test_scores_match_manual(W):
+    eng = MTLScoringEngine(W, batch=4)
+    rng = np.random.RandomState(1)
+    reqs = [
+        ScoreRequest(task=t, x=rng.randn(12).astype(np.float32))
+        for t in (0, 3, 4, 1, 2, 0, 4)  # 7 requests -> one padded batch
+    ]
+    done = eng.run(reqs)
+    assert done is reqs
+    for r in done:
+        assert r.score == pytest.approx(float(r.x @ W[r.task]), abs=1e-5)
+        assert r.label == (1.0 if r.score >= 0 else -1.0)
+
+
+def test_regression_mode_has_no_labels(W):
+    eng = MTLScoringEngine(W, batch=2, classify=False)
+    r = eng.run([ScoreRequest(task=0, x=np.ones(12, np.float32))])[0]
+    assert r.score is not None and r.label is None
+
+
+def test_score_batch_fast_path(W):
+    eng = MTLScoringEngine(W, batch=3)
+    X = np.random.RandomState(2).randn(5, 12).astype(np.float32)
+    t = np.array([0, 1, 2, 3, 4])
+    z = eng.score_batch(X, t)
+    np.testing.assert_allclose(z, np.einsum("nd,nd->n", X, W[t]), atol=1e-5)
+    # scalar task broadcast
+    z0 = eng.score_batch(X, 2)
+    np.testing.assert_allclose(z0, X @ W[2], atol=1e-5)
+
+
+def test_request_validation(W):
+    eng = MTLScoringEngine(W, batch=2)
+    with pytest.raises(ValueError, match="task id"):
+        eng.run([ScoreRequest(task=7, x=np.zeros(12, np.float32))])
+    with pytest.raises(ValueError, match="feature shape"):
+        eng.run([ScoreRequest(task=0, x=np.zeros(3, np.float32))])
+    with pytest.raises(ValueError, match="batch"):
+        MTLScoringEngine(W, batch=0)
+    with pytest.raises(ValueError, match="W must be"):
+        MTLScoringEngine(np.zeros(3))
+
+
+def test_estimator_scoring_engine(small_problem, small_cfg):
+    est = DMTRLEstimator(engine="reference", config=small_cfg).fit(
+        small_problem.train
+    )
+    eng = est.scoring_engine(batch=3)
+    te = small_problem.test
+    x = np.asarray(te.x[1, 0])
+    r = eng.run([ScoreRequest(task=1, x=x)])[0]
+    # serve path == estimator predict path
+    z = est.decision_function(x, tasks=1)
+    assert r.score == pytest.approx(float(z[0]), abs=1e-6)
+    assert r.label in (-1.0, 1.0)  # hinge => classification labels
