@@ -1,0 +1,124 @@
+"""Transport x tau sweep on the straggler workload.
+
+For every ``core.transport`` member and staleness bound the bench runs the
+same heterogeneous-worker fit (one straggler, ``--straggler``x slower) and
+records the protocol-level health metrics the transports account through
+the shared CommitReceipt path:
+
+  * commits/sec  — server commit-event throughput (wall clock; for the
+    ``simulated`` member this is simulation throughput, for the host
+    members real parameter-server throughput),
+  * mean/max staleness — commits between a contribution's snapshot and its
+    apply (``convergence.staleness_summary``),
+  * gate refusals — SSP admission-refusal episodes (cumulative counter in
+    ``history["gate_refusals"]``).
+
+Results land in BENCH_transport.json at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.bench_transport
+    PYTHONPATH=src python -m benchmarks.bench_transport --workers 4 --tau 0 1 2
+    PYTHONPATH=src python -m benchmarks.bench_transport --no-multiprocess
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def run_one(transport: str, tau, n_workers: int, straggler: int, seed: int = 0):
+    import jax
+
+    from repro.core import AsyncOptions, DMTRLConfig, MeshAxes
+    from repro.core import convergence as cv
+    from repro.core.async_dmtrl import fit_async
+    from repro.data.synthetic import synthetic
+
+    sp = synthetic(1, m=n_workers, d=32, n_train_avg=80, n_test_avg=20, seed=2)
+    delays = (1,) * (n_workers - 1) + (straggler,)
+    cfg = DMTRLConfig(
+        loss="hinge", lam=1e-4, outer_iters=2, rounds=8, local_iters=64,
+        solver="block_gram", block_size=32, seed=seed,
+        track_every=10**6,  # one objective sample at the end of each W-step
+    )
+    opts = AsyncOptions(
+        tau=tau,
+        async_delays=delays,
+        transport=transport,
+        n_workers=None if transport == "simulated" else n_workers,
+    )
+    mesh = (
+        jax.make_mesh((n_workers,), ("data",))
+        if transport == "simulated"
+        else None
+    )
+    t0 = time.perf_counter()
+    _, _, _, hist = fit_async(cfg, sp.train, mesh, MeshAxes(data="data"), options=opts)
+    wall = time.perf_counter() - t0
+    s = cv.staleness_summary(hist)
+    commits = int(len(hist["tau_trace"]))
+    return {
+        "transport": transport,
+        "tau": tau,
+        "workers": n_workers,
+        "straggler": straggler,
+        "commit_events": commits,
+        "contributions": s["n_commits"],
+        "wall_s": wall,
+        "commits_per_sec": commits / wall,
+        "mean_staleness": s["mean_staleness"],
+        "max_staleness": s["max_staleness"],
+        "max_lag": s["max_lag"],
+        "gate_refusals": int(hist["gate_refusals"][-1]) if commits else 0,
+        "tau_final": int(hist["tau_trace"][-1]) if commits else 0,
+        "final_gap": float(hist["gap"][-1]) if len(hist["gap"]) else None,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tau", nargs="+", default=[0, 1, 4, "auto"])
+    ap.add_argument("--straggler", type=int, default=4)
+    ap.add_argument(
+        "--no-multiprocess", action="store_true",
+        help="skip the multiprocess member (process spawns pay a jax "
+        "import each)",
+    )
+    args = ap.parse_args()
+    taus = [t if t == "auto" else int(t) for t in args.tau]
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.workers}"
+    )
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    transports = ["simulated", "threaded"]
+    if not args.no_multiprocess:
+        transports.append("multiprocess")
+
+    rows = []
+    print(
+        "transport,tau,commit_events,commits_per_sec,mean_staleness,"
+        "gate_refusals,final_gap"
+    )
+    for transport in transports:
+        for tau in taus:
+            r = run_one(transport, tau, args.workers, args.straggler)
+            rows.append(r)
+            print(
+                f"{r['transport']},{r['tau']},{r['commit_events']},"
+                f"{r['commits_per_sec']:.2f},{r['mean_staleness']:.3f},"
+                f"{r['gate_refusals']},{r['final_gap']:.5f}",
+                flush=True,
+            )
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_transport.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

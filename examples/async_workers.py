@@ -57,6 +57,25 @@ def main():
         f"mean {s['mean_staleness']:.2f}, max lag {s['max_lag']:.0f} rounds"
     )
 
+    # same protocol, different substrate: a REAL in-host parameter server
+    # (worker threads, lock-protected versioned state, nondeterministic
+    # arrival order). No mesh needed — the transport owns the workers.
+    print("async, tau=2, threaded transport (real parameter server)...")
+    thr = DMTRLEstimator(
+        engine="async",
+        async_options=AsyncOptions(
+            tau=2, async_delays=delays, transport="threaded", n_workers=n_dev
+        ),
+        **base,
+    ).fit(sp.train)
+    st = cv.staleness_summary(thr.history)
+    print(
+        f"  final gap {thr.history['gap'][-1]:.4f}, "
+        f"staleness mean {st['mean_staleness']:.2f} "
+        f"(max lag {st['max_lag']:.0f} <= tau), "
+        f"gate refusals {thr.history['gate_refusals'][-1]:.0f}"
+    )
+
 
 if __name__ == "__main__":
     main()

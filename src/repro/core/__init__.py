@@ -30,6 +30,15 @@ from .distributed import (
 from .distributed import fit_distributed as _fit_distributed_impl
 from .async_dmtrl import AsyncOptions, make_async_tick
 from .async_dmtrl import fit_async as _fit_async_impl
+from .transport import (
+    CommitReceipt,
+    Snapshot,
+    Transport,
+    TransportSpec,
+    available_transports,
+    get_transport,
+    register_transport,
+)
 from .engines import (
     Engine,
     EngineResult,
@@ -70,6 +79,7 @@ from . import (
     sdca,
     solver_backends,
 )
+from . import transport  # noqa: F401 (registry module, part of the API)
 
 
 def _deprecated(fn, replacement: str):
@@ -117,6 +127,13 @@ __all__ = [
     "server_reduce",
     "fit_async",
     "make_async_tick",
+    "Transport",
+    "TransportSpec",
+    "CommitReceipt",
+    "Snapshot",
+    "available_transports",
+    "get_transport",
+    "register_transport",
     "Engine",
     "EngineResult",
     "available_engines",
@@ -150,4 +167,5 @@ __all__ = [
     "omega_regularizers",
     "sdca",
     "solver_backends",
+    "transport",
 ]

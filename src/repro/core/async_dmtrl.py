@@ -1,76 +1,64 @@
-"""Asynchronous bounded-staleness DMTRL engine.
+"""Asynchronous bounded-staleness DMTRL engine — a thin protocol driver.
 
-Architecture (sync vs async rounds)
------------------------------------
+Architecture (post transport refactor)
+--------------------------------------
 The paper's Algorithm 1 is bulk-synchronous: every communication round
 barriers on ``all_gather(delta_b)`` before the server reduce, so one
 straggler worker stalls all m tasks. Baytas et al. (arXiv:1609.09563) and
 Wang et al. (arXiv:1802.03830) show the same primal-dual MTL structure
-tolerates *bounded staleness* in the worker->server updates. This module
-implements that regime on top of the factored round pieces in
-``distributed.py``:
+tolerates *bounded staleness* in the worker->server updates. The portable
+object is the PROTOCOL — snapshot -> local solve -> SSP-gated commit —
+not the execution substrate, so this module is now only the outer
+alternation:
 
-  * ``make_local_solve`` — the worker half (snapshot read + local SDCA),
-    parameterized by the ``W_read``/``sigma_read`` snapshot it solves
-    against; shared verbatim with the synchronous path.
-  * ``server_reduce``   — the server half (all_gather + Sigma-coupled
-    reduce), fed a *masked* delta_b so only arrived contributions apply.
+    for p in outer_iters:
+        rho  <- regularizer rho bound on the (possibly pending) Sigma
+        transport.run_w_step(p, rho, outer_key)      # R protocol rounds
+        Sigma, Omega <- regularizer.step(W)          # Omega-step
+        transport.install_sigma(...)                 # maybe overlapped
 
-Asynchrony is simulated on a deterministic per-worker clock so runs are
-bit-reproducible: worker g (one ``data``-axis group) takes
-``cfg.async_delays[g]`` simulated ticks per local solve. The host event
-loop is stale-synchronous-parallel (SSP):
+over a pluggable ``core.transport`` member (``AsyncOptions.transport``):
 
-  * A worker may START its round r only if ``r <= min_completed + tau``
-    (``tau = cfg.tau``); at ``tau=0`` this degenerates to the bulk-
-    synchronous barrier.
-  * On start it snapshots ``(W, Sigma)`` rows for its tasks; the solve it
-    commits later is computed against exactly that snapshot.
-  * On FINISH the server applies its delta_b immediately (together with
-    any other worker finishing the same tick) as one masked reduce — no
-    barrier on the other workers.
+  simulated     deterministic per-worker clock simulation, fused masked
+                SPMD commits — bit-reproducible; the default and the
+                bit-parity anchor (tau=0 == ``fit_distributed`` exactly).
+  threaded      real in-host parameter server (G worker threads, lock-
+                protected versioned state, nondeterministic arrivals).
+  multiprocess  socket/pickle parameter server with per-worker processes.
 
-Staleness semantics
--------------------
+Staleness semantics (all transports)
+------------------------------------
 A contribution's *staleness* is the number of server commit events between
 its snapshot and its application; its *lag* is how many rounds ahead of the
-slowest worker it ran. Both are recorded per commit in the returned history
-(``w_worker / w_round / w_staleness / w_lag / w_tick``) and summarized by
-``convergence.staleness_summary`` / ``convergence.effective_gap_curve``.
-At ``tau=0`` lag is always 0; staleness is also 0 when delays are
-homogeneous, but with stragglers a fast worker's commit can land between a
-slow worker's snapshot and its apply, so per-commit staleness up to G-1 is
-expected even at ``tau=0`` (round starts are still barriered).
+slowest worker it ran. The SSP gate admits a worker to round r only while
+``r <= min_completed + tau`` (``tau=0`` degenerates to the bulk-synchronous
+barrier). Every applied contribution flows through one accounting path —
+``transport.CommitReceipt -> record_receipt -> history`` — summarized by
+``convergence.staleness_summary`` / ``convergence.effective_gap_curve``
+(``w_worker / w_round / w_staleness / w_lag / w_tick`` + ``tau_trace`` /
+``gate_refusals`` in the returned history).
 
-``cfg.tau = "auto"`` turns the static bound into a small online controller
-(ROADMAP "adaptive staleness"): starting bulk-synchronous, every G commits
-``_adapt_tau`` widens the gate when it actually refused a start event and
-narrows it when ``convergence.staleness_summary`` over the window shows the
-slack went unused (max lag strictly under the bound), clamped to
-``[0, cfg.tau_max]``. The bound in effect at every commit is recorded in
-``history["tau_trace"]``.
-
-Simulation cost: every commit event executes one full SPMD round (all G
-shards solve, inactive results masked out). Caching per-worker solves at
-their start events would not reduce this — under shard_map every shard
-runs the program on every call and start events are about as frequent as
-commits — so the simulated clock, not host wall-clock, is the quantity
-this engine is built to measure.
+``tau="auto"`` turns the static bound into a small online controller
+(``transport._adapt_tau``): widen on gate-refusal episodes, narrow when the
+observed lag never used the slack — and, when ``staleness_budget`` is set,
+narrow whenever the windowed mean commit staleness exceeds the budget even
+if the gate never refused (cost-aware mode). The bound in effect at every
+commit is recorded in ``history["tau_trace"]``.
 
 The Omega-step overlaps with in-flight W-rounds instead of barriering:
-with ``cfg.omega_delay = k > 0`` the Sigma/Omega computed at a W-step
-boundary is *installed* only after k server commits of the next W-step;
-rounds started inside that window read the stale Sigma through their
-snapshot. rho is still computed from the new Sigma at the boundary (it is
-a scalar safety bound, not part of the worker snapshot). At
-``omega_delay=0`` installation happens at the boundary, exactly like the
-synchronous path.
+with ``omega_delay = k > 0`` the Sigma/Omega computed at a W-step boundary
+is *installed* only after k server commits of the next W-step; rounds
+started inside that window read the stale Sigma through their snapshot.
+rho is still computed from the new Sigma at the boundary. A pending Sigma
+is never dropped — it lands at the next barrier at the latest.
 
-Parity anchor: at ``tau=0`` with homogeneous delays this engine calls the
-same jitted computation as ``fit_distributed`` with an all-ones mask and a
-fresh snapshot every tick, and therefore reproduces its ``(alpha, W)``
-iterates bit-exactly (tested on 1- and 8-device meshes). That parity is
-the correctness anchor for the whole sync/async refactor.
+Parity anchors: at ``tau=0`` the ``simulated`` transport reproduces
+``fit_distributed``'s ``(alpha, W)`` iterates bit-exactly (tested on 1- and
+8-device meshes) and its integer event bookkeeping is pinned by golden
+histories (``tests/golden/``); ``threaded``/``multiprocess`` match the
+``reference`` engine at ``tau=0`` to numerical tolerance (commit order
+within a barriered round is nondeterministic, so float association
+differs).
 """
 from __future__ import annotations
 
@@ -78,31 +66,28 @@ import dataclasses
 from typing import Optional, Tuple, Union
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from . import convergence as conv_mod
-from . import dual as dual_mod
 from . import omega_regularizers as omega_reg
-from .distributed import (
-    MeshAxes,
-    _axis_size,
-    init_state,
-    install_initial_state,
-    make_local_solve,
-    pad_sigma_blocks,
-    round_in_specs,
-    round_out_specs,
-    round_shard_map,
-    server_reduce,
-    shard_mtl_data,
-)
+from .distributed import MeshAxes
 from .dmtrl import DMTRLConfig, WarmStart, _rho_value, validate_async_fields
-from .losses import get_loss
 from .mtl_data import MTLData
+from .transport import (  # re-exported for backward compatibility
+    _adapt_tau,
+    _worker_delays,
+    get_transport,
+    make_async_tick,
+)
 
 Array = jax.Array
+
+__all__ = [
+    "AsyncOptions",
+    "fit_async",
+    "make_async_tick",
+    "_adapt_tau",
+    "_worker_delays",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,17 +97,34 @@ class AsyncOptions:
 
     Validation is eager: ``AsyncOptions(tau="fast")`` raises at
     construction with a clear message, not mid-fit.
+
+    Transport selection (``core.transport`` registry): ``transport`` names
+    the execution substrate of the snapshot/commit protocol; ``n_workers``
+    sets the worker count for the host transports (``threaded`` /
+    ``multiprocess``), which otherwise fall back to the mesh data-axis
+    size (``simulated`` always derives workers from the mesh).
     """
 
     tau: Union[int, str] = 0  # SSP staleness bound; "auto" adapts online
     tau_max: int = 8  # clamp for the tau="auto" controller
     async_delays: Optional[Tuple[int, ...]] = None  # simulated per-worker
-    #               solve ticks; None == homogeneous workers
+    #               solve ticks; None == homogeneous workers (host
+    #               transports turn them into sleep pacing)
     omega_delay: int = 0  # server commits the Sigma install may lag behind
+    transport: str = "simulated"  # core.transport member name
+    n_workers: Optional[int] = None  # host-transport worker count
+    staleness_budget: Optional[float] = None  # tau="auto" cost target:
+    #               narrow when windowed mean commit staleness exceeds it
 
     def __post_init__(self):
         validate_async_fields(
-            self.tau, self.tau_max, self.async_delays, self.omega_delay
+            self.tau,
+            self.tau_max,
+            self.async_delays,
+            self.omega_delay,
+            transport=self.transport,
+            n_workers=self.n_workers,
+            staleness_budget=self.staleness_budget,
         )
 
     def merge_into(self, cfg: DMTRLConfig) -> DMTRLConfig:
@@ -132,94 +134,16 @@ class AsyncOptions:
             tau_max=self.tau_max,
             async_delays=self.async_delays,
             omega_delay=self.omega_delay,
+            transport=self.transport,
+            n_workers=self.n_workers,
+            staleness_budget=self.staleness_budget,
         )
-
-
-def make_async_tick(
-    cfg: DMTRLConfig,
-    mesh: Mesh,
-    axes: MeshAxes,
-    m: int,
-    n_max: int,
-    d: int,
-    rho: float,
-):
-    """Build the jitted one-tick function of the async engine.
-
-    tick(x, y, mask, n, alpha, W, sigma, W_snap, sigma_snap, keys, active)
-        -> (alpha, W)
-
-    ``W_snap``/``sigma_snap`` hold each worker group's bounded-staleness
-    snapshot rows; ``keys`` is one PRNG key per worker (for the round that
-    worker is currently solving); ``active`` masks which workers' results
-    commit this tick. Workers solve against their snapshot; the server
-    reduce uses the live sigma and only the active contributions.
-    """
-    local_solve = make_local_solve(cfg, mesh, axes, m, n_max, d, rho)
-    in_specs = round_in_specs(axes) + (
-        P(axes.data, axes.model),  # W_snap
-        P(axes.data, None),  # sigma_snap rows
-        P(axes.data, None),  # keys (workers, 2)
-        P(axes.data),  # active (workers,)
-    )
-    out_specs = round_out_specs(axes)
-
-    def tick_body(
-        x, y, mask, n, alpha, W, sigma_rows, W_snap, sigma_snap, keys, active
-    ):
-        key = keys[0]
-        a = active[0]
-        dalpha, db = local_solve(x, y, n, alpha, W_snap, sigma_snap, key)
-        dW = server_reduce(cfg, axes, sigma_rows, db * a)
-        return alpha + cfg.eta * (dalpha * a), W + dW
-
-    shmapped = round_shard_map(cfg, axes, tick_body, mesh, in_specs, out_specs)
-    return jax.jit(shmapped)
-
-
-@jax.jit
-def _refresh_rows(dst, src, rowmask):
-    """Refresh snapshot rows of (re)starting workers: rowmask is (m,) bool."""
-    return jnp.where(rowmask[:, None], src, dst)
-
-
-def _adapt_tau(
-    tau: int, gate_blocks: int, window_summary: dict, tau_max: int
-) -> int:
-    """One step of the tau="auto" controller.
-
-    Widen when the SSP gate actually blocked a worker during the window
-    (``gate_blocks`` refusal episodes: a worker entering the blocked state
-    counts once, not once per tick it stays blocked); narrow when nothing was
-    blocked AND the observed per-commit lag (``staleness_summary``'s
-    ``max_lag`` over the window) stayed strictly under the current bound,
-    i.e. the slack went unused. Clamped to [0, tau_max].
-    """
-    if gate_blocks > 0:
-        return min(tau + 1, tau_max)
-    if window_summary["max_lag"] < tau:
-        return max(tau - 1, 0)
-    return tau
-
-
-def _worker_delays(cfg: DMTRLConfig, n_workers: int) -> tuple:
-    delays = (
-        (1,) * n_workers if cfg.async_delays is None else cfg.async_delays
-    )
-    delays = tuple(int(v) for v in delays)
-    if len(delays) != n_workers:
-        raise ValueError(
-            f"async_delays has {len(delays)} entries for {n_workers} workers"
-        )
-    if min(delays) < 1:
-        raise ValueError(f"async_delays must be >= 1, got {delays}")
-    return delays
 
 
 def fit_async(
     cfg: DMTRLConfig,
     raw: MTLData,
-    mesh: Mesh,
+    mesh: Optional[Mesh] = None,
     axes: Optional[MeshAxes] = None,
     track: bool = True,
     *,
@@ -231,11 +155,14 @@ def fit_async(
 
     Same signature/returns as ``fit_distributed``: (W, sigma, state, hist).
     The history additionally carries per-commit staleness events and the
-    simulated-clock tick of every objective sample.
+    transport clock of every objective sample.
 
     ``options`` (AsyncOptions) overrides the legacy staleness fields of the
-    config; ``init`` warm-starts from raw-shaped (alpha, sigma, omega);
-    ``regularizer`` overrides the Omega family member.
+    config — including ``transport=`` which picks the execution substrate;
+    ``init`` warm-starts from raw-shaped (alpha, sigma, omega);
+    ``regularizer`` overrides the Omega family member. ``mesh`` is required
+    by the ``simulated`` transport and optional for the host transports
+    (they only read its data-axis size when ``n_workers`` is unset).
     """
     if axes is None:
         axes = MeshAxes()
@@ -243,203 +170,40 @@ def fit_async(
         cfg = options.merge_into(cfg)
     # cfg may predate the eager __post_init__ validation (e.g. built via
     # dataclasses.replace on old pickles); keep the fit-time check too.
-    validate_async_fields(cfg.tau, cfg.tau_max, cfg.async_delays, cfg.omega_delay)
-    tau_auto = cfg.tau == "auto"
-    reg = omega_reg.resolve_regularizer(cfg, regularizer)
-    loss = get_loss(cfg.loss)
-    data, m, d = shard_mtl_data(raw, mesh, axes)
-    state = init_state(data, mesh, axes, m, d)
-    key = jax.random.PRNGKey(cfg.seed)
-
-    G = _axis_size(mesh, axes.data)
-    m_loc = m // G
-    delays = _worker_delays(cfg, G)
-    n_pods = _axis_size(mesh, axes.pod)
-    R = cfg.rounds
-    sr = NamedSharding(mesh, P(axes.data, None))
-
-    hist = {
-        "round": [],  # server commit index (time-ordered, matches gap)
-        "tick": [],  # simulated-clock time of each commit
-        "dual": [],
-        "primal": [],
-        "gap": [],
-        "min_round": [],  # slowest worker's completed rounds at each commit
-        "w_worker": [],  # one entry per applied contribution:
-        "w_round": [],  # which worker / its round index
-        "w_staleness": [],  # commits between its snapshot and its apply
-        "w_lag": [],  # rounds ahead of the slowest worker at start
-        "w_tick": [],
-        "tau_trace": [],  # SSP bound in effect at each commit (constant
-        #                   unless cfg.tau == "auto")
-    }
-
-    @jax.jit
-    def objectives(alpha, sigma):
-        dd = dual_mod.dual_objective(data, alpha, sigma, cfg.lam, loss)
-        pp = dual_mod.primal_objective_from_alpha(data, alpha, sigma, cfg.lam, loss)
-        return dd, pp
-
-    @jax.jit
-    def w_from_alpha(alpha, sigma):
-        return dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
-
-    def install_sigma(sig, om):
-        st = dataclasses.replace(
-            state,
-            sigma=jax.device_put(sig, sr),
-            omega=jax.device_put(om, sr),
-        )
-        return dataclasses.replace(st, W=w_from_alpha(st.alpha, st.sigma))
-
-    def row_mask(workers):
-        mask = np.zeros((m,), bool)
-        for g in workers:
-            mask[g * m_loc : (g + 1) * m_loc] = True
-        return jnp.asarray(mask)
-
-    state = install_initial_state(
-        state, raw, data, m, cfg, mesh, axes, reg, init, w_from_alpha
+    validate_async_fields(
+        cfg.tau,
+        cfg.tau_max,
+        cfg.async_delays,
+        cfg.omega_delay,
+        transport=cfg.transport,
+        n_workers=cfg.n_workers,
+        staleness_budget=cfg.staleness_budget,
     )
-
-    # snapshots start in sync with the live state
-    W_snap = state.W
-    sigma_snap = state.sigma
-    commits_total = 0
-    clock = 0  # global simulated time, accumulated across W-steps
-    pending_install = None  # (sigma, omega) awaiting overlap installation
-
-    # tau="auto": start bulk-synchronous and adapt once per G-commit window
-    tau = 0 if tau_auto else cfg.tau
-    adapt_window = G
-    gate_blocks = 0  # refusal EPISODES this window: a worker entering the
-    #                  gate-blocked state counts once until it unblocks (or
-    #                  the window rolls over), not once per simulation tick
-    refused: set = set()  # workers currently blocked by the gate
-    win_start = 0  # index into the w_* event lists where the window began
-
-    for p in range(cfg.outer_iters):
-        rho = _rho_value(cfg, state.sigma if pending_install is None
-                         else pending_install[0],
-                         n_blocks_scale=float(n_pods), reg=reg)
-        tick_fn = make_async_tick(cfg, mesh, axes, m, data.n_max, d, rho)
-        # same key schedule as fit_distributed => bit-equal coordinate draws
-        key, outer_key = jax.random.split(key)
-        round_keys = jax.random.split(outer_key, R)  # (R, 2)
-
-        completed = [0] * G
-        cur_round = [0] * G
-        busy = [False] * G
-        finish_at = [0] * G
-        snap_commit = [0] * G
-        snap_lag = [0] * G
-        tick = 0
-        commits_outer = 0
-
-        while min(completed) < R:
-            # --- overlapped Omega-step installation --------------------
-            if pending_install is not None and commits_outer >= cfg.omega_delay:
-                state = install_sigma(*pending_install)
-                pending_install = None
-            # --- starts: idle workers gated by the SSP staleness bound --
-            floor = min(completed)
-            newly = [
-                g
-                for g in range(G)
-                if not busy[g] and completed[g] < R and completed[g] <= floor + tau
-            ]
-            blocked = {
-                g
-                for g in range(G)
-                if not busy[g] and completed[g] < R and completed[g] > floor + tau
-            }
-            gate_blocks += len(blocked - refused)
-            refused = blocked
-            if newly:
-                rm = row_mask(newly)
-                W_snap = _refresh_rows(W_snap, state.W, rm)
-                sigma_snap = _refresh_rows(sigma_snap, state.sigma, rm)
-                for g in newly:
-                    busy[g] = True
-                    cur_round[g] = completed[g]
-                    finish_at[g] = tick + delays[g]
-                    snap_commit[g] = commits_total
-                    snap_lag[g] = completed[g] - floor
-            # --- advance the clock to the next finish event ------------
-            tick = min(finish_at[g] for g in range(G) if busy[g])
-            active = [g for g in range(G) if busy[g] and finish_at[g] == tick]
-            keys_arr = round_keys[
-                np.clip(np.asarray(cur_round, np.int32), 0, R - 1)
-            ]  # (G, 2)
-            active_arr = jnp.zeros((G,), data.x.dtype).at[
-                jnp.asarray(active, jnp.int32)
-            ].set(1.0)
-            alpha, W = tick_fn(
-                data.x,
-                data.y,
-                data.mask,
-                data.n,
-                state.alpha,
-                state.W,
-                state.sigma,
-                W_snap,
-                sigma_snap,
-                keys_arr,
-                active_arr,
+    reg = omega_reg.resolve_regularizer(cfg, regularizer)
+    spec = get_transport(cfg.transport)
+    transport = spec.factory()
+    transport.setup(
+        cfg, raw, mesh=mesh, axes=axes, reg=reg, init=init, track=track
+    )
+    key = jax.random.PRNGKey(cfg.seed)
+    # rho always sees the NEWEST Sigma, installed or pending (a pending
+    # install is a worker-visibility delay, not a safety-bound delay)
+    rho_sigma = transport.rho_sigma()
+    try:
+        for p in range(cfg.outer_iters):
+            rho = _rho_value(
+                cfg, rho_sigma, n_blocks_scale=float(transport.n_pods), reg=reg
             )
-            state = dataclasses.replace(state, alpha=alpha, W=W)
-            commits_total += 1
-            commits_outer += 1
-            for g in active:
-                busy[g] = False
-                hist["w_worker"].append(g)
-                hist["w_round"].append(p * R + cur_round[g])
-                hist["w_staleness"].append(commits_total - 1 - snap_commit[g])
-                hist["w_lag"].append(snap_lag[g])
-                hist["w_tick"].append(clock + tick)
-                completed[g] += 1
-            hist["tau_trace"].append(tau)
-            if tau_auto and commits_total % adapt_window == 0:
-                win = {
-                    k: np.asarray(hist[k][win_start:])
-                    for k in ("w_staleness", "w_lag", "w_worker")
-                }
-                tau = _adapt_tau(
-                    tau, gate_blocks, conv_mod.staleness_summary(win), cfg.tau_max
-                )
-                gate_blocks = 0
-                refused = set()  # a still-blocked worker re-counts next window
-                win_start = len(hist["w_worker"])
-            done = min(completed) >= R
-            if track and (commits_total % cfg.track_every == 0 or done):
-                dd, pp = objectives(state.alpha, state.sigma)
-                hist["round"].append(commits_total)
-                hist["tick"].append(clock + tick)
-                hist["dual"].append(float(dd))
-                hist["primal"].append(float(pp))
-                hist["gap"].append(float(pp - dd))
-                hist["min_round"].append(p * R + min(completed))
-
-        clock += tick
-        # --- W-step boundary: Omega-step (possibly overlapped) ---------
-        if pending_install is not None:
-            # the W-step produced fewer commits than omega_delay; a pending
-            # Sigma must never be dropped — it lands at the barrier instead
-            state = install_sigma(*pending_install)
-            pending_install = None
-        if reg.learns:
-            sigma_t, omega_t = reg.step(
-                state.W[: raw.m], cfg.omega_jitter
-            )
-            sig, om = pad_sigma_blocks(
-                sigma_t, omega_t, m, raw.m, cfg.omega_jitter
-            )
-            if cfg.omega_delay == 0 or p == cfg.outer_iters - 1:
-                state = install_sigma(sig, om)
-            else:
-                pending_install = (sig, om)
-
-    hist_np = {k: np.asarray(v) for k, v in hist.items()}
-    W = np.asarray(state.W)[: raw.m, : raw.d]
-    sigma = np.asarray(state.sigma)[: raw.m, : raw.m]
-    return W, sigma, state, hist_np
+            key, outer_key = jax.random.split(key)
+            transport.run_w_step(p, rho, outer_key)
+            if reg.learns:
+                sigma_t, omega_t = reg.step(transport.w_true(), cfg.omega_jitter)
+                sig, om = transport.pad_sigma(sigma_t, omega_t)
+                # overlapped Omega-step: defer the install into the next
+                # W-step except at the end (the last Sigma must land now)
+                defer = cfg.omega_delay > 0 and p < cfg.outer_iters - 1
+                transport.install_sigma(sig, om, defer=defer)
+                rho_sigma = sig
+        return transport.result()
+    finally:
+        transport.close()

@@ -134,7 +134,12 @@ def rho_min_power_iteration(
 
 
 def staleness_summary(history: Dict[str, np.ndarray]) -> Dict[str, object]:
-    """Summarize the per-commit staleness events recorded by ``fit_async``.
+    """Summarize per-commit staleness events (``w_*`` keys).
+
+    This is the single sink of the ``transport.CommitReceipt`` accounting
+    path: every transport member (simulated/threaded/multiprocess) and the
+    synchronous engine's degenerate tau=0 commits record through
+    ``transport.record_receipt`` into the same history keys.
 
     Staleness of a contribution = server commits between its snapshot and
     its application; lag = rounds it ran ahead of the slowest worker. Under
@@ -166,11 +171,15 @@ def staleness_summary(history: Dict[str, np.ndarray]) -> Dict[str, object]:
 def effective_gap_curve(
     history: Dict[str, np.ndarray]
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Duality gap against *simulated wall-clock* ticks, not rounds.
+    """Duality gap against the *transport clock*, not rounds.
 
-    For an async history the x-axis is the tick of each server commit; for
-    a sync history (no "tick" key) each round costs ``max(delays)`` ticks —
-    use ``sync_effective_ticks`` to put both on the same axis. The returned
+    The x-axis is the tick of each objective sample: simulated ticks for
+    the simulated transport, wall seconds for the host transports, and the
+    round index for synchronous histories (``fit_distributed`` emits
+    ``tick == round`` since PR 4; histories predating that fall back to
+    round numbering here). A synchronous round under a straggler schedule
+    really costs ``max(delays)`` ticks — use ``sync_effective_ticks`` to
+    put sync and simulated-async runs on the same axis. The returned
     gaps are NOT monotone (best-so-far is not applied; the raw gap is
     returned so oscillations from stale commits stay visible) — use
     ``ticks_to_gap``'s first-crossing scan rather than binary search.

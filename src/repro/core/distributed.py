@@ -422,8 +422,15 @@ def fit_distributed(
     state = init_state(data, mesh, axes, m, d)
     key = jax.random.PRNGKey(cfg.seed)
 
+    # the synchronous engine IS the degenerate tau=0 transport: every round
+    # commits all G workers as one barriered event with zero staleness/lag,
+    # accounted through the same CommitReceipt path as the async transports
+    # (core/transport.py) so convergence.staleness_summary reads one stream.
+    from .transport import CommitReceipt, new_event_history, record_receipt
+
     n_pods = _axis_size(mesh, axes.pod)
-    hist = {"round": [], "dual": [], "primal": [], "gap": []}
+    n_workers = _axis_size(mesh, axes.data)
+    hist = new_event_history()
     rounds_seen = 0
 
     @jax.jit
@@ -459,12 +466,25 @@ def fit_distributed(
                 sub,
             )
             state = dataclasses.replace(state, alpha=alpha, W=W)
+            commit = rounds_seen + t + 1
+            for g in range(n_workers):
+                record_receipt(
+                    hist,
+                    CommitReceipt(
+                        worker=g, round=rounds_seen + t, staleness=0, lag=0,
+                        tick=commit, version=commit, tau=0,
+                    ),
+                )
+            hist["tau_trace"].append(0)
+            hist["gate_refusals"].append(0)
             if track:
                 dd, pp = objectives(state.alpha, state.sigma)
-                hist["round"].append(rounds_seen + t + 1)
+                hist["round"].append(commit)
+                hist["tick"].append(commit)
                 hist["dual"].append(float(dd))
                 hist["primal"].append(float(pp))
                 hist["gap"].append(float(pp - dd))
+                hist["min_round"].append(rounds_seen + t + 1)
         rounds_seen += cfg.rounds
         if reg.learns:
             # Omega-step must see only the REAL tasks: padded (inert) tasks

@@ -45,10 +45,42 @@ def validate_tau(tau) -> None:
         raise ValueError(f"tau must be >= 0, got {tau}")
 
 
-def validate_async_fields(tau, tau_max, async_delays, omega_delay) -> None:
+def validate_async_fields(
+    tau,
+    tau_max,
+    async_delays,
+    omega_delay,
+    transport="simulated",
+    n_workers=None,
+    staleness_budget=None,
+) -> None:
     """Shared eager validation for DMTRLConfig (legacy surface) and
     AsyncOptions (the new home of these knobs)."""
     validate_tau(tau)
+    if not isinstance(transport, str):
+        raise ValueError(
+            f"transport must be a core.transport member name, got {transport!r}"
+        )
+    if n_workers is not None and (
+        not isinstance(n_workers, numbers.Integral)
+        or isinstance(n_workers, bool)
+        or n_workers < 1
+    ):
+        raise ValueError(f"n_workers must be an int >= 1 or None, got {n_workers!r}")
+    if staleness_budget is not None and (
+        isinstance(staleness_budget, bool)
+        or not isinstance(staleness_budget, numbers.Real)
+        or staleness_budget < 0
+    ):
+        raise ValueError(
+            f"staleness_budget must be a float >= 0 or None, got "
+            f"{staleness_budget!r}"
+        )
+    if staleness_budget is not None and tau != "auto":
+        raise ValueError(
+            f'staleness_budget only drives the tau="auto" controller; it '
+            f"would be silently ignored with tau={tau!r}"
+        )
     if not isinstance(tau_max, int) or isinstance(tau_max, bool) or tau_max < 0:
         raise ValueError(f"tau_max must be an int >= 0, got {tau_max!r}")
     if (
@@ -116,10 +148,23 @@ class DMTRLConfig:
     omega_delay: int = 0  # server commits the Omega-step install waits
     #               for; >0 lets the first commits of the next W-step run
     #               against the stale Sigma (0 == barrier, same as sync)
+    transport: str = "simulated"  # snapshot/commit protocol substrate,
+    #               resolved through core.transport: "simulated" |
+    #               "threaded" | "multiprocess"
+    n_workers: Optional[int] = None  # host-transport worker count; None ==
+    #               derive from the mesh data axis (simulated always does)
+    staleness_budget: Optional[float] = None  # tau="auto" cost target:
+    #               narrow when windowed mean commit staleness exceeds it
 
     def __post_init__(self):
         validate_async_fields(
-            self.tau, self.tau_max, self.async_delays, self.omega_delay
+            self.tau,
+            self.tau_max,
+            self.async_delays,
+            self.omega_delay,
+            transport=self.transport,
+            n_workers=self.n_workers,
+            staleness_budget=self.staleness_budget,
         )
         if self.omega_regularizer not in omega_reg.available_regularizers():
             raise ValueError(

@@ -179,7 +179,8 @@ register_engine(
     Engine(
         name="async",
         description="bounded-staleness (SSP) engine: workers commit "
-        "against snapshots at most tau rounds stale; tau=0 == distributed",
+        "against snapshots at most tau rounds stale over a pluggable "
+        "transport (simulated/threaded/multiprocess); tau=0 == distributed",
         needs_mesh=True,
         options_cls=AsyncOptions,
         run=_run_async,

@@ -44,13 +44,23 @@ from .mtl_data import MTLData
 from .omega_regularizers import OmegaRegularizer, get_regularizer
 
 # engine-specific legacy config fields the facade refuses as core params
-_ASYNC_FIELDS = frozenset({"tau", "tau_max", "async_delays", "omega_delay"})
+_ASYNC_FIELDS = frozenset(
+    {
+        "tau",
+        "tau_max",
+        "async_delays",
+        "omega_delay",
+        "transport",
+        "n_workers",
+        "staleness_budget",
+    }
+)
 _DIST_FIELDS = frozenset({"dist_block_hoisted", "gram_bf16"})
 _CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(DMTRLConfig))
 
 # history keys that index time and must continue, not restart, across
 # partial_fit calls (value added to the new segment = last max seen)
-_TIME_KEYS = ("round", "tick", "w_tick")
+_TIME_KEYS = ("round", "tick", "w_tick", "gate_refusals")
 # 0-based counters: continue at prev_max + 1
 _COUNTER_KEYS = ("outer", "w_round", "min_round")
 

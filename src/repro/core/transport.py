@@ -1,0 +1,1372 @@
+"""Pluggable transport layer — the parameter-server snapshot/commit protocol.
+
+The paper's parameter-server paradigm is a *protocol*, not an execution
+substrate: workers solve local dual subproblems against a bounded-stale
+snapshot of ``(W, Sigma)`` and exchange only ``(delta_w, Sigma)``-shaped
+messages with the server (arXiv:1609.09563, arXiv:1802.03830 make the same
+split for their async/graph-regularized variants). This module factors
+that protocol out of ``async_dmtrl.py`` behind one surface so the *same*
+driver (``fit_async``) runs over any substrate:
+
+    spec = get_transport("simulated" | "threaded" | "multiprocess")
+
+Protocol (the ``Transport`` base class)
+---------------------------------------
+Worker-facing primitives — the portable object:
+
+  * ``gate(worker, round) -> bool``       SSP admission: may ``worker``
+    start ``round``?  True iff ``round <= min(completed) + tau``.  Host
+    transports BLOCK until the gate opens; the simulated transport returns
+    the decision to its deterministic event loop.
+  * ``snapshot(worker) -> Snapshot``      versioned read of the worker's
+    ``(W_rows, sigma_rows, alpha_rows)`` — the solve it later commits is
+    computed against exactly this snapshot.
+  * ``commit(worker, round, delta) -> CommitReceipt``  apply one worker's
+    ``(dalpha_rows, db_rows)`` to the server state; the receipt carries the
+    observed staleness (server commits between snapshot and apply) and lag
+    (rounds ahead of the slowest worker at start).
+  * ``install_sigma(sigma, omega, defer=...)``  Omega-step result install;
+    with ``defer=True`` it lands only after ``cfg.omega_delay`` commits of
+    the next W-step (overlapped Omega-step), else immediately.
+
+Driver-facing lifecycle: ``setup`` / ``run_w_step`` / ``w_true`` /
+``pad_sigma`` / ``result`` / ``close``, plus clock/staleness introspection
+(``clock()``, ``staleness()``).  All staleness/lag accounting flows through
+one path: ``CommitReceipt -> record_receipt -> history ->
+convergence.staleness_summary`` — the synchronous engine's
+``server_reduce`` is the degenerate ``tau=0`` member of the same family
+(``fit_distributed`` emits one all-active commit event per round through
+``record_receipt`` too).
+
+Members
+-------
+``simulated``     bit-identical extraction of the deterministic per-worker
+                  clock machinery that used to live inside ``fit_async``:
+                  virtual workers advance on simulated ticks, every commit
+                  event executes one fused masked SPMD round
+                  (``make_async_tick``), runs are bit-reproducible (golden
+                  event histories in ``tests/golden/``).
+``threaded``      a real in-host parameter server: the server state lives
+                  behind a lock/condition pair, G worker *threads* gate,
+                  snapshot, solve and commit concurrently.  Arrival order
+                  is genuinely nondeterministic but SSP-gate-correct
+                  (observed lag can never exceed tau).  ``async_delays``
+                  become sleep pacing so straggler schedules remain
+                  expressible.
+``multiprocess``  a small socket/pickle parameter-server shim: the same
+                  server state machine, with G worker *processes* driving
+                  it over length-prefixed pickle frames on a loopback
+                  socket (one handler thread per connection).  This is the
+                  cross-host RPC shape with the host boundary faked by
+                  localhost — the prerequisite step the ROADMAP names.
+                  Trusted-local only: pickle framing is not an
+                  authentication boundary.
+
+The simulated member snapshots/commits whole worker groups as fused SPMD
+calls for efficiency (that is what makes it bit-reproducible and fast on a
+mesh); its ``snapshot``/``commit`` methods are still real so a generic
+protocol driver can run it one worker at a time (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import socket
+import struct
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import convergence as conv_mod
+from . import dual as dual_mod
+from . import omega as omega_mod
+from .distributed import (
+    DistributedState,
+    MeshAxes,
+    _axis_size,
+    init_state,
+    install_initial_state,
+    make_local_solve,
+    pad_sigma_blocks,
+    pad_to_multiple,
+    round_in_specs,
+    round_out_specs,
+    round_shard_map,
+    server_reduce,
+    shard_mtl_data,
+)
+from .dmtrl import DMTRLConfig
+from .losses import get_loss
+from .solver_backends import get_backend
+
+Array = jax.Array
+
+# sleep pacing of one simulated delay tick for the host transports (so the
+# async_delays straggler schedules remain meaningful under real clocks)
+PACE_SECONDS = 0.005
+
+
+# ---------------------------------------------------------------------------
+# protocol messages
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """A versioned bounded-staleness read of one worker's server rows.
+
+    ``alpha_rows`` are the worker's own dual coordinates — conceptually
+    worker-owned state (only its commits ever move them); the in-host
+    servers keep them centrally so ``weights_from_alpha`` stays one call.
+    """
+
+    W_rows: Array  # (m_loc, d) weight rows of the worker's tasks
+    sigma_rows: Array  # (m_loc, m) Sigma rows of the worker's tasks
+    alpha_rows: Array  # (m_loc, n_max) the worker's dual coordinates
+    version: int  # server commit count when the snapshot was taken
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitReceipt:
+    """Server acknowledgement of one applied contribution.
+
+    ``staleness`` = server commit events between the contribution's
+    snapshot and its apply; ``lag`` = rounds it ran ahead of the slowest
+    worker at start.  ``tick`` is the transport clock (simulated ticks for
+    ``simulated``, wall seconds for the host transports, round index for
+    the degenerate synchronous member).
+    """
+
+    worker: int
+    round: int  # global round index (p * R + r)
+    staleness: int
+    lag: int
+    tick: float
+    version: int  # server commit count after the apply (1-based)
+    tau: int  # SSP bound in effect at the apply
+
+
+def new_event_history() -> Dict[str, list]:
+    """The engine history skeleton every transport (and the degenerate
+    synchronous path) fills: objective samples + per-commit events."""
+    return {
+        "round": [],  # server commit index of each objective sample
+        "tick": [],  # transport clock of each objective sample
+        "dual": [],
+        "primal": [],
+        "gap": [],
+        "min_round": [],  # slowest worker's completed rounds at each sample
+        "w_worker": [],  # one entry per applied contribution:
+        "w_round": [],  # which worker / its round index
+        "w_staleness": [],  # commits between its snapshot and its apply
+        "w_lag": [],  # rounds ahead of the slowest worker at start
+        "w_tick": [],
+        "tau_trace": [],  # SSP bound in effect at each commit event
+        "gate_refusals": [],  # cumulative gate-refusal episodes at each event
+    }
+
+
+def record_receipt(hist: Dict[str, list], r: CommitReceipt) -> None:
+    """THE staleness/lag accounting path: every transport (and the sync
+    engine's degenerate tau=0 commits) lands here, so
+    ``convergence.staleness_summary`` reads one uniform event stream."""
+    hist["w_worker"].append(r.worker)
+    hist["w_round"].append(r.round)
+    hist["w_staleness"].append(r.staleness)
+    hist["w_lag"].append(r.lag)
+    hist["w_tick"].append(r.tick)
+
+
+# ---------------------------------------------------------------------------
+# tau="auto" controller (shared by every transport)
+# ---------------------------------------------------------------------------
+def _adapt_tau(
+    tau: int,
+    gate_blocks: int,
+    window_summary: dict,
+    tau_max: int,
+    staleness_budget: Optional[float] = None,
+) -> int:
+    """One step of the tau="auto" controller.
+
+    Cost-aware rule (ROADMAP "adaptive staleness" follow-up): when a
+    ``staleness_budget`` is set and the window's observed mean commit
+    staleness exceeds it, narrow — even if the gate never refused a start
+    (budget violations outrank throughput).  Otherwise: widen when the SSP
+    gate actually blocked a worker during the window (``gate_blocks``
+    refusal episodes: a worker entering the blocked state counts once, not
+    once per tick it stays blocked); narrow when nothing was blocked AND
+    the observed per-commit lag (``staleness_summary``'s ``max_lag`` over
+    the window) stayed strictly under the current bound, i.e. the slack
+    went unused.  Clamped to [0, tau_max].
+    """
+    if (
+        staleness_budget is not None
+        and window_summary.get("mean_staleness", 0.0) > staleness_budget
+    ):
+        return max(tau - 1, 0)
+    if gate_blocks > 0:
+        return min(tau + 1, tau_max)
+    if window_summary["max_lag"] < tau:
+        return max(tau - 1, 0)
+    return tau
+
+
+def _worker_delays(cfg: DMTRLConfig, n_workers: int) -> tuple:
+    delays = (
+        (1,) * n_workers if cfg.async_delays is None else cfg.async_delays
+    )
+    delays = tuple(int(v) for v in delays)
+    if len(delays) != n_workers:
+        raise ValueError(
+            f"async_delays has {len(delays)} entries for {n_workers} workers"
+        )
+    if min(delays) < 1:
+        raise ValueError(f"async_delays must be >= 1, got {delays}")
+    return delays
+
+
+# ---------------------------------------------------------------------------
+# fused SPMD tick of the simulated transport
+# ---------------------------------------------------------------------------
+def make_async_tick(
+    cfg: DMTRLConfig,
+    mesh,
+    axes: MeshAxes,
+    m: int,
+    n_max: int,
+    d: int,
+    rho: float,
+):
+    """Build the jitted one-tick function of the simulated transport.
+
+    tick(x, y, mask, n, alpha, W, sigma, W_snap, sigma_snap, keys, active)
+        -> (alpha, W)
+
+    ``W_snap``/``sigma_snap`` hold each worker group's bounded-staleness
+    snapshot rows; ``keys`` is one PRNG key per worker (for the round that
+    worker is currently solving); ``active`` masks which workers' results
+    commit this tick. Workers solve against their snapshot; the server
+    reduce uses the live sigma and only the active contributions.
+    """
+    local_solve = make_local_solve(cfg, mesh, axes, m, n_max, d, rho)
+    in_specs = round_in_specs(axes) + (
+        P(axes.data, axes.model),  # W_snap
+        P(axes.data, None),  # sigma_snap rows
+        P(axes.data, None),  # keys (workers, 2)
+        P(axes.data),  # active (workers,)
+    )
+    out_specs = round_out_specs(axes)
+
+    def tick_body(
+        x, y, mask, n, alpha, W, sigma_rows, W_snap, sigma_snap, keys, active
+    ):
+        key = keys[0]
+        a = active[0]
+        dalpha, db = local_solve(x, y, n, alpha, W_snap, sigma_snap, key)
+        dW = server_reduce(cfg, axes, sigma_rows, db * a)
+        return alpha + cfg.eta * (dalpha * a), W + dW
+
+    shmapped = round_shard_map(cfg, axes, tick_body, mesh, in_specs, out_specs)
+    return jax.jit(shmapped)
+
+
+@jax.jit
+def _refresh_rows(dst, src, rowmask):
+    """Refresh snapshot rows of (re)starting workers: rowmask is (m,) bool."""
+    return jnp.where(rowmask[:, None], src, dst)
+
+
+# ---------------------------------------------------------------------------
+# host-side per-worker local solve (threaded / multiprocess workers)
+# ---------------------------------------------------------------------------
+def make_block_solver(cfg: DMTRLConfig, n_max: int, rho: float) -> Callable:
+    """The worker half of one round for a host transport: a jitted vmap of
+    the configured solver backend over the worker's task block, with the
+    same per-(task, pod=0) key derivation as the reference and mesh engines
+    (=> bit-equal coordinate draws for the same round key).
+
+    solve(x, y, alpha_rows, W_rows, n, sigma_rows, tids, key)
+        -> (dalpha_rows, db_rows)
+    """
+    loss = get_loss(cfg.loss)
+    backend = get_backend(cfg.solver)
+    H = backend.round_local_iters(cfg.local_iters or n_max, cfg.block_size)
+    solver = backend.make(loss, rho, cfg.lam, H, block=cfg.block_size)
+
+    @jax.jit
+    def solve(x, y, alpha_rows, W_rows, n, sigma_rows, tids, key):
+        keys = jax.vmap(
+            lambda t: jax.random.fold_in(jax.random.fold_in(key, t), 0)
+        )(tids)
+        sigma_ii = jnp.take_along_axis(sigma_rows, tids[:, None], axis=1)[:, 0]
+        dalpha, r = jax.vmap(solver)(x, y, alpha_rows, W_rows, n, sigma_ii, keys)
+        # delta_b_i = (eta / n_i) * X_i^T dalpha_i (padded tasks have n=1,
+        # x=0 => inert); eta pre-applied exactly like the mesh local solve
+        db = cfg.eta * r / jnp.maximum(n, 1)[:, None].astype(r.dtype)
+        return dalpha, db
+
+    return solve
+
+
+# ---------------------------------------------------------------------------
+# Transport base
+# ---------------------------------------------------------------------------
+class Transport:
+    """Base class: protocol + driver lifecycle every member implements."""
+
+    name: str = "?"
+    needs_mesh: bool = False
+    n_pods: int = 1  # rho n_blocks_scale (pod sharding: simulated only)
+
+    # -- driver lifecycle ---------------------------------------------------
+    def setup(self, cfg, raw, *, mesh, axes, reg, init, track) -> None:
+        raise NotImplementedError
+
+    def run_w_step(self, p: int, rho: float, outer_key: Array) -> None:
+        """Drive all workers through cfg.rounds rounds of the protocol,
+        then apply any still-pending Sigma install at the barrier."""
+        raise NotImplementedError
+
+    def w_true(self) -> Array:
+        """Current W rows of the REAL tasks (for the Omega-step)."""
+        raise NotImplementedError
+
+    def rho_sigma(self) -> Array:
+        """Sigma the next W-step's rho bound should be computed from."""
+        raise NotImplementedError
+
+    def pad_sigma(self, sigma_t: Array, omega_t: Array) -> Tuple[Array, Array]:
+        raise NotImplementedError
+
+    def result(self):
+        """(W, sigma, state, hist) at the raw problem size, like the
+        legacy ``fit_async`` return."""
+        raise NotImplementedError
+
+    def close(self) -> None:  # idempotent; called by the driver's finally
+        pass
+
+    # -- worker-facing protocol --------------------------------------------
+    def gate(self, worker: int, rnd: int) -> bool:
+        raise NotImplementedError
+
+    def snapshot(self, worker: int) -> Snapshot:
+        raise NotImplementedError
+
+    def commit(self, worker: int, rnd: int, delta) -> CommitReceipt:
+        raise NotImplementedError
+
+    def install_sigma(self, sigma: Array, omega: Array, *, defer: bool) -> None:
+        raise NotImplementedError
+
+    # -- introspection ------------------------------------------------------
+    def clock(self) -> float:
+        """Transport time: simulated ticks / wall seconds since setup."""
+        raise NotImplementedError
+
+    def staleness(self) -> Dict[str, object]:
+        """``convergence.staleness_summary`` over the commits so far."""
+        return conv_mod.staleness_summary(
+            {k: np.asarray(v) for k, v in self.hist.items()}
+        )
+
+    # -- shared per-commit-event bookkeeping --------------------------------
+    def _after_commit_event(self, tick, alpha, sigma) -> None:
+        """tau trace + tau="auto" adapt window + track_every objective
+        sampling after ONE server commit event.  Shared by every member so
+        the adaptive controller and the recorded histories can never drift
+        between transports (the cross-transport tests rely on that).
+        Caller guarantees exclusivity: the simulated event loop is single-
+        threaded, the host servers call this under the server lock."""
+        cfg, hist = self.cfg, self.hist
+        hist["tau_trace"].append(self.tau)
+        hist["gate_refusals"].append(self.gate_refusals_total)
+        if self.tau_auto and self.commits_total % self.adapt_window == 0:
+            win = {
+                k: np.asarray(hist[k][self.win_start :])
+                for k in ("w_staleness", "w_lag", "w_worker")
+            }
+            self.tau = _adapt_tau(
+                self.tau,
+                self.gate_blocks,
+                conv_mod.staleness_summary(win),
+                cfg.tau_max,
+                cfg.staleness_budget,
+            )
+            self.gate_blocks = 0
+            self.refused = set()  # a still-blocked worker re-counts
+            self.win_start = len(hist["w_worker"])
+        done = min(self.completed) >= self.R
+        if self.track and (self.commits_total % cfg.track_every == 0 or done):
+            dd, pp = self._objectives(alpha, sigma)
+            hist["round"].append(self.commits_total)
+            hist["tick"].append(tick)
+            hist["dual"].append(float(dd))
+            hist["primal"].append(float(pp))
+            hist["gap"].append(float(pp - dd))
+            hist["min_round"].append(self.p * self.R + min(self.completed))
+
+
+# ---------------------------------------------------------------------------
+# simulated — deterministic per-worker clocks, fused SPMD commits
+# ---------------------------------------------------------------------------
+class SimulatedTransport(Transport):
+    """Bit-identical extraction of the legacy in-process clock simulation.
+
+    Virtual workers advance on a deterministic simulated clock (worker g
+    takes ``async_delays[g]`` ticks per local solve); every commit event
+    executes one fused masked SPMD round over the whole mesh, so runs are
+    bit-reproducible (the golden event histories in ``tests/golden/`` and
+    the tau=0 bit-parity anchor against ``fit_distributed`` pin it).
+    """
+
+    name = "simulated"
+    needs_mesh = True
+
+    def setup(self, cfg, raw, *, mesh, axes, reg, init, track):
+        if mesh is None:
+            raise ValueError("the simulated transport needs a mesh")
+        G = _axis_size(mesh, axes.data)
+        if cfg.n_workers is not None and cfg.n_workers != G:
+            raise ValueError(
+                f"transport='simulated' derives its workers from the mesh "
+                f"data axis (= {G}); n_workers={cfg.n_workers} conflicts"
+            )
+        self.cfg, self.raw, self.mesh, self.axes = cfg, raw, mesh, axes
+        self.reg, self.track = reg, track
+        loss = get_loss(cfg.loss)
+        data, m, d = shard_mtl_data(raw, mesh, axes)
+        self.data, self.m, self.d = data, m, d
+        self.state = init_state(data, mesh, axes, m, d)
+        self.G = G
+        self.m_loc = m // G
+        self.delays = _worker_delays(cfg, G)
+        self.n_pods = _axis_size(mesh, axes.pod)
+        self.R = cfg.rounds
+        self._sr = NamedSharding(mesh, P(axes.data, None))
+        self.hist = new_event_history()
+
+        @jax.jit
+        def objectives(alpha, sigma):
+            dd = dual_mod.dual_objective(data, alpha, sigma, cfg.lam, loss)
+            pp = dual_mod.primal_objective_from_alpha(
+                data, alpha, sigma, cfg.lam, loss
+            )
+            return dd, pp
+
+        @jax.jit
+        def w_from_alpha(alpha, sigma):
+            return dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
+
+        self._objectives = objectives
+        self._w_from_alpha = w_from_alpha
+        self.state = install_initial_state(
+            self.state, raw, data, m, cfg, mesh, axes, reg, init, w_from_alpha
+        )
+
+        # snapshots start in sync with the live state
+        self.W_snap = self.state.W
+        self.sigma_snap = self.state.sigma
+        self.commits_total = 0
+        self._clock = 0  # global simulated time, accumulated across W-steps
+        self.pending = None  # (sigma, omega) awaiting overlap installation
+        # tau="auto": start bulk-synchronous, adapt once per G-commit window
+        self.tau_auto = cfg.tau == "auto"
+        self.tau = 0 if self.tau_auto else cfg.tau
+        self.adapt_window = G
+        self.gate_blocks = 0  # refusal EPISODES this window (a worker
+        #   entering the blocked state counts once until it unblocks or the
+        #   window rolls over, not once per simulation tick)
+        self.gate_refusals_total = 0
+        self.refused: set = set()
+        self.win_start = 0  # w_* index where the adapt window began
+        # per-worker protocol bookkeeping (reset each W-step)
+        self.completed = [0] * G
+        self.cur_round = [0] * G
+        self.snap_commit = [0] * G
+        self.snap_lag = [0] * G
+        self.commits_outer = 0
+        self.p = 0
+
+    # -- protocol -----------------------------------------------------------
+    def gate(self, worker, rnd):
+        """SSP admission (non-blocking): the deterministic event loop polls
+        the decision instead of parking a thread on it."""
+        return rnd <= min(self.completed) + self.tau
+
+    def _rows(self, worker):
+        return slice(worker * self.m_loc, (worker + 1) * self.m_loc)
+
+    def snapshot(self, worker):
+        rows = self._rows(worker)
+        self.snap_commit[worker] = self.commits_total
+        self.snap_lag[worker] = self.completed[worker] - min(self.completed)
+        return Snapshot(
+            W_rows=self.state.W[rows],
+            sigma_rows=self.state.sigma[rows],
+            alpha_rows=self.state.alpha[rows],
+            version=self.commits_total,
+        )
+
+    def commit(self, worker, rnd, delta):
+        """Apply ONE worker's (dalpha_rows, db_rows) immediately.
+
+        The deterministic event loop in ``run_w_step`` does not use this —
+        it fuses all same-tick arrivals into one masked SPMD reduce (that
+        is what makes the simulation bit-reproducible); this method makes
+        the protocol complete so a generic driver can run the simulated
+        member one worker at a time (tested for equivalence at tau=0).
+        """
+        self._maybe_install()
+        dalpha, db = delta
+        rows = self._rows(worker)
+        cfg = self.cfg
+        alpha = self.state.alpha.at[rows].add(cfg.eta * dalpha)
+        W = self.state.W + (
+            jnp.swapaxes(self.state.sigma[rows], 0, 1) @ db
+        ) / cfg.lam
+        self.state = dataclasses.replace(self.state, alpha=alpha, W=W)
+        self.commits_total += 1
+        self.commits_outer += 1
+        self.completed[worker] += 1
+        receipt = CommitReceipt(
+            worker=worker,
+            round=self.p * self.R + rnd,
+            staleness=self.commits_total - 1 - self.snap_commit[worker],
+            lag=self.snap_lag[worker],
+            tick=self._clock + self.commits_outer,
+            version=self.commits_total,
+            tau=self.tau,
+        )
+        record_receipt(self.hist, receipt)
+        self._after_commit_event(
+            receipt.tick, self.state.alpha, self.state.sigma
+        )
+        return receipt
+
+    def install_sigma(self, sigma, omega, *, defer):
+        if defer:
+            self.pending = (sigma, omega)
+        else:
+            self._install(sigma, omega)
+
+    def _install(self, sig, om):
+        st = dataclasses.replace(
+            self.state,
+            sigma=jax.device_put(sig, self._sr),
+            omega=jax.device_put(om, self._sr),
+        )
+        self.state = dataclasses.replace(
+            st, W=self._w_from_alpha(st.alpha, st.sigma)
+        )
+
+    def _maybe_install(self):
+        if self.pending is not None and self.commits_outer >= self.cfg.omega_delay:
+            self._install(*self.pending)
+            self.pending = None
+
+    # -- driver lifecycle ---------------------------------------------------
+    def w_true(self):
+        return self.state.W[: self.raw.m]
+
+    def rho_sigma(self):
+        return self.state.sigma
+
+    def pad_sigma(self, sigma_t, omega_t):
+        return pad_sigma_blocks(
+            sigma_t, omega_t, self.m, self.raw.m, self.cfg.omega_jitter
+        )
+
+    def clock(self):
+        return self._clock
+
+    def _row_mask(self, workers):
+        mask = np.zeros((self.m,), bool)
+        for g in workers:
+            mask[g * self.m_loc : (g + 1) * self.m_loc] = True
+        return jnp.asarray(mask)
+
+    def run_w_step(self, p, rho, outer_key):
+        cfg, G, R = self.cfg, self.G, self.R
+        self.p = p
+        tick_fn = make_async_tick(
+            cfg, self.mesh, self.axes, self.m, self.data.n_max, self.d, rho
+        )
+        # same key schedule as fit_distributed => bit-equal coordinate draws
+        round_keys = jax.random.split(outer_key, R)  # (R, 2)
+
+        self.completed = [0] * G
+        self.cur_round = [0] * G
+        busy = [False] * G
+        finish_at = [0] * G
+        tick = 0
+        self.commits_outer = 0
+        hist = self.hist
+
+        while min(self.completed) < R:
+            # --- overlapped Omega-step installation --------------------
+            self._maybe_install()
+            # --- starts: idle workers gated by the SSP staleness bound --
+            floor = min(self.completed)
+            newly = [
+                g
+                for g in range(G)
+                if not busy[g]
+                and self.completed[g] < R
+                and self.gate(g, self.completed[g])
+            ]
+            blocked = {
+                g
+                for g in range(G)
+                if not busy[g]
+                and self.completed[g] < R
+                and not self.gate(g, self.completed[g])
+            }
+            fresh_blocks = len(blocked - self.refused)
+            self.gate_blocks += fresh_blocks
+            self.gate_refusals_total += fresh_blocks
+            self.refused = blocked
+            if newly:
+                rm = self._row_mask(newly)
+                self.W_snap = _refresh_rows(self.W_snap, self.state.W, rm)
+                self.sigma_snap = _refresh_rows(
+                    self.sigma_snap, self.state.sigma, rm
+                )
+                for g in newly:
+                    busy[g] = True
+                    self.cur_round[g] = self.completed[g]
+                    finish_at[g] = tick + self.delays[g]
+                    self.snap_commit[g] = self.commits_total
+                    self.snap_lag[g] = self.completed[g] - floor
+            # --- advance the clock to the next finish event ------------
+            tick = min(finish_at[g] for g in range(G) if busy[g])
+            active = [g for g in range(G) if busy[g] and finish_at[g] == tick]
+            keys_arr = round_keys[
+                np.clip(np.asarray(self.cur_round, np.int32), 0, R - 1)
+            ]  # (G, 2)
+            active_arr = jnp.zeros((G,), self.data.x.dtype).at[
+                jnp.asarray(active, jnp.int32)
+            ].set(1.0)
+            alpha, W = tick_fn(
+                self.data.x,
+                self.data.y,
+                self.data.mask,
+                self.data.n,
+                self.state.alpha,
+                self.state.W,
+                self.state.sigma,
+                self.W_snap,
+                self.sigma_snap,
+                keys_arr,
+                active_arr,
+            )
+            self.state = dataclasses.replace(self.state, alpha=alpha, W=W)
+            self.commits_total += 1
+            self.commits_outer += 1
+            for g in active:
+                busy[g] = False
+                record_receipt(
+                    hist,
+                    CommitReceipt(
+                        worker=g,
+                        round=p * R + self.cur_round[g],
+                        staleness=self.commits_total - 1 - self.snap_commit[g],
+                        lag=self.snap_lag[g],
+                        tick=self._clock + tick,
+                        version=self.commits_total,
+                        tau=self.tau,
+                    ),
+                )
+                self.completed[g] += 1
+            self._after_commit_event(
+                self._clock + tick, self.state.alpha, self.state.sigma
+            )
+
+        self._clock += tick
+        # --- W-step boundary: a pending Sigma must never be dropped ----
+        if self.pending is not None:
+            self._install(*self.pending)
+            self.pending = None
+
+    def result(self):
+        hist_np = {k: np.asarray(v) for k, v in self.hist.items()}
+        W = np.asarray(self.state.W)[: self.raw.m, : self.raw.d]
+        sigma = np.asarray(self.state.sigma)[: self.raw.m, : self.raw.m]
+        return W, sigma, self.state, hist_np
+
+
+# ---------------------------------------------------------------------------
+# host parameter server — shared by the threaded and multiprocess members
+# ---------------------------------------------------------------------------
+class _HostServerTransport(Transport):
+    """Lock-protected versioned parameter-server state.
+
+    The server owns (alpha, W, sigma, omega) plus the SSP bookkeeping
+    behind one condition variable; ``gate`` BLOCKS the calling worker
+    (thread or connection handler) until admission, ``snapshot``/``commit``
+    are single critical sections.  Subclasses differ only in who the
+    workers are (threads vs socket-connected processes).
+
+    Snapshot versioning: workers read the newest ROUND-BOUNDARY version of
+    ``(W, sigma)`` — the state frozen when ``min(completed)`` last advanced
+    (or the W-step began) — not the live arrays, so a worker admitted late
+    into a round sees the same read set as one admitted first.  At tau=0
+    this is exactly the bulk-synchronous read set, which makes the final
+    iterates order-independent up to float association (the parity anchor
+    against the ``reference`` engine).  A worker's own dual rows
+    (``alpha_rows``) are always current: only its own commits move them.
+    Receipt staleness is stamped from the commit count at which the served
+    boundary was frozen — the true age of the data read — so the metric
+    stays comparable with the simulated member (up to G-1 within a round
+    at tau=0, exactly like the fused-tick accounting documents).
+    """
+
+    needs_mesh = False
+
+    def setup(self, cfg, raw, *, mesh, axes, reg, init, track):
+        axes = axes or MeshAxes()
+        if mesh is not None and (
+            _axis_size(mesh, axes.model) > 1 or _axis_size(mesh, axes.pod) > 1
+        ):
+            raise ValueError(
+                f"transport={self.name!r} shards tasks over workers only; "
+                "model/pod mesh axes need transport='simulated'"
+            )
+        G = cfg.n_workers
+        if G is None:
+            G = _axis_size(mesh, axes.data) if mesh is not None else 1
+        self.cfg, self.raw, self.reg, self.track = cfg, raw, reg, track
+        self.G = G
+        self.m = pad_to_multiple(raw.m, G)
+        self.m_loc = self.m // G
+        self.data = raw.pad_tasks(self.m)
+        self.delays = _worker_delays(cfg, G)
+        self.pace = 0.0 if cfg.async_delays is None else PACE_SECONDS
+        self.R = cfg.rounds
+        data, dtype = self.data, self.data.x.dtype
+        loss = get_loss(cfg.loss)
+
+        @jax.jit
+        def objectives(alpha, sigma):
+            dd = dual_mod.dual_objective(data, alpha, sigma, cfg.lam, loss)
+            pp = dual_mod.primal_objective_from_alpha(
+                data, alpha, sigma, cfg.lam, loss
+            )
+            return dd, pp
+
+        @jax.jit
+        def w_from_alpha(alpha, sigma):
+            return dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
+
+        self._objectives = objectives
+        self._w_from_alpha = w_from_alpha
+
+        self.alpha = jnp.zeros((self.m, data.n_max), dtype)
+        self.W = jnp.zeros((self.m, data.d), dtype)
+        self.sigma, self.omega = omega_mod.init_sigma(self.m, dtype)
+        # warm start / custom-init regularizer (mirrors the mesh engines'
+        # install_initial_state so cross-transport parity holds)
+        sigma_t = omega_t = None
+        if init is not None:
+            sigma_t = jnp.asarray(init.sigma, dtype)
+            omega_t = jnp.asarray(init.omega, dtype)
+        elif reg.custom_init:
+            sigma_t, omega_t = reg.init(raw.m, dtype)
+        if sigma_t is not None:
+            self.sigma, self.omega = pad_sigma_blocks(
+                sigma_t, omega_t, self.m, raw.m, cfg.omega_jitter
+            )
+        if init is not None:
+            alpha0 = jnp.zeros((self.m, data.n_max), dtype)
+            self.alpha = alpha0.at[: raw.m, : raw.n_max].set(
+                jnp.asarray(init.alpha, dtype)
+            )
+            self.W = w_from_alpha(self.alpha, self.sigma)
+
+        self.lock = threading.RLock()
+        self.cond = threading.Condition(self.lock)
+        self.completed = [0] * G
+        self.commits_total = 0
+        self.commits_outer = 0
+        self.pending = None
+        self.tau_auto = cfg.tau == "auto"
+        self.tau = 0 if self.tau_auto else cfg.tau
+        self.adapt_window = G
+        self.gate_blocks = 0
+        self.gate_refusals_total = 0
+        self.refused: set = set()
+        self.win_start = 0
+        self._snap_version = [0] * G
+        self._snap_lag = [0] * G
+        self._boundary = (self.W, self.sigma)
+        self._boundary_version = 0
+        self.hist = new_event_history()
+        self.abort: Optional[BaseException] = None
+        self._shutdown = False  # set by close(); unparks gate waiters
+        self._t0 = time.monotonic()
+        self.p = 0
+
+    # -- protocol (all under the server condition variable) -----------------
+    def _rows(self, worker):
+        return slice(worker * self.m_loc, (worker + 1) * self.m_loc)
+
+    def _check_abort(self):
+        if self.abort is not None:
+            raise RuntimeError(
+                f"transport {self.name!r} aborted: {self.abort!r}"
+            ) from self.abort
+
+    def gate(self, worker, rnd):
+        """Block until the SSP gate admits ``worker`` to start ``rnd``."""
+        with self.cond:
+            while True:
+                self._check_abort()
+                if self._shutdown:
+                    raise RuntimeError(
+                        f"transport {self.name!r} shut down while worker "
+                        f"{worker} was waiting at the gate"
+                    )
+                self._maybe_install()
+                if rnd <= min(self.completed) + self.tau:
+                    self.refused.discard(worker)
+                    return True
+                # refusal EPISODES, matching the simulated member: count on
+                # entering the blocked state, and again after an adapt-window
+                # rollover clears ``refused`` while this worker still waits
+                if worker not in self.refused:
+                    self.refused.add(worker)
+                    self.gate_blocks += 1
+                    self.gate_refusals_total += 1
+                self.cond.wait(timeout=0.05)
+
+    def snapshot(self, worker):
+        with self.cond:
+            self._check_abort()
+            self._maybe_install()
+            rows = self._rows(worker)
+            # staleness is the age of the DATA served (the boundary freeze),
+            # not of the snapshot call itself
+            self._snap_version[worker] = self._boundary_version
+            self._snap_lag[worker] = self.completed[worker] - min(self.completed)
+            W_b, sigma_b = self._boundary
+            return Snapshot(
+                W_rows=W_b[rows],
+                sigma_rows=sigma_b[rows],
+                alpha_rows=self.alpha[rows],
+                version=self._boundary_version,
+            )
+
+    def commit(self, worker, rnd, delta):
+        dalpha, db = delta
+        with self.cond:
+            self._check_abort()
+            self._maybe_install()
+            cfg = self.cfg
+            rows = self._rows(worker)
+            # the Sigma-coupled server reduce for ONE worker's delta_b rows:
+            # W += Sigma[:, rows] @ db / lam  (sigma is symmetric)
+            self.alpha = self.alpha.at[rows].add(cfg.eta * dalpha)
+            self.W = self.W + (
+                jnp.swapaxes(self.sigma[rows], 0, 1) @ db
+            ) / cfg.lam
+            stal = self.commits_total - self._snap_version[worker]
+            self.commits_total += 1
+            self.commits_outer += 1
+            floor_before = min(self.completed)
+            self.completed[worker] += 1
+            if min(self.completed) > floor_before:
+                # round boundary: freeze the snapshot version later starters
+                # of the next round will read (see class docstring)
+                self._boundary = (self.W, self.sigma)
+                self._boundary_version = self.commits_total
+            tick = time.monotonic() - self._t0
+            receipt = CommitReceipt(
+                worker=worker,
+                round=self.p * self.R + rnd,
+                staleness=stal,
+                lag=self._snap_lag[worker],
+                tick=tick,
+                version=self.commits_total,
+                tau=self.tau,
+            )
+            record_receipt(self.hist, receipt)
+            self._after_commit_event(tick, self.alpha, self.sigma)
+            self.cond.notify_all()
+            return receipt
+
+    def install_sigma(self, sigma, omega, *, defer):
+        with self.cond:
+            if defer:
+                self.pending = (sigma, omega)
+            else:
+                self._install(sigma, omega)
+
+    def _install(self, sig, om):
+        self.sigma, self.omega = sig, om
+        self.W = self._w_from_alpha(self.alpha, self.sigma)
+        # the install must reach the NEXT snapshot, not wait for the next
+        # floor advance: refresh the served boundary (matches the simulated
+        # member, whose post-install starters read the live state)
+        self._boundary = (self.W, self.sigma)
+        self._boundary_version = self.commits_total
+
+    def _maybe_install(self):
+        if self.pending is not None and self.commits_outer >= self.cfg.omega_delay:
+            self._install(*self.pending)
+            self.pending = None
+
+    def _fail(self, exc: BaseException):
+        with self.cond:
+            if self.abort is None:
+                self.abort = exc
+            self.cond.notify_all()
+
+    # -- driver lifecycle ---------------------------------------------------
+    def _begin_w_step(self, p):
+        with self.cond:
+            self._check_abort()
+            self.p = p
+            self.completed = [0] * self.G
+            self.commits_outer = 0
+            self._boundary = (self.W, self.sigma)
+            self._boundary_version = self.commits_total
+
+    def _end_w_step(self):
+        with self.cond:
+            self._check_abort()
+            if self.pending is not None:  # barrier: never drop a Sigma
+                self._install(*self.pending)
+                self.pending = None
+
+    def w_true(self):
+        with self.lock:
+            return self.W[: self.raw.m]
+
+    def rho_sigma(self):
+        with self.lock:
+            return self.sigma
+
+    def pad_sigma(self, sigma_t, omega_t):
+        return pad_sigma_blocks(
+            sigma_t, omega_t, self.m, self.raw.m, self.cfg.omega_jitter
+        )
+
+    def clock(self):
+        return time.monotonic() - self._t0
+
+    def result(self):
+        with self.lock:
+            hist_np = {k: np.asarray(v) for k, v in self.hist.items()}
+            W = np.asarray(self.W)[: self.raw.m, : self.raw.d]
+            sigma = np.asarray(self.sigma)[: self.raw.m, : self.raw.m]
+            state = DistributedState(
+                alpha=self.alpha, W=self.W, sigma=self.sigma, omega=self.omega
+            )
+        return W, sigma, state, hist_np
+
+
+class ThreadedTransport(_HostServerTransport):
+    """Real in-host parameter server: G worker threads against the locked
+    server state.  Arrival order is genuinely nondeterministic (OS
+    scheduling), the SSP gate still bounds lag by tau.  ``async_delays``
+    pace the workers (``PACE_SECONDS`` per simulated tick) so straggler
+    schedules remain expressible under real clocks."""
+
+    name = "threaded"
+
+    def run_w_step(self, p, rho, outer_key):
+        self._begin_w_step(p)
+        round_keys = jax.random.split(outer_key, self.R)
+        solve = make_block_solver(self.cfg, self.data.n_max, rho)
+        blocks = [
+            (
+                self.data.x[self._rows(g)],
+                self.data.y[self._rows(g)],
+                self.data.n[self._rows(g)],
+                jnp.arange(
+                    g * self.m_loc, (g + 1) * self.m_loc, dtype=jnp.int32
+                ),
+            )
+            for g in range(self.G)
+        ]
+        # compile once before fanning out (all workers share one shape)
+        x0, y0, n0, t0 = blocks[0]
+        snap0 = self.snapshot(0)
+        jax.block_until_ready(
+            solve(
+                x0, y0, snap0.alpha_rows, snap0.W_rows, n0,
+                snap0.sigma_rows, t0, round_keys[0],
+            )
+        )
+
+        def worker(g):
+            try:
+                x, y, n, tids = blocks[g]
+                for r in range(self.R):
+                    self.gate(g, r)
+                    snap = self.snapshot(g)
+                    dalpha, db = solve(
+                        x, y, snap.alpha_rows, snap.W_rows, n,
+                        snap.sigma_rows, tids, round_keys[r],
+                    )
+                    dalpha = jax.block_until_ready(dalpha)
+                    if self.pace:
+                        time.sleep(self.pace * self.delays[g])
+                    self.commit(g, r, (dalpha, db))
+            except BaseException as e:  # propagate into the driver
+                self._fail(e)
+
+        threads = [
+            threading.Thread(
+                target=worker, args=(g,), name=f"dmtrl-worker-{g}", daemon=True
+            )
+            for g in range(self.G)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self._end_w_step()
+
+
+# ---------------------------------------------------------------------------
+# multiprocess — socket/pickle parameter-server shim, per-worker processes
+# ---------------------------------------------------------------------------
+def _send_msg(sock: socket.socket, obj) -> None:
+    buf = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(struct.pack("!Q", len(buf)) + buf)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        b = sock.recv(min(n, 1 << 20))
+        if not b:
+            raise ConnectionError("transport peer closed the connection")
+        chunks.append(b)
+        n -= len(b)
+    return b"".join(chunks)
+
+
+def _recv_msg(sock: socket.socket):
+    (n,) = struct.unpack("!Q", _recv_exact(sock, 8))
+    return pickle.loads(_recv_exact(sock, n))
+
+
+class MultiprocessTransport(_HostServerTransport):
+    """The threaded server state machine driven over a loopback socket by
+    per-worker *processes* (length-prefixed pickle frames, one handler
+    thread per connection) — the cross-host RPC shape with the host
+    boundary faked by localhost.  Trusted-local shim only: pickle framing
+    is not an authentication boundary."""
+
+    name = "multiprocess"
+
+    def setup(self, cfg, raw, *, mesh, axes, reg, init, track):
+        super().setup(cfg, raw, mesh=mesh, axes=axes, reg=reg, init=init, track=track)
+        self._listener: Optional[socket.socket] = None
+        self._procs: List[subprocess.Popen] = []
+        self._conns: Dict[int, socket.socket] = {}
+        self._handlers: List[threading.Thread] = []
+        self._stderr_files: List = []
+        self._step_seq = 0
+        self._step_payload = None
+        self._step_sent = [0] * self.G
+        self._stepdone = 0
+        self._shutdown = False
+
+    def _ensure_workers(self):
+        if self._procs:
+            return
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.bind(("127.0.0.1", 0))
+        self._listener.listen(self.G)
+        port = self._listener.getsockname()[1]
+        src_root = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+        for g in range(self.G):
+            env = dict(os.environ)
+            env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+            env["REPRO_MP_ADDR"] = f"127.0.0.1:{port}"
+            env["REPRO_MP_WORKER"] = str(g)
+            env["JAX_PLATFORMS"] = "cpu"
+            # workers are single-device hosts; don't inherit a forced count
+            env.pop("XLA_FLAGS", None)
+            errf = tempfile.TemporaryFile()
+            self._stderr_files.append(errf)
+            self._procs.append(
+                subprocess.Popen(
+                    [
+                        sys.executable,
+                        "-c",
+                        "from repro.core.transport import _mp_worker_main; "
+                        "_mp_worker_main()",
+                    ],
+                    env=env,
+                    stdout=subprocess.DEVNULL,
+                    stderr=errf,
+                )
+            )
+        self._listener.settimeout(120.0)
+        for _ in range(self.G):
+            conn, _addr = self._listener.accept()
+            tag, g = _recv_msg(conn)
+            assert tag == "hello", tag
+            rows = self._rows(g)
+            _send_msg(
+                conn,
+                (
+                    "init",
+                    dict(
+                        cfg=self.cfg,
+                        x=np.asarray(self.data.x[rows]),
+                        y=np.asarray(self.data.y[rows]),
+                        n=np.asarray(self.data.n[rows]),
+                        tids=np.arange(rows.start, rows.stop, dtype=np.int32),
+                        n_max=self.data.n_max,
+                        R=self.R,
+                        sleep_s=self.pace * self.delays[g],
+                    ),
+                ),
+            )
+            self._conns[g] = conn
+            h = threading.Thread(
+                target=self._serve_conn, args=(g, conn),
+                name=f"dmtrl-ps-conn-{g}", daemon=True,
+            )
+            self._handlers.append(h)
+            h.start()
+
+    def _serve_conn(self, g: int, conn: socket.socket):
+        try:
+            while True:
+                msg = _recv_msg(conn)
+                op = msg[0]
+                if op == "next":
+                    with self.cond:
+                        while (
+                            self._step_seq <= self._step_sent[g]
+                            and not self._shutdown
+                        ):
+                            self.cond.wait(timeout=0.1)
+                        if self._shutdown and self._step_seq <= self._step_sent[g]:
+                            _send_msg(conn, ("done",))
+                            return
+                        self._step_sent[g] = self._step_seq
+                        payload = self._step_payload
+                    _send_msg(conn, ("wstep", payload))
+                elif op == "gate":
+                    self.gate(g, msg[1])
+                    _send_msg(conn, ("ok",))
+                elif op == "snapshot":
+                    s = self.snapshot(g)
+                    _send_msg(
+                        conn,
+                        (
+                            "snap",
+                            np.asarray(s.W_rows),
+                            np.asarray(s.sigma_rows),
+                            np.asarray(s.alpha_rows),
+                            s.version,
+                        ),
+                    )
+                elif op == "commit":
+                    r, dalpha, db = msg[1], msg[2], msg[3]
+                    rc = self.commit(
+                        g, r, (jnp.asarray(dalpha), jnp.asarray(db))
+                    )
+                    _send_msg(conn, ("receipt", rc.staleness, rc.lag, rc.version))
+                elif op == "stepdone":
+                    with self.cond:
+                        self._stepdone += 1
+                        self.cond.notify_all()
+                    _send_msg(conn, ("ok",))
+                elif op == "error":
+                    raise RuntimeError(f"worker {g} failed:\n{msg[1]}")
+                elif op == "bye":
+                    return
+                else:  # pragma: no cover - protocol guard
+                    raise RuntimeError(f"unknown transport op {op!r}")
+        except BaseException as e:
+            if not self._shutdown:
+                self._fail(e)
+
+    def _check_procs(self):
+        for g, proc in enumerate(self._procs):
+            if proc.poll() is not None and not self._shutdown:
+                errf = self._stderr_files[g]
+                errf.seek(0)
+                tail = errf.read()[-2000:].decode(errors="replace")
+                exc = RuntimeError(
+                    f"multiprocess worker {g} died "
+                    f"(returncode {proc.returncode}):\n{tail}"
+                )
+                # route through abort so handler threads parked in gate()
+                # unwind instead of waiting on a floor that never advances
+                self._fail(exc)
+                raise exc
+
+    def run_w_step(self, p, rho, outer_key):
+        self._ensure_workers()
+        self._begin_w_step(p)
+        round_keys = np.asarray(jax.random.split(outer_key, self.R))
+        with self.cond:
+            self._step_seq += 1
+            self._step_payload = dict(p=p, rho=float(rho), round_keys=round_keys)
+            self._stepdone = 0
+            self.cond.notify_all()
+            while self._stepdone < self.G:
+                self._check_abort()
+                self._check_procs()
+                self.cond.wait(timeout=0.2)
+        self._end_w_step()
+
+    def close(self):
+        with self.cond:
+            self._shutdown = True
+            self.cond.notify_all()
+        for h in self._handlers:
+            h.join(timeout=10.0)
+        for conn in self._conns.values():
+            try:
+                conn.close()
+            except OSError:
+                pass
+        if self._listener is not None:
+            self._listener.close()
+        for proc in self._procs:
+            try:
+                proc.wait(timeout=10.0)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+        for errf in self._stderr_files:
+            errf.close()
+        self._procs, self._handlers, self._conns = [], [], {}
+
+
+def _mp_worker_main():  # pragma: no cover - runs in worker subprocesses
+    """Entry point of a multiprocess-transport worker process: connect to
+    the parameter server named by REPRO_MP_ADDR, receive this worker's
+    task block, then loop gate -> snapshot -> local solve -> commit."""
+    import traceback
+
+    host, port = os.environ["REPRO_MP_ADDR"].rsplit(":", 1)
+    g = int(os.environ["REPRO_MP_WORKER"])
+    sock = socket.create_connection((host, int(port)), timeout=300.0)
+    try:
+        _send_msg(sock, ("hello", g))
+        tag, init = _recv_msg(sock)
+        assert tag == "init", tag
+        cfg: DMTRLConfig = init["cfg"]
+        x = jnp.asarray(init["x"])
+        y = jnp.asarray(init["y"])
+        n = jnp.asarray(init["n"])
+        tids = jnp.asarray(init["tids"])
+        R, sleep_s = init["R"], init["sleep_s"]
+        while True:
+            _send_msg(sock, ("next",))
+            msg = _recv_msg(sock)
+            if msg[0] == "done":
+                break
+            payload = msg[1]
+            solve = make_block_solver(cfg, init["n_max"], payload["rho"])
+            round_keys = payload["round_keys"]
+            for r in range(R):
+                _send_msg(sock, ("gate", r))
+                _recv_msg(sock)
+                _send_msg(sock, ("snapshot",))
+                _tag, W_rows, sigma_rows, alpha_rows, _version = _recv_msg(sock)
+                dalpha, db = solve(
+                    x, y, jnp.asarray(alpha_rows), jnp.asarray(W_rows), n,
+                    jnp.asarray(sigma_rows), tids, jnp.asarray(round_keys[r]),
+                )
+                dalpha = np.asarray(dalpha)
+                db = np.asarray(db)
+                if sleep_s:
+                    time.sleep(sleep_s)
+                _send_msg(sock, ("commit", r, dalpha, db))
+                _recv_msg(sock)
+            _send_msg(sock, ("stepdone",))
+            _recv_msg(sock)
+        _send_msg(sock, ("bye",))
+    except Exception:
+        try:
+            _send_msg(sock, ("error", traceback.format_exc()))
+        except OSError:
+            pass
+        raise
+    finally:
+        sock.close()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """A named way to run the snapshot/commit protocol."""
+
+    name: str
+    description: str
+    needs_mesh: bool
+    factory: Callable[[], Transport]
+
+
+_REGISTRY: Dict[str, TransportSpec] = {}
+
+
+def register_transport(spec: TransportSpec) -> TransportSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_transport(name: str) -> TransportSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown transport {name!r}; have {sorted(_REGISTRY)}"
+        ) from e
+
+
+def available_transports() -> Dict[str, TransportSpec]:
+    return dict(sorted(_REGISTRY.items()))
+
+
+register_transport(
+    TransportSpec(
+        name="simulated",
+        description="deterministic in-process clock simulation; fused "
+        "masked SPMD commits on a JAX mesh; bit-reproducible",
+        needs_mesh=True,
+        factory=SimulatedTransport,
+    )
+)
+register_transport(
+    TransportSpec(
+        name="threaded",
+        description="real in-host parameter server: G worker threads over "
+        "lock-protected versioned state; nondeterministic arrival order, "
+        "SSP-gate-correct",
+        needs_mesh=False,
+        factory=ThreadedTransport,
+    )
+)
+register_transport(
+    TransportSpec(
+        name="multiprocess",
+        description="socket/pickle parameter-server shim with per-worker "
+        "processes on localhost (the cross-host RPC shape)",
+        needs_mesh=False,
+        factory=MultiprocessTransport,
+    )
+)

@@ -1,0 +1,495 @@
+"""Pluggable transport layer (core/transport.py).
+
+Anchors:
+  * registry surface: get_transport("simulated"|"threaded"|"multiprocess").
+  * golden replay: the ``simulated`` transport reproduces the integer event
+    histories recorded from the pre-refactor engine bit-exactly
+    (tests/golden/async_histories.json; the G=4 straggler cases replay in a
+    subprocess and are marked slow).
+  * cross-transport parity: threaded/multiprocess at tau=0 match the
+    ``reference`` engine to float-association tolerance for any worker
+    count (round-boundary snapshot versioning), and all transports agree
+    with each other.
+  * SSP-gate correctness under genuinely nondeterministic thread arrivals:
+    observed lag never exceeds tau.
+  * cost-aware tau="auto" (staleness_budget) controller transitions.
+  * the synchronous engine's degenerate tau=0 receipts flow through the
+    same CommitReceipt -> staleness_summary path.
+  * deprecation hygiene: legacy wrappers emit exactly one
+    DeprecationWarning and legacy async_delays config kwargs still route.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import AsyncOptions, DMTRLConfig, DMTRLEstimator, MeshAxes
+from repro.core import convergence as cv
+from repro.core.async_dmtrl import fit_async
+from repro.core.dmtrl import fit as fit_reference
+from repro.core.transport import (
+    _adapt_tau,
+    available_transports,
+    get_transport,
+    make_block_solver,
+)
+from repro.data.synthetic import synthetic
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO, "tests", "golden", "async_histories.json")
+
+ATOL = 5e-5  # float-association tolerance for cross-transport parity
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def ref_result(small_problem, small_cfg):
+    return fit_reference(small_cfg, small_problem.train)
+
+
+def _fit_transport(cfg, data, transport, n_workers, mesh=None, **opt_kw):
+    opts = AsyncOptions(transport=transport, n_workers=n_workers, **opt_kw)
+    return fit_async(cfg, data, mesh, MeshAxes(data="data"), options=opts)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_surface():
+    names = set(available_transports())
+    assert {"simulated", "threaded", "multiprocess"} <= names
+    for n in ("simulated", "threaded", "multiprocess"):
+        spec = get_transport(n)
+        assert spec.name == n
+        assert callable(spec.factory)
+    with pytest.raises(KeyError, match="unknown transport"):
+        get_transport("carrier-pigeon")
+
+
+def test_bad_transport_knobs_rejected(small_problem, one_device_mesh):
+    with pytest.raises(ValueError, match="transport"):
+        AsyncOptions(transport=7)
+    with pytest.raises(ValueError, match="n_workers"):
+        AsyncOptions(n_workers=0)
+    with pytest.raises(ValueError, match="staleness_budget"):
+        AsyncOptions(tau="auto", staleness_budget=-1.0)
+    # a budget with a static tau would be silently ignored -> eager error
+    with pytest.raises(ValueError, match="staleness_budget"):
+        AsyncOptions(tau=2, staleness_budget=0.5)
+    with pytest.raises(KeyError, match="unknown transport"):
+        fit_async(
+            DMTRLConfig(transport="smoke-signal"),
+            small_problem.train,
+            one_device_mesh,
+            MeshAxes(data="data"),
+        )
+    # simulated derives workers from the mesh; a conflicting n_workers is an
+    # error, not a silent override
+    with pytest.raises(ValueError, match="n_workers"):
+        fit_async(
+            DMTRLConfig(n_workers=2),
+            small_problem.train,
+            one_device_mesh,
+            MeshAxes(data="data"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# golden replay — simulated must stay bit-identical to the legacy engine
+# ---------------------------------------------------------------------------
+def _int_history(hist, keys):
+    return {k: np.asarray(hist[k]).astype(int).tolist() for k in keys}
+
+
+def test_golden_replay_one_device(golden, one_device_mesh):
+    rec = golden["g1_tau2_omega1"]
+    assert rec["devices"] == 1
+    cfg_kw = dict(rec["config"])
+    cfg_kw["async_delays"] = tuple(cfg_kw["async_delays"])
+    sp = synthetic(1, **rec["problem"])
+    _, _, _, hist = fit_async(
+        DMTRLConfig(**cfg_kw), sp.train, one_device_mesh, MeshAxes(data="data")
+    )
+    assert _int_history(hist, rec["history"].keys()) == rec["history"]
+
+
+_GOLDEN_SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+    import json, sys
+    import jax, numpy as np
+    sys.path.insert(0, {repo!r} + "/src")
+    from repro.core import DMTRLConfig, MeshAxes
+    from repro.core.async_dmtrl import fit_async
+    from repro.data.synthetic import synthetic
+
+    rec = json.loads({rec!r})
+    cfg_kw = dict(rec["config"]); cfg_kw["async_delays"] = tuple(cfg_kw["async_delays"])
+    sp = synthetic(1, **rec["problem"])
+    mesh = jax.make_mesh(({devices},), ("data",))
+    _, _, _, hist = fit_async(
+        DMTRLConfig(**cfg_kw), sp.train, mesh, MeshAxes(data="data")
+    )
+    out = {{k: np.asarray(hist[k]).astype(int).tolist() for k in rec["history"]}}
+    print("REPLAY" + json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "case", ["g4_straggler_tau1", "g4_straggler_tau4_omega2", "g4_straggler_tau_auto"]
+)
+def test_golden_replay_straggler_mesh(golden, case):
+    """4-worker straggler schedules (incl. tau="auto") replay bit-exactly
+    on a real 4-device mesh in a subprocess."""
+    rec = golden[case]
+    code = _GOLDEN_SUBPROC.format(
+        devices=rec["devices"], repo=REPO, rec=json.dumps(rec)
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("REPLAY")][-1]
+    assert json.loads(line[len("REPLAY"):]) == rec["history"]
+
+
+# ---------------------------------------------------------------------------
+# cross-transport parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_workers", [1, 2, 4])
+def test_threaded_tau0_matches_reference(
+    small_problem, small_cfg, ref_result, n_workers
+):
+    """Round-boundary snapshot versioning makes the threaded server's tau=0
+    iterates order-independent: any worker count matches the reference
+    engine to float-association tolerance."""
+    W, sigma, state, hist = _fit_transport(
+        small_cfg, small_problem.train, "threaded", n_workers, tau=0
+    )
+    np.testing.assert_allclose(W, np.asarray(ref_result.W), atol=ATOL)
+    np.testing.assert_allclose(sigma, np.asarray(ref_result.sigma), atol=ATOL)
+    assert hist["w_lag"].max() == 0
+    total = small_cfg.outer_iters * small_cfg.rounds * n_workers
+    assert len(hist["w_worker"]) == total
+
+
+def test_threaded_matches_simulated_at_tau0(
+    small_problem, small_cfg, one_device_mesh
+):
+    """Transport-parity anchor (simulated vs threaded): same final (W,
+    Sigma) to tolerance at tau=0."""
+    W1, s1, _, h1 = fit_async(
+        small_cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
+    )
+    W2, s2, _, h2 = _fit_transport(
+        small_cfg, small_problem.train, "threaded", 4, tau=0
+    )
+    np.testing.assert_allclose(W1, W2, atol=ATOL)
+    np.testing.assert_allclose(s1, s2, atol=ATOL)
+    # both histories flow through the same receipt path
+    for h in (h1, h2):
+        s = cv.staleness_summary(h)
+        assert s["n_commits"] == len(h["w_worker"])
+        assert s["max_lag"] == 0.0
+
+
+def test_threaded_ssp_gate_correct_under_stragglers(small_problem, small_cfg):
+    """Genuinely nondeterministic thread arrivals, paced 4x straggler: the
+    SSP gate must still bound lag by tau, staleness must actually occur,
+    and the run must converge within 2x of the synchronous gap."""
+    sync_gap = None
+    for tau in (0, 1):
+        W, sigma, state, hist = _fit_transport(
+            small_cfg, small_problem.train, "threaded", 4,
+            tau=tau, async_delays=(1, 1, 1, 4),
+        )
+        assert hist["w_lag"].max() <= tau
+        if tau == 0:
+            sync_gap = abs(float(hist["gap"][-1]))
+        else:
+            assert hist["w_staleness"].max() >= 1
+            assert float(hist["gap"][-1]) <= 2.0 * sync_gap + 1e-9
+        # dual blocks only move where tasks have real samples (no snapshot
+        # row mixing across the concurrent commits)
+        alpha = np.asarray(state.alpha)[: small_problem.train.m]
+        mask = np.asarray(small_problem.train.mask)
+        assert np.all(alpha[mask == 0.0] == 0.0)
+        assert all(
+            np.any(alpha[i][mask[i] == 1.0] != 0.0)
+            for i in range(small_problem.train.m)
+        )
+
+
+def test_threaded_omega_overlap_installs(small_problem, small_cfg):
+    """omega_delay > 0 on the host server: the deferred Sigma lands inside
+    the next W-step (boundary refresh) — never dropped — and the run still
+    converges to a valid trace-1 Sigma."""
+    cfg = dataclasses.replace(small_cfg, outer_iters=3)
+    W, sigma, _, hist = _fit_transport(
+        cfg, small_problem.train, "threaded", 2,
+        tau=1, omega_delay=2, async_delays=(1, 2),
+    )
+    assert np.trace(sigma) == pytest.approx(1.0, abs=1e-4)
+    assert hist["gap"][-1] < hist["gap"][0]
+
+
+def test_threaded_warm_start_partial_fit(small_problem):
+    """partial_fit warm-starts the host server state (alpha/Sigma install)
+    and history merging keeps the commit clock monotone."""
+    est = DMTRLEstimator(
+        engine="async",
+        async_options=AsyncOptions(transport="threaded", n_workers=2),
+        loss="hinge", lam=1e-3, outer_iters=1, rounds=3, local_iters=32,
+        solver="block_gram", block_size=32, seed=0,
+    )
+    est.partial_fit(small_problem.train)
+    gap0 = est.history["gap"][-1]
+    n0 = len(est.history["round"])
+    est.partial_fit(small_problem.train)
+    assert len(est.history["round"]) == 2 * n0
+    assert est.history["round"][n0] > est.history["round"][n0 - 1]
+    assert est.history["gap"][-1] <= gap0 + 1e-6
+
+
+def test_estimator_routes_transport_and_rejects_core_kwarg(small_problem):
+    with pytest.raises(ValueError, match="per-engine options"):
+        DMTRLEstimator(engine="async", transport="threaded")
+    with pytest.raises(ValueError, match="per-engine options"):
+        DMTRLEstimator(engine="reference", staleness_budget=1.0)
+    est = DMTRLEstimator(
+        engine="async",
+        async_options=AsyncOptions(transport="threaded", n_workers=2),
+        loss="hinge", lam=1e-3, outer_iters=1, rounds=2, local_iters=32,
+        solver="block_gram", block_size=32, seed=0,
+    ).fit(small_problem.train)
+    assert est.score(small_problem.test) > 0.0
+    assert len(est.history["w_worker"]) == 2 * 2  # rounds x workers
+
+
+# ---------------------------------------------------------------------------
+# protocol surface — a generic driver can run the simulated member too
+# ---------------------------------------------------------------------------
+def test_simulated_protocol_methods_drive_one_w_step(
+    small_problem, one_device_mesh
+):
+    """gate/snapshot/commit on the simulated transport are real protocol
+    methods: driving one W-step manually (one worker at a time) matches the
+    reference engine on a fixed-Sigma regularizer."""
+    import jax
+
+    from repro.core.omega_regularizers import get_regularizer
+
+    cfg = DMTRLConfig(
+        loss="hinge", lam=1e-3, outer_iters=1, rounds=3, local_iters=32,
+        solver="block_gram", block_size=32, seed=0,
+        omega_regularizer="identity_stl",
+    )
+    data = small_problem.train
+    reg = get_regularizer("identity_stl")
+    t = get_transport("simulated").factory()
+    t.setup(
+        cfg, data, mesh=one_device_mesh, axes=MeshAxes(data="data"),
+        reg=reg, init=None, track=False,
+    )
+    rho = 1.0  # identity_stl couples nothing; any rho-consistent value —
+    # must match what the reference run uses below, so compute it there too
+    from repro.core.dmtrl import _rho_value
+
+    rho = _rho_value(cfg, t.rho_sigma(), reg=reg)
+    solve = make_block_solver(cfg, t.data.n_max, rho)
+    key = jax.random.PRNGKey(cfg.seed)
+    _, outer_key = jax.random.split(key)
+    round_keys = jax.random.split(outer_key, cfg.rounds)
+    tids = np.arange(t.m, dtype=np.int32)
+    for r in range(cfg.rounds):
+        assert t.gate(0, r)
+        snap = t.snapshot(0)
+        dalpha, db = solve(
+            t.data.x, t.data.y, snap.alpha_rows, snap.W_rows, t.data.n,
+            snap.sigma_rows, tids, round_keys[r],
+        )
+        receipt = t.commit(0, r, (dalpha, db))
+        assert receipt.worker == 0 and receipt.round == r
+        assert receipt.staleness == 0 and receipt.lag == 0
+        assert receipt.version == r + 1
+    W, sigma, state, hist = t.result()
+    ref = fit_reference(cfg, data, regularizer=reg)
+    np.testing.assert_allclose(W, np.asarray(ref.W), atol=ATOL)
+    assert cv.staleness_summary(hist)["n_commits"] == cfg.rounds
+
+
+# ---------------------------------------------------------------------------
+# degenerate tau=0 member: the synchronous engine's receipts
+# ---------------------------------------------------------------------------
+def test_sync_engine_receipts_flow_through_staleness_summary(
+    small_problem, small_cfg, one_device_mesh
+):
+    from repro.core.distributed import fit_distributed
+
+    _, _, _, hist = fit_distributed(
+        small_cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
+    )
+    s = cv.staleness_summary(hist)
+    total = small_cfg.outer_iters * small_cfg.rounds
+    assert s["n_commits"] == total  # 1 worker x rounds
+    assert s["max_staleness"] == 0.0 and s["max_lag"] == 0.0
+    assert hist["tau_trace"].max() == 0
+    # sync histories now carry the transport clock too
+    ticks, gaps = cv.effective_gap_curve(hist)
+    np.testing.assert_array_equal(ticks, np.arange(1, total + 1))
+
+
+def test_sync_and_async_tau0_histories_agree(
+    small_problem, small_cfg, one_device_mesh
+):
+    """The degenerate member really is the same event stream: identical
+    integer bookkeeping between fit_distributed and simulated tau=0."""
+    from repro.core.distributed import fit_distributed
+
+    _, _, _, h_sync = fit_distributed(
+        small_cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
+    )
+    _, _, _, h_async = fit_async(
+        small_cfg, small_problem.train, one_device_mesh, MeshAxes(data="data")
+    )
+    for k in ("w_worker", "w_round", "w_staleness", "w_lag", "w_tick",
+              "tau_trace"):
+        np.testing.assert_array_equal(h_sync[k], h_async[k])
+
+
+# ---------------------------------------------------------------------------
+# cost-aware tau="auto" (staleness_budget)
+# ---------------------------------------------------------------------------
+def test_adapt_tau_budget_transitions():
+    slack = {"max_lag": 0.0, "mean_staleness": 0.0}
+    hot = {"max_lag": 3.0, "mean_staleness": 2.5}
+    # budget exceeded -> narrow, even when the gate refused starts
+    assert _adapt_tau(3, 5, hot, 8, staleness_budget=1.0) == 2
+    # ... and clamps at the floor
+    assert _adapt_tau(0, 5, hot, 8, staleness_budget=1.0) == 0
+    # budget satisfied -> the refusal/widen rule still applies
+    assert _adapt_tau(3, 2, slack, 8, staleness_budget=1.0) == 4
+    assert _adapt_tau(8, 2, slack, 8, staleness_budget=1.0) == 8  # cap
+    # budget satisfied, no refusals, unused slack -> narrow as before
+    assert _adapt_tau(3, 0, slack, 8, staleness_budget=1.0) == 2
+    # exactly at budget is NOT exceeded -> hold/widen path
+    at_budget = {"max_lag": 3.0, "mean_staleness": 1.0}
+    assert _adapt_tau(3, 0, at_budget, 8, staleness_budget=1.0) == 3
+    # no budget -> legacy controller behaviour (regression guard)
+    assert _adapt_tau(3, 0, {"max_lag": 3.0}, 8) == 3
+    assert _adapt_tau(3, 0, {"max_lag": 0.0}, 8) == 2
+    assert _adapt_tau(3, 1, {"max_lag": 3.0}, 8) == 4
+
+
+def test_staleness_budget_zero_pins_tau_auto_at_zero(small_problem, small_cfg):
+    """A zero budget means "never pay staleness": the controller must keep
+    narrowing ahead of the widen rule, so tau stays 0 under a straggler
+    that would otherwise widen the gate."""
+    cfg = dataclasses.replace(small_cfg, outer_iters=2)
+    _, _, _, hist = _fit_transport(
+        cfg, small_problem.train, "threaded", 4,
+        tau="auto", async_delays=(1, 1, 1, 4), staleness_budget=0.0,
+    )
+    assert hist["tau_trace"].max() == 0
+
+
+def test_tau_auto_still_widens_without_budget(small_problem, small_cfg):
+    """Same straggler schedule without a budget: the paced gate refusals
+    must widen the bound (the controller's legacy behaviour)."""
+    cfg = dataclasses.replace(small_cfg, outer_iters=2)
+    _, _, _, hist = _fit_transport(
+        cfg, small_problem.train, "threaded", 4,
+        tau="auto", async_delays=(1, 1, 1, 4),
+    )
+    assert hist["tau_trace"][0] == 0
+    assert hist["tau_trace"].max() >= 1
+    assert hist["gate_refusals"][-1] >= 1
+
+
+# ---------------------------------------------------------------------------
+# deprecation hygiene
+# ---------------------------------------------------------------------------
+def _one_deprecation(fn, *args, **kwargs):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in dep]
+    assert "deprecated" in str(dep[0].message)
+    return out
+
+
+def test_deprecated_wrappers_warn_exactly_once(
+    small_problem, small_cfg, one_device_mesh
+):
+    import repro.core as core
+
+    ax = MeshAxes(data="data")
+    # raw async_delays/tau kwargs on the legacy config still route through
+    legacy = dataclasses.replace(small_cfg, tau=1, async_delays=(2,))
+    _, _, _, hist = _one_deprecation(
+        core.fit_async, legacy, small_problem.train, one_device_mesh, ax
+    )
+    assert hist["w_tick"][-1] == 2 * small_cfg.outer_iters * small_cfg.rounds
+    _one_deprecation(
+        core.fit_distributed, small_cfg, small_problem.train,
+        one_device_mesh, ax,
+    )
+    _one_deprecation(core.fit, small_cfg, small_problem.train)
+
+
+# ---------------------------------------------------------------------------
+# multiprocess — socket/pickle parameter server (slow: per-worker processes
+# each pay a jax import; wired into the slow CI job)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_multiprocess_tau0_matches_reference_and_threaded(
+    small_problem, small_cfg, ref_result
+):
+    W, sigma, _, hist = _fit_transport(
+        small_cfg, small_problem.train, "multiprocess", 2, tau=0
+    )
+    np.testing.assert_allclose(W, np.asarray(ref_result.W), atol=ATOL)
+    np.testing.assert_allclose(sigma, np.asarray(ref_result.sigma), atol=ATOL)
+    assert hist["w_lag"].max() == 0
+    total = small_cfg.outer_iters * small_cfg.rounds * 2
+    assert len(hist["w_worker"]) == total
+    Wt, st_, _, _ = _fit_transport(
+        small_cfg, small_problem.train, "threaded", 2, tau=0
+    )
+    np.testing.assert_allclose(W, Wt, atol=ATOL)
+    np.testing.assert_allclose(sigma, st_, atol=ATOL)
+
+
+@pytest.mark.slow
+def test_multiprocess_ssp_straggler(small_problem, small_cfg):
+    """Per-worker processes with a paced straggler at tau=1: gate-correct
+    lag, real staleness, convergence within 2x of its own tau=0 run."""
+    W0, _, _, h0 = _fit_transport(
+        small_cfg, small_problem.train, "multiprocess", 2,
+        tau=0, async_delays=(1, 4),
+    )
+    W1, _, _, h1 = _fit_transport(
+        small_cfg, small_problem.train, "multiprocess", 2,
+        tau=1, async_delays=(1, 4),
+    )
+    assert h1["w_lag"].max() <= 1
+    assert float(h1["gap"][-1]) <= 2.0 * abs(float(h0["gap"][-1])) + 1e-9
