@@ -1,0 +1,187 @@
+"""Serving load benchmark: queued arrivals -> continuous-batching scheduler.
+
+Generates a Poisson arrival stream of mixed-task scoring requests and
+drives it through the ``ContinuousBatchingScheduler`` on a VIRTUAL clock
+whose per-tile service time is the MEASURED wall-clock of the real jitted
+scoring tile (so latency numbers reflect actual compute), with every
+``--straggler-every``-th tile slowed by ``--straggler-mult`` to model a
+straggler batch. Halfway through the stream the model is hot-swapped to a
+new ``(W, version)`` snapshot, exercising the no-drain switch under load.
+
+Per policy (EDF and FIFO) the bench records p50/p95/p99 latency,
+throughput, queue depth, tile fill, per-task counters and SLO-violation
+counts (``ServingMetrics.summary()``) to BENCH_serving.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving
+    PYTHONPATH=src python benchmarks/bench_serving.py --requests 2000 --rate 500
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+class MeasuredEngine:
+    """Adapter wrapper: advances the virtual clock by each tile's measured
+    wall-clock service time (x straggler multiplier on straggler tiles).
+    Everything but ``run_tile`` delegates to the wrapped engine."""
+
+    def __init__(self, inner, clock, straggler_every: int, straggler_mult: float):
+        self.inner, self.clock = inner, clock
+        self.straggler_every = straggler_every
+        self.straggler_mult = straggler_mult
+        self.tiles = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def run_tile(self, reqs, snapshot):
+        t0 = time.perf_counter()
+        self.inner.run_tile(reqs, snapshot)
+        dt = time.perf_counter() - t0
+        self.tiles += 1
+        if self.straggler_every and self.tiles % self.straggler_every == 0:
+            dt *= self.straggler_mult
+        self.clock.advance(dt)
+
+
+def run_load(
+    *,
+    requests: int = 2000,
+    batch: int = 32,
+    tasks: int = 16,
+    d: int = 64,
+    rate: float = 1000.0,
+    slo_ms: float = 20.0,
+    deadline_ms: float = 200.0,
+    straggler_every: int = 10,
+    straggler_mult: float = 8.0,
+    policy: str = "edf",
+    seed: int = 0,
+):
+    import numpy as np
+
+    from repro.serve import (
+        ContinuousBatchingScheduler,
+        ModelSnapshot,
+        MTLScoringEngine,
+        ScoreRequest,
+        VirtualClock,
+    )
+
+    rng = np.random.RandomState(seed)
+    W1 = rng.randn(tasks, d).astype(np.float32)
+    W2 = rng.randn(tasks, d).astype(np.float32)
+    clock = VirtualClock()
+    inner = MTLScoringEngine(W1, batch=batch, version=1)
+    inner.score_batch(np.zeros((batch, d), np.float32), 0)  # compile warmup
+    engine = MeasuredEngine(inner, clock, straggler_every, straggler_mult)
+    sched = ContinuousBatchingScheduler(
+        engine, slo_s=slo_ms / 1e3, policy=policy, clock=clock
+    )
+
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+    reqs = [
+        ScoreRequest(
+            task=int(rng.randint(tasks)), x=rng.randn(d).astype(np.float32)
+        )
+        for _ in range(requests)
+    ]
+    # half the traffic carries a hard deadline, half is best-effort
+    with_deadline = rng.rand(requests) < 0.5
+
+    i = 0
+    swapped = False
+    served_versions: dict = {}
+    while i < requests or sched.pending:
+        while i < requests and arrivals[i] <= clock():
+            sched.submit(
+                reqs[i],
+                deadline_s=deadline_ms / 1e3 if with_deadline[i] else None,
+            )
+            i += 1
+            if not swapped and i >= requests // 2:
+                sched.publish(ModelSnapshot(version=2, W=W2))
+                swapped = True
+        if not sched.pending:
+            if i < requests:
+                clock.advance_to(arrivals[i])
+            continue
+        for r in sched.step():
+            served_versions[r.snapshot_version] = (
+                served_versions.get(r.snapshot_version, 0) + 1
+            )
+
+    return {
+        "requests": requests,
+        "batch": batch,
+        "tasks": tasks,
+        "d": d,
+        "rate_rps": rate,
+        "policy": policy,
+        "slo_ms": slo_ms,
+        "deadline_ms": deadline_ms,
+        "straggler_every": straggler_every,
+        "straggler_mult": straggler_mult,
+        "seed": seed,
+        "served_per_version": {str(k): v for k, v in sorted(served_versions.items())},
+        "metrics": sched.metrics.summary(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--tasks", type=int, default=16)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=1000.0,
+                    help="mean arrival rate (requests per virtual second)")
+    ap.add_argument("--slo-ms", type=float, default=20.0)
+    ap.add_argument("--deadline-ms", type=float, default=200.0)
+    ap.add_argument("--straggler-every", type=int, default=10,
+                    help="every k-th tile is a straggler (0 disables)")
+    ap.add_argument("--straggler-mult", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", nargs="+", default=["edf", "fifo"])
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json"),
+    )
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    rows = []
+    print("policy,completed,expired,p50_ms,p95_ms,p99_ms,throughput_rps,"
+          "slo_violations,queue_max,tile_fill")
+    for policy in args.policies:
+        row = run_load(
+            requests=args.requests, batch=args.batch, tasks=args.tasks,
+            d=args.d, rate=args.rate, slo_ms=args.slo_ms,
+            deadline_ms=args.deadline_ms,
+            straggler_every=args.straggler_every,
+            straggler_mult=args.straggler_mult,
+            policy=policy, seed=args.seed,
+        )
+        rows.append(row)
+        s = row["metrics"]
+        lat = s["latency"]
+        print(
+            f"{policy},{s['completed']},{s['expired']},"
+            f"{lat['p50_s'] * 1e3:.2f},{lat['p95_s'] * 1e3:.2f},"
+            f"{lat['p99_s'] * 1e3:.2f},{s['throughput_rps']:.1f},"
+            f"{s['slo_violations']},{s['queue_depth_max']},"
+            f"{s['tile_fill']:.3f}",
+            flush=True,
+        )
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ Design (docs/DESIGN.md §8):
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Dict, Optional, Sequence, Union
 
 import jax.numpy as jnp
@@ -178,6 +179,11 @@ class DMTRLEstimator:
         self.history_: Dict[str, np.ndarray] = {}
         self.rho_per_outer_: list = []
         self.n_fit_calls_: int = 0
+        # serving surface: model version bumps on every install, and every
+        # engine/scheduler built from this estimator gets the new snapshot
+        # pushed (weak refs: serving objects own their own lifetime)
+        self._model_version: int = 0
+        self._model_refs: list = []
 
     # -- training -----------------------------------------------------------
     def _engine_kwargs(self) -> dict:
@@ -224,6 +230,8 @@ class DMTRLEstimator:
                 self.rho_per_outer_ = list(res.rho_per_outer)
         self._fitted = True
         self.n_fit_calls_ += 1
+        self._model_version += 1
+        self._publish_model()
 
     def fit(self, data: MTLData, track: bool = True) -> "DMTRLEstimator":
         """Run the full alternating procedure from scratch. Returns self."""
@@ -319,14 +327,79 @@ class DMTRLEstimator:
         return self.history_
 
     # -- serving ------------------------------------------------------------
+    def model_snapshot(self):
+        """The current servable model as a versioned ModelSnapshot
+        (serve/scheduler.py): (W, Sigma, version). The version bumps on
+        every ``fit``/``partial_fit`` install, so serving consumers can
+        tell stale weights from current ones."""
+        self._check_fitted()
+        from ..serve.scheduler import ModelSnapshot
+
+        return ModelSnapshot(
+            version=self._model_version,
+            W=np.asarray(self.W_),
+            sigma=np.asarray(self.sigma_),
+        )
+
+    def _publish_model(self) -> None:
+        """Push the new snapshot to every live serving object built from
+        this estimator (hot-swap: engines/schedulers switch weights
+        without draining; in-flight tiles finish on the old snapshot).
+        Uses the restamping ``publish_weights`` surface so a consumer
+        whose version counter ran ahead (manual ``swap``, a transport
+        subscription on the same scheduler) still installs the newly
+        trained weights instead of colliding."""
+        targets = [obj for obj in (r() for r in self._model_refs) if obj is not None]
+        self._model_refs = [weakref.ref(obj) for obj in targets]
+        if not targets:
+            return
+        snap = self.model_snapshot()
+        for obj in targets:
+            obj.publish_weights(snap.W, snap.sigma, snap.version)
+
     def scoring_engine(self, batch: int = 32):
-        """Batched MTL scoring engine over the fitted W (serve/mtl.py)."""
+        """Batched MTL scoring engine over the fitted W (serve/mtl.py).
+
+        The engine is version-bound and SUBSCRIBED: a later
+        ``partial_fit`` pushes the new weights into it (and ``refresh()``
+        pulls them), so it never silently serves stale weights.
+        """
         self._check_fitted()
         from ..serve.mtl import MTLScoringEngine
 
-        return MTLScoringEngine(
-            self.W_, batch=batch, classify=self._loss.is_classification
+        engine = MTLScoringEngine(
+            self.W_,
+            batch=batch,
+            classify=self._loss.is_classification,
+            version=self._model_version,
+            source=self,
         )
+        self._model_refs.append(weakref.ref(engine))
+        return engine
+
+    def serving_scheduler(
+        self,
+        batch: int = 32,
+        *,
+        slo_s: Optional[float] = None,
+        policy: str = "edf",
+        max_queue: Optional[int] = None,
+        clock=None,
+        metrics=None,
+    ):
+        """Continuous-batching scheduler over a fresh scoring engine
+        (serve/scheduler.py), subscribed to this estimator's snapshots:
+        ``partial_fit`` hot-swaps the served weights between tiles."""
+        from ..serve.scheduler import ContinuousBatchingScheduler
+
+        engine = self.scoring_engine(batch=batch)
+        kwargs = dict(slo_s=slo_s, policy=policy, max_queue=max_queue,
+                      metrics=metrics)
+        if clock is not None:
+            kwargs["clock"] = clock
+        scheduler = ContinuousBatchingScheduler(engine, **kwargs)
+        self._model_refs.append(weakref.ref(scheduler))
+        return scheduler
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         state = "fitted" if self._fitted else "unfitted"

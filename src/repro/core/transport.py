@@ -326,6 +326,36 @@ class Transport:
     needs_mesh: bool = False
     n_pods: int = 1  # rho n_blocks_scale (pod sharding: simulated only)
 
+    def __init__(self):
+        self._model_subscribers: List[Callable] = []
+        self._model_version = 0
+
+    # -- model snapshot subscription (serving hot-swap hook) ----------------
+    def subscribe(self, callback: Callable) -> Callable:
+        """Register ``callback(W, sigma, version)`` to fire after every
+        Sigma install — the point where a new servable ``(W, Sigma)``
+        exists. Arrays arrive at the RAW problem size (padding stripped),
+        versions strictly increase across the run. The serving scheduler's
+        ``publish_weights`` has exactly this signature, so
+
+            transport.subscribe(scheduler.publish_weights)
+
+        hot-swaps live training commits into a serving queue. Callbacks
+        run on the installing thread (under the server lock for host
+        members): keep them quick and NEVER call back into the transport.
+        """
+        self._model_subscribers.append(callback)
+        return callback
+
+    def _notify_model(self, W: Array, sigma: Array) -> None:
+        self._model_version += 1
+        if not self._model_subscribers:
+            return
+        W = np.asarray(W)
+        sigma = np.asarray(sigma)
+        for cb in self._model_subscribers:
+            cb(W, sigma, self._model_version)
+
     # -- driver lifecycle ---------------------------------------------------
     def setup(self, cfg, raw, *, mesh, axes, reg, init, track) -> None:
         raise NotImplementedError
@@ -566,6 +596,10 @@ class SimulatedTransport(Transport):
         )
         self.state = dataclasses.replace(
             st, W=self._w_from_alpha(st.alpha, st.sigma)
+        )
+        self._notify_model(
+            self.state.W[: self.raw.m, : self.raw.d],
+            self.state.sigma[: self.raw.m, : self.raw.m],
         )
 
     def _maybe_install(self):
@@ -917,6 +951,10 @@ class _HostServerTransport(Transport):
         # member, whose post-install starters read the live state)
         self._boundary = (self.W, self.sigma)
         self._boundary_version = self.commits_total
+        self._notify_model(
+            self.W[: self.raw.m, : self.raw.d],
+            self.sigma[: self.raw.m, : self.raw.m],
+        )
 
     def _maybe_install(self):
         if self.pending is not None and self.commits_outer >= self.cfg.omega_delay:

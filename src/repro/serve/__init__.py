@@ -1,13 +1,22 @@
-"""Serving: batched LM prefill+decode engine and batched MTL scoring.
+"""Serving: continuous-batching scheduler over batched LM and MTL engines.
 
 Submodules load lazily (PEP 562): the MTL scoring surface must not pull
 in the LM model stack that ``engine`` imports (transformers, flash
-kernels), and vice versa.
+kernels), and vice versa. ``scheduler``/``metrics`` are engine-agnostic
+(no model imports at all).
 """
 _LM = {"Request", "ServeConfig", "ServingEngine", "make_serve_step"}
 _MTL = {"MTLScoringEngine", "ScoreRequest", "make_score_step"}
+_SCHED = {
+    "ContinuousBatchingScheduler",
+    "ModelSnapshot",
+    "QueueFull",
+    "ServeRequest",
+    "VirtualClock",
+}
+_METRICS = {"LatencyHistogram", "ServingMetrics"}
 
-__all__ = sorted(_LM | _MTL)
+__all__ = sorted(_LM | _MTL | _SCHED | _METRICS)
 
 
 def __getattr__(name):
@@ -19,4 +28,12 @@ def __getattr__(name):
         from . import mtl
 
         return getattr(mtl, name)
+    if name in _SCHED:
+        from . import scheduler
+
+        return getattr(scheduler, name)
+    if name in _METRICS:
+        from . import metrics
+
+        return getattr(metrics, name)
     raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

@@ -1,12 +1,22 @@
-"""Batched serving engine: request queue -> batched prefill -> decode loop.
+"""Batched LM serving engine: request queue -> batched prefill -> decode loop.
 
 The jitted ``serve_step`` (one token for the whole batch, cache in/out) is
 the unit the dry-run lowers for the decode_32k / long_500k shapes.
+
+``Request`` shares the ``ServeRequest`` queue fields with the MTL scorer
+(arrival/deadline/status/snapshot_version), and the engine implements the
+same scheduler adapter surface (``admit`` / ``run_tile`` /
+``model_snapshot`` — LM params are fixed for the engine's lifetime, so
+its snapshots never change version), so both engines run behind ONE
+``ContinuousBatchingScheduler``. The LM tile unit is a full
+prefill+decode generation for <= batch requests; decode-step-level
+continuous batching (injecting requests mid-decode) is future work
+(docs/DESIGN.md §10).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
+from .scheduler import ModelSnapshot, ServeRequest
 
 Array = jax.Array
 
@@ -43,37 +54,98 @@ def _sample(logits: Array, key: Array, temperature: float) -> Array:
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # (S,) int32
+class Request(ServeRequest):
+    prompt: np.ndarray = None  # (S,) int32
     max_new_tokens: int = 32
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None  # "eos" | "length"
 
 
 class ServingEngine:
-    """Minimal continuous-batching-free engine: collect a batch of requests,
-    right-pad prompts to a common length, batched prefill, then decode until
-    all requests finish (EOS or budget)."""
+    """Batched generate engine: right-pad a tile of <= batch prompts to a
+    common length, batched prefill, then decode until every request
+    finishes (EOS or token budget).
+
+    The decode loop is ``_decode`` so its stopping semantics (EOS vs
+    budget) are testable against a scripted step function without a real
+    model.
+    """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self._step = jax.jit(make_serve_step(cfg))
         self._key = jax.random.PRNGKey(scfg.seed)
+        # one stable snapshot object: the scheduler detects engine-side
+        # swaps by identity, and LM params never change
+        self._snapshot = ModelSnapshot(version=0)
 
-    def run(self, requests: List[Request], side: Optional[Array] = None) -> List[Request]:
+    # -- scheduler adapter surface -----------------------------------------
+    @property
+    def batch(self) -> int:
+        return self.scfg.batch
+
+    def model_snapshot(self) -> ModelSnapshot:
+        return self._snapshot
+
+    def admit(self, r: Request) -> None:
+        prompt = np.asarray(r.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"prompt must be a non-empty 1-D token array, got shape "
+                f"{prompt.shape}"
+            )
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"prompt must hold integer token ids, got dtype {prompt.dtype}"
+            )
+        # canonicalize in place: a list/other-int-dtype prompt admitted
+        # here must also be servable by run() (which reads .shape)
+        r.prompt = prompt.astype(np.int32, copy=False)
+        if r.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {r.max_new_tokens}"
+            )
+
+    def run_tile(self, requests: Sequence[Request], snapshot: ModelSnapshot) -> None:
+        """LM tiles ignore the snapshot weights: params are fixed for the
+        engine's lifetime (hot-swap is the MTL scorer's feature)."""
+        self.run(list(requests))
+
+    # -- blocking surface ---------------------------------------------------
+    def run(
+        self, requests: List[Request], side: Optional[Array] = None
+    ) -> List[Request]:
         cfg, scfg = self.cfg, self.scfg
-        assert len(requests) <= scfg.batch
-        while len(requests) < scfg.batch:  # pad batch with dummies
-            requests.append(Request(prompt=np.array([0], np.int32), max_new_tokens=1))
-        S = max(int(r.prompt.shape[0]) for r in requests)
+        if len(requests) > scfg.batch:
+            raise ValueError(
+                f"{len(requests)} requests exceed the engine batch "
+                f"{scfg.batch}; run in tiles (or use the scheduler)"
+            )
+        # pad the TILE with dummy requests, not the caller's list
+        tile = list(requests)
+        while len(tile) < scfg.batch:
+            tile.append(Request(prompt=np.array([0], np.int32), max_new_tokens=1))
+        S = max(int(r.prompt.shape[0]) for r in tile)
         toks = np.zeros((scfg.batch, S), np.int32)
-        for i, r in enumerate(requests):
+        for i, r in enumerate(tile):
             toks[i, S - r.prompt.shape[0] :] = r.prompt  # left-pad
         last_logits, cache = prefill(
             cfg, self.params, jnp.asarray(toks), side, extra_len=scfg.max_len
         )
+        self._decode(tile, last_logits, cache)
+        return requests
+
+    def _decode(self, requests: List[Request], logits: Array, cache) -> None:
+        """Greedy/sampled decode until every request is done.
+
+        A request stops on EOS (``finish_reason="eos"``, the EOS token is
+        kept in the output) or on exhausting its ``max_new_tokens`` budget
+        (``finish_reason="length"``); the loop ends when all requests
+        stopped, never beyond the largest budget.
+        """
+        scfg = self.scfg
         budget = max(r.max_new_tokens for r in requests)
-        logits = last_logits
         for t in range(budget):
             self._key, sub = jax.random.split(self._key)
             nxt = _sample(logits, sub, scfg.temperature)
@@ -84,7 +156,10 @@ class ServingEngine:
                     r.output.append(tok)
                     if tok == scfg.eos_id:
                         r.done = True
-            if all(r.done or len(r.output) >= r.max_new_tokens for r in requests):
+                        r.finish_reason = "eos"
+                    elif len(r.output) >= r.max_new_tokens:
+                        r.done = True
+                        r.finish_reason = "length"
+            if all(r.done for r in requests):
                 break
             logits, cache = self._step(self.params, nxt, cache)
-        return requests

@@ -1,4 +1,4 @@
-"""Batched MTL scoring: request queue -> fixed-shape jitted score step.
+"""Batched MTL scoring: fixed-shape jitted tiles over a hot-swappable W.
 
 The MTL analogue of ``serve/engine.py``: requests carry (task_id, feature
 vector), the engine packs them into fixed (batch, d) tiles so ONE jitted
@@ -6,28 +6,48 @@ computation serves every batch (no per-request recompilation), gathers the
 per-task weight rows, and returns raw scores plus +-1 labels for
 classification models.
 
-    est = DMTRLEstimator(...).fit(train)
-    eng = est.scoring_engine(batch=64)          # or MTLScoringEngine(W)
-    done = eng.run([ScoreRequest(task=3, x=phi), ...])
+The engine serves a versioned ``ModelSnapshot`` (W, sigma, version) and
+swaps it live: ``publish``/``swap`` install a new same-shape W without
+retracing (W is an ARGUMENT of the jitted step, not a closure), and
+``refresh()`` pulls the newest snapshot from the estimator that built the
+engine — the fix for the stale-weights footgun where an engine created
+before ``partial_fit`` silently kept serving the old weights.
+
+Two call surfaces, one scoring/validation path:
+
+    eng = est.scoring_engine(batch=64)           # or MTLScoringEngine(W)
+    done = eng.run([ScoreRequest(task=3, x=phi), ...])   # blocking batch
+    sched = est.serving_scheduler(batch=64)      # continuous batching
+    sched.submit(ScoreRequest(task=3, x=phi)); sched.step()
+
+``run`` / ``run_tile`` / ``score_batch`` all validate through
+``_validate_batch`` (task range + feature width) exactly once, and all
+score through the same pad/tile loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import threading
+import weakref
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .scheduler import ModelSnapshot, ServeRequest
+
 Array = jax.Array
 
 
 @dataclasses.dataclass
-class ScoreRequest:
+class ScoreRequest(ServeRequest):
     """One scoring request: task id + feature vector (phi already applied).
 
     The engine fills ``score`` (raw margin w_task^T x) and, for
-    classification models, ``label`` (+-1).
+    classification models, ``label`` (+-1); the scheduler additionally
+    stamps the queue fields inherited from ``ServeRequest`` (arrival,
+    deadline, status, ``snapshot_version``).
     """
 
     task: int
@@ -36,35 +56,64 @@ class ScoreRequest:
     label: Optional[float] = None
 
 
-def make_score_step(W: Array):
-    """score_step(X (B, d), tasks (B,)) -> (B,) margins; jit-able, fixed
-    batch shape so all batches share one executable. Same kernel as the
-    estimator's predict path (core/dual.py:task_scores)."""
+def make_score_step():
+    """score_step(W (m, d), X (B, d), tasks (B,)) -> (B,) margins.
+
+    W is a runtime argument, not a closure: a hot-swapped W of the same
+    shape reuses the compiled executable (no retrace on ``publish``).
+    Same kernel as the estimator's predict path (core/dual.py:task_scores).
+    """
     from repro.core.dual import task_scores
 
-    def score_step(X, tasks):
+    def score_step(W, X, tasks):
         return task_scores(W, X, tasks)
 
     return score_step
 
 
 class MTLScoringEngine:
-    """Minimal batched scorer over a fitted task-weight matrix W (m, d).
+    """Batched scorer over a versioned task-weight matrix W (m, d).
 
     Requests are packed into fixed-size (batch, d) tiles (the last tile is
     padded with task-0 zero rows) so the jitted step never retraces; the
-    padding rows are dropped before results are written back.
+    padding rows are dropped before results are written back. Implements
+    the scheduler adapter surface (``admit`` / ``run_tile`` /
+    ``model_snapshot`` / ``task_key``) so it can sit behind a
+    ``ContinuousBatchingScheduler``.
     """
 
-    def __init__(self, W, batch: int = 32, classify: bool = True):
-        self.W = jnp.asarray(W)
-        if self.W.ndim != 2:
-            raise ValueError(f"W must be (m, d), got {self.W.shape}")
+    def __init__(
+        self,
+        W,
+        batch: int = 32,
+        classify: bool = True,
+        *,
+        version: int = 0,
+        source=None,
+    ):
+        W = jnp.asarray(W)
+        if W.ndim != 2:
+            raise ValueError(f"W must be (m, d), got {W.shape}")
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.batch = int(batch)
         self.classify = bool(classify)
-        self._step = jax.jit(make_score_step(self.W))
+        self._snapshot = ModelSnapshot(version=int(version), W=W)
+        self._step = jax.jit(make_score_step())
+        self._source = weakref.ref(source) if source is not None else None
+        # serializes the swap surface (publish/swap/publish_weights/refresh)
+        # against concurrent publishers; scoring reads one snapshot ref and
+        # needs no lock
+        self._swap_lock = threading.RLock()
+
+    # -- model surface ------------------------------------------------------
+    @property
+    def W(self) -> Array:
+        return self._snapshot.W
+
+    @property
+    def version(self) -> int:
+        return self._snapshot.version
 
     @property
     def m(self) -> int:
@@ -74,41 +123,88 @@ class MTLScoringEngine:
     def d(self) -> int:
         return int(self.W.shape[1])
 
-    def _validate(self, r: ScoreRequest) -> None:
-        if not 0 <= int(r.task) < self.m:
+    def model_snapshot(self) -> ModelSnapshot:
+        return self._snapshot
+
+    def validate_snapshot(self, snapshot: ModelSnapshot) -> None:
+        """Hot-swap admission: W must keep the serving shape so the
+        compiled step is reused and task ids stay valid. The scheduler
+        calls this before installing any published snapshot."""
+        W = jnp.asarray(snapshot.W)
+        if W.shape != self.W.shape:
             raise ValueError(
-                f"task id {r.task} out of range [0, {self.m})"
-            )
-        x = np.asarray(r.x)
-        if x.shape != (self.d,):
-            raise ValueError(
-                f"request feature shape {x.shape} != ({self.d},)"
+                f"hot-swap W shape {W.shape} != serving shape {self.W.shape}"
             )
 
-    def run(self, requests: List[ScoreRequest]) -> List[ScoreRequest]:
-        """Score all requests in fixed-shape batches; fills score/label
-        in place and returns the same list. Delegates the pad/tile/score
-        loop to ``score_batch`` so there is exactly one scoring path."""
-        for r in requests:
-            self._validate(r)
-        if not requests:
-            return requests
-        X = np.stack([np.asarray(r.x, np.float32) for r in requests])
-        t = np.asarray([int(r.task) for r in requests], np.int32)
-        z = self.score_batch(X, t)
-        for r, zi in zip(requests, z):
-            r.score = float(zi)
-            if self.classify:
-                r.label = 1.0 if zi >= 0.0 else -1.0
-        return requests
+    def publish(self, snapshot: ModelSnapshot) -> int:
+        """Install a newer (W, sigma, version); shape must match so the
+        compiled step is reused and task ids stay valid. Re-delivering the
+        current version is an idempotent no-op; an older version raises."""
+        self.validate_snapshot(snapshot)
+        W = jnp.asarray(snapshot.W)
+        with self._swap_lock:
+            if snapshot.version == self._snapshot.version:
+                return self._snapshot.version
+            if snapshot.version < self._snapshot.version:
+                raise ValueError(
+                    f"snapshot version {snapshot.version} is not newer than "
+                    f"the installed version {self._snapshot.version}"
+                )
+            self._snapshot = dataclasses.replace(snapshot, W=W)
+            return self._snapshot.version
 
-    def score_batch(self, X, tasks) -> np.ndarray:
-        """Array-in/array-out fast path: (n, d) features + (n,) task ids ->
-        (n,) margins through the same fixed-shape jitted step, with no
-        per-row request objects (pad with numpy, slice tiles)."""
+    def swap(self, W, sigma=None, version: Optional[int] = None) -> int:
+        """Array-level hot-swap (auto-increments the version)."""
+        with self._swap_lock:
+            if version is None:
+                version = self._snapshot.version + 1
+            return self.publish(
+                ModelSnapshot(version=int(version), W=W, sigma=sigma)
+            )
+
+    def publish_weights(self, W, sigma=None, version: Optional[int] = None) -> int:
+        """Restamping array-level publish: an external producer's version
+        counter (estimator model version, transport install counter) that
+        is not ahead of this engine's is re-stamped into the engine's own
+        monotone space, so a push from an independent producer ALWAYS
+        installs its weights instead of colliding (same atomic
+        compute-and-install contract as
+        ``ContinuousBatchingScheduler.publish_weights``)."""
+        with self._swap_lock:
+            cur = self._snapshot.version
+            v = int(version) if version is not None else cur + 1
+            if v <= cur:
+                v = cur + 1
+            return self.publish(ModelSnapshot(version=v, W=W, sigma=sigma))
+
+    def refresh(self) -> int:
+        """Pull the newest snapshot from the estimator that built this
+        engine (``DMTRLEstimator.scoring_engine``); no-op when already
+        current. Returns the serving version."""
+        est = self._source() if self._source is not None else None
+        if est is None:
+            raise RuntimeError(
+                "refresh() needs an engine built by "
+                "DMTRLEstimator.scoring_engine (no live source estimator)"
+            )
+        snap = est.model_snapshot()
+        with self._swap_lock:
+            if snap.version > self._snapshot.version:
+                self.publish(snap)
+            return self._snapshot.version
+
+    # -- validation (THE single point: every entry path lands here) ---------
+    def _validate_batch(
+        self, X, tasks
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Normalize + validate (X, tasks) once for run/run_tile/score_batch:
+        feature width must be d, task ids in [0, m)."""
         X = np.asarray(X, np.float32)
         if X.ndim != 2 or X.shape[1] != self.d:
-            raise ValueError(f"X must be (n, {self.d}), got {X.shape}")
+            raise ValueError(
+                f"request feature shape {X.shape} does not pack to "
+                f"(n, {self.d})"
+            )
         t = np.ascontiguousarray(
             np.broadcast_to(np.asarray(tasks, np.int32), (X.shape[0],))
         )
@@ -116,6 +212,23 @@ class MTLScoringEngine:
             raise ValueError(
                 f"task id out of range [0, {self.m}): [{t.min()}, {t.max()}]"
             )
+        return X, t
+
+    def admit(self, r: ScoreRequest) -> None:
+        """Scheduler admission hook: validate ONE request through the same
+        batch validator (a 1-row pack)."""
+        x = np.asarray(r.x, np.float32)
+        if x.ndim != 1:
+            raise ValueError(
+                f"request feature shape {x.shape} != ({self.d},)"
+            )
+        self._validate_batch(x[None], np.asarray([int(r.task)]))
+
+    def task_key(self, r: ScoreRequest) -> int:
+        return int(r.task)
+
+    # -- scoring (one pad/tile loop shared by every surface) ----------------
+    def _score_tiles(self, X: np.ndarray, t: np.ndarray, W: Array) -> np.ndarray:
         n, B = X.shape[0], self.batch
         pad = (-n) % B
         if pad:
@@ -124,6 +237,54 @@ class MTLScoringEngine:
         out = np.empty((X.shape[0],), np.float32)
         for lo in range(0, X.shape[0], B):
             out[lo : lo + B] = np.asarray(
-                self._step(jnp.asarray(X[lo : lo + B]), jnp.asarray(t[lo : lo + B]))
+                self._step(
+                    W, jnp.asarray(X[lo : lo + B]), jnp.asarray(t[lo : lo + B])
+                )
             )
         return out[:n]
+
+    def _stack(self, requests: Sequence[ScoreRequest]) -> Tuple[np.ndarray, np.ndarray]:
+        xs = [np.asarray(r.x, np.float32) for r in requests]
+        try:
+            X = np.stack(xs)
+        except ValueError as e:
+            raise ValueError(
+                f"request feature shapes do not stack: "
+                f"{sorted({x.shape for x in xs})}"
+            ) from e
+        t = np.asarray([int(r.task) for r in requests], np.int32)
+        return X, t
+
+    def _write_back(self, requests: Sequence[ScoreRequest], z: np.ndarray) -> None:
+        for r, zi in zip(requests, z):
+            r.score = float(zi)
+            if self.classify:
+                r.label = 1.0 if zi >= 0.0 else -1.0
+
+    def score_batch(self, X, tasks) -> np.ndarray:
+        """Array-in/array-out fast path: (n, d) features + (n,) task ids ->
+        (n,) margins against the CURRENT snapshot."""
+        X, t = self._validate_batch(X, tasks)
+        return self._score_tiles(X, t, self.W)
+
+    def run(self, requests: List[ScoreRequest]) -> List[ScoreRequest]:
+        """Blocking batch surface: score all requests in fixed-shape tiles
+        against the current snapshot; fills score/label in place and
+        returns the same list (validation + scoring both delegate to the
+        single ``score_batch`` path)."""
+        if not requests:
+            return requests
+        X, t = self._stack(requests)
+        self._write_back(requests, self.score_batch(X, t))
+        return requests
+
+    def run_tile(
+        self, requests: Sequence[ScoreRequest], snapshot: ModelSnapshot
+    ) -> None:
+        """Scheduler tile hook: score <= batch requests against the PACKED
+        snapshot (not the engine's current one) so in-flight tiles complete
+        on the model they were packed with. Requests were already validated
+        at admission (``admit``), so the hot path goes straight to the
+        shared tile loop."""
+        X, t = self._stack(requests)
+        self._write_back(requests, self._score_tiles(X, t, jnp.asarray(snapshot.W)))

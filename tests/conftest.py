@@ -21,6 +21,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (subprocess/convergence)"
     )
+    config.addinivalue_line(
+        "markers", "load: serving load-generator test (scheduler under "
+        "queued traffic)"
+    )
 
 
 def fast_arch_params(fast):

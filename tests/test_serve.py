@@ -103,3 +103,96 @@ def test_greedy_decode_is_deterministic():
         reqs = [Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=6)]
         return eng.run(reqs)[0].output
     assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# decode-loop stopping semantics (scripted step: no real model needed)
+# ---------------------------------------------------------------------------
+def _scripted_engine(monkeypatch, token_rows, batch=2, eos_id=1, seed=0):
+    """ServingEngine whose prefill/step are stubbed so greedy decode emits
+    ``token_rows[t]`` (one (B,) row per decode position t)."""
+    import jax.numpy as jnp
+
+    from repro.serve import engine as engine_mod
+
+    cfg = get_config("qwen1_5-4b").reduced()
+    eng = engine_mod.ServingEngine(
+        cfg, None, engine_mod.ServeConfig(batch=batch, max_len=8, eos_id=eos_id)
+    )
+    script = np.asarray(token_rows, np.int32)  # (T, B)
+    vocab = int(script.max()) + 2
+
+    def logits_for(t):
+        z = np.full((batch, vocab), -10.0, np.float32)
+        z[np.arange(batch), script[min(t, script.shape[0] - 1)]] = 10.0
+        return jnp.asarray(z)
+
+    calls = {"steps": 0}
+
+    def fake_prefill(cfg_, params, toks, side=None, extra_len=0):
+        calls["steps"] = 0
+        return logits_for(0), None
+
+    def fake_step(params, tok, cache):
+        calls["steps"] += 1
+        return logits_for(calls["steps"]), None
+
+    monkeypatch.setattr(engine_mod, "prefill", fake_prefill)
+    eng._step = fake_step
+    return eng, calls
+
+
+def test_decode_stops_on_eos_before_budget(monkeypatch):
+    """An EOS token finishes the request (and the loop) well before the
+    token budget; the EOS is kept in the output."""
+    script = [[2, 3], [1, 3], [9, 3], [9, 3]]  # req0 hits EOS at t=1
+    eng, calls = _scripted_engine(monkeypatch, script)
+    r0 = Request(prompt=np.array([5], np.int32), max_new_tokens=100)
+    r1 = Request(prompt=np.array([5], np.int32), max_new_tokens=3)
+    eng.run([r0, r1])
+    assert r0.output == [2, 1] and r0.done and r0.finish_reason == "eos"
+    assert r1.output == [3, 3, 3] and r1.done and r1.finish_reason == "length"
+    # loop ended when the last request finished (t=2), not at budget=100
+    assert calls["steps"] == 2
+
+
+def test_decode_stops_on_budget_without_eos(monkeypatch):
+    script = [[4, 4], [5, 5], [6, 6], [7, 7]]  # no EOS anywhere
+    eng, calls = _scripted_engine(monkeypatch, script)
+    r = Request(prompt=np.array([5], np.int32), max_new_tokens=3)
+    reqs = [r]
+    done = eng.run(reqs)
+    assert done is reqs and len(reqs) == 1  # caller's list not padded
+    assert r.output == [4, 5, 6] and r.done and r.finish_reason == "length"
+    assert calls["steps"] == 2  # budget 3 => prefill logits + 2 steps
+
+
+def test_lm_engine_behind_scheduler(monkeypatch):
+    """The LM engine runs behind the same ContinuousBatchingScheduler as
+    the MTL scorer: shared queue shape, tile-level continuous batching."""
+    from repro.serve import ContinuousBatchingScheduler, VirtualClock
+
+    script = [[2, 2], [1, 1]]  # everyone EOSes at t=1
+    eng, _ = _scripted_engine(monkeypatch, script)
+    sched = ContinuousBatchingScheduler(eng, clock=VirtualClock())
+    reqs = [Request(prompt=[5, 6], max_new_tokens=4)] + [  # list prompt:
+        # admission must canonicalize it so packing can read .shape
+        Request(prompt=np.array([5, 6], np.int32), max_new_tokens=4)
+        for _ in range(2)
+    ]
+    for r in reqs:
+        sched.submit(r)
+    assert isinstance(reqs[0].prompt, np.ndarray)
+    n = sched.run_until_idle()
+    assert n == 3 and sched.metrics.tiles == 2  # batch=2 -> 2 + 1 packed
+    for r in reqs:
+        assert r.status == "done" and r.output == [2, 1]
+        assert r.finish_reason == "eos" and r.snapshot_version == 0
+    with pytest.raises(ValueError, match="prompt"):
+        sched.submit(Request(prompt=np.array([], np.int32)))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(
+            Request(prompt=np.array([1], np.int32), max_new_tokens=0)
+        )
+    with pytest.raises(ValueError, match="integer"):
+        sched.submit(Request(prompt=np.array([1.5, 2.0]), max_new_tokens=2))

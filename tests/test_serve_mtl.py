@@ -67,3 +67,135 @@ def test_estimator_scoring_engine(small_problem, small_cfg):
     z = est.decision_function(x, tasks=1)
     assert r.score == pytest.approx(float(z[0]), abs=1e-6)
     assert r.label in (-1.0, 1.0)  # hinge => classification labels
+
+
+# ---------------------------------------------------------------------------
+# edge cases: empty lists, tile boundaries, score_batch range errors
+# ---------------------------------------------------------------------------
+def test_empty_request_list(W):
+    eng = MTLScoringEngine(W, batch=4)
+    assert eng.run([]) == []
+    z = eng.score_batch(np.zeros((0, 12), np.float32), np.zeros(0, np.int32))
+    assert z.shape == (0,)
+
+
+@pytest.mark.parametrize("n", [6, 7, 3])  # n % batch == 0, == 1, == n
+def test_tile_boundaries(W, n):
+    eng = MTLScoringEngine(W, batch=3)
+    rng = np.random.RandomState(n)
+    X = rng.randn(n, 12).astype(np.float32)
+    t = (np.arange(n) % 5).astype(np.int32)
+    np.testing.assert_allclose(
+        eng.score_batch(X, t), np.einsum("nd,nd->n", X, W[t]), atol=1e-5
+    )
+
+
+def test_score_batch_out_of_range_tasks(W):
+    eng = MTLScoringEngine(W, batch=2)
+    X = np.zeros((2, 12), np.float32)
+    with pytest.raises(ValueError, match="task id"):
+        eng.score_batch(X, np.array([0, 5]))
+    with pytest.raises(ValueError, match="task id"):
+        eng.score_batch(X, np.array([-1, 0]))
+    with pytest.raises(ValueError, match="feature shape"):
+        eng.score_batch(np.zeros((2, 5), np.float32), 0)
+
+
+def test_mixed_shape_requests_fail_loudly(W):
+    eng = MTLScoringEngine(W, batch=2)
+    reqs = [
+        ScoreRequest(task=0, x=np.zeros(12, np.float32)),
+        ScoreRequest(task=0, x=np.zeros(3, np.float32)),
+    ]
+    with pytest.raises(ValueError, match="stack"):
+        eng.run(reqs)
+    assert all(r.score is None for r in reqs)  # all-or-nothing
+
+
+# ---------------------------------------------------------------------------
+# hot-swap surface + the stale-weights footgun fix
+# ---------------------------------------------------------------------------
+def test_swap_updates_scores_without_retrace(W):
+    eng = MTLScoringEngine(W, batch=4, version=1)
+    W2 = np.random.RandomState(9).randn(*W.shape).astype(np.float32)
+    x = np.ones(12, np.float32)
+    z1 = eng.score_batch(x[None], 0)[0]
+    assert eng.swap(W2) == 2 and eng.version == 2
+    z2 = eng.score_batch(x[None], 0)[0]
+    assert z1 == pytest.approx(float(x @ W[0]), abs=1e-5)
+    assert z2 == pytest.approx(float(x @ W2[0]), abs=1e-5)
+    assert eng.swap(W2, version=2) == 2  # duplicate delivery: no-op
+    with pytest.raises(ValueError, match="not newer"):
+        eng.swap(W2, version=1)
+    with pytest.raises(RuntimeError, match="source"):
+        eng.refresh()  # not built by an estimator
+
+
+def test_scoring_engine_tracks_partial_fit(small_problem, small_cfg):
+    """The stale-weights footgun: an engine built before partial_fit must
+    serve the NEW weights afterwards (push on install + pull refresh())."""
+    est = DMTRLEstimator(engine="reference", config=small_cfg).fit(
+        small_problem.train
+    )
+    eng = est.scoring_engine(batch=3)
+    v1 = eng.version
+    W1 = np.asarray(est.W_).copy()
+    x = np.asarray(small_problem.test.x[1, 0])
+    z_before = eng.run([ScoreRequest(task=1, x=x)])[0].score
+
+    est.partial_fit(small_problem.train)
+    assert eng.version == v1 + 1  # snapshot pushed on install
+    assert not np.allclose(np.asarray(est.W_), W1)
+    z_after = eng.run([ScoreRequest(task=1, x=x)])[0].score
+    # the engine serves exactly the estimator's current predict path
+    assert z_after == pytest.approx(
+        float(est.decision_function(x, tasks=1)[0]), abs=1e-6
+    )
+    assert z_after != pytest.approx(z_before, abs=1e-12) or not np.allclose(
+        W1[1], np.asarray(est.W_)[1]
+    )
+    assert eng.refresh() == eng.version  # already current: no-op
+
+
+def test_serving_scheduler_hot_swaps_on_partial_fit(small_problem, small_cfg):
+    """estimator.serving_scheduler(): tiles packed after partial_fit score
+    against the new version, matching est.decision_function bit-for-bit
+    with the engine's own jitted step."""
+    est = DMTRLEstimator(engine="reference", config=small_cfg).fit(
+        small_problem.train
+    )
+    sched = est.serving_scheduler(batch=4, slo_s=10.0)
+    v1 = sched.version
+    x = np.asarray(small_problem.test.x[2, 1])
+    r1 = sched.submit(ScoreRequest(task=2, x=x))
+    sched.step()
+    est.partial_fit(small_problem.train)
+    assert sched.version == v1 + 1
+    r2 = sched.submit(ScoreRequest(task=2, x=x))
+    sched.step()
+    assert r1.snapshot_version == v1 and r2.snapshot_version == v1 + 1
+    assert r2.score == pytest.approx(
+        float(est.decision_function(x, tasks=2)[0]), abs=1e-6
+    )
+    m = sched.metrics.summary()
+    assert m["completed"] == 2 and m["swaps"] == 1
+
+
+def test_partial_fit_push_survives_manual_swap(small_problem, small_cfg):
+    """An engine whose version counter ran ahead (manual swap) must still
+    receive the newly trained weights from partial_fit — the push is
+    re-stamped, never silently dropped."""
+    est = DMTRLEstimator(engine="reference", config=small_cfg).fit(
+        small_problem.train
+    )
+    eng = est.scoring_engine(batch=3)
+    W_manual = np.zeros((eng.m, eng.d), np.float32)
+    eng.swap(W_manual)  # engine version now ahead of the estimator's
+    v_manual = eng.version
+    est.partial_fit(small_problem.train)
+    assert eng.version > v_manual
+    x = np.asarray(small_problem.test.x[0, 0])
+    z = eng.run([ScoreRequest(task=0, x=x)])[0].score
+    assert z == pytest.approx(
+        float(est.decision_function(x, tasks=0)[0]), abs=1e-6
+    )
