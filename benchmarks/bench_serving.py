@@ -1,16 +1,27 @@
 """Serving load benchmark: queued arrivals -> continuous-batching scheduler.
 
-Generates a Poisson arrival stream of mixed-task scoring requests and
-drives it through the ``ContinuousBatchingScheduler`` on a VIRTUAL clock
-whose per-tile service time is the MEASURED wall-clock of the real jitted
-scoring tile (so latency numbers reflect actual compute), with every
-``--straggler-every``-th tile slowed by ``--straggler-mult`` to model a
-straggler batch. Halfway through the stream the model is hot-swapped to a
-new ``(W, version)`` snapshot, exercising the no-drain switch under load.
+Three experiments, all recorded to BENCH_serving.json:
 
-Per policy (EDF and FIFO) the bench records p50/p95/p99 latency,
-throughput, queue depth, tile fill, per-task counters and SLO-violation
-counts (``ServingMetrics.summary()``) to BENCH_serving.json.
+* ``kind: load`` (one row per policy) — a Poisson arrival stream of
+  mixed-task scoring requests through the ``ContinuousBatchingScheduler``
+  on a VIRTUAL clock whose per-tile service time is the MEASURED
+  wall-clock of the real jitted scoring tile, with every
+  ``--straggler-every``-th tile slowed by ``--straggler-mult``. Halfway
+  through the model is hot-swapped, exercising the no-drain switch.
+
+* ``kind: lm_interleave`` — the head-of-line-blocking experiment: a few
+  LONG generations mixed with many SHORT ones through a real (reduced)
+  LM, once behind a whole-generation-tile facade (the pre-slot-table
+  engine shape, where a tile completes when its longest generation does)
+  and once through per-slot decode-step batching. The row records short-
+  request p50/p99 vs the longest generation for both modes; per-slot
+  batching must cut short-request p99 decisively (asserted).
+
+* ``kind: warm_vs_cold`` — first-request wall time on cold engines
+  (executables compiled lazily on the first request) vs engines warmed
+  with the AOT ``warmup()`` pass, for the LM decode bucket AND the MTL
+  scorer tile. The bench ASSERTS the warm-start worst case carries no
+  retrace spike before writing the file.
 
     PYTHONPATH=src python -m benchmarks.bench_serving
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 2000 --rate 500
@@ -116,6 +127,7 @@ def run_load(
             )
 
     return {
+        "kind": "load",
         "requests": requests,
         "batch": batch,
         "tasks": tasks,
@@ -129,6 +141,229 @@ def run_load(
         "seed": seed,
         "served_per_version": {str(k): v for k, v in sorted(served_versions.items())},
         "metrics": sched.metrics.summary(),
+    }
+
+
+class _BlockingFacade:
+    """The pre-slot-table adapter surface: ONLY whole-generation tiles.
+    Hides the streaming API so the scheduler packs full generations — a
+    tile's short requests then wait for its longest one (the head-of-line
+    defect this bench quantifies)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    @property
+    def batch(self):
+        return self.inner.batch
+
+    def admit(self, r):
+        self.inner.admit(r)
+
+    def model_snapshot(self):
+        return self.inner.model_snapshot()
+
+    def run_tile(self, reqs, snapshot):
+        self.inner.run_tile(reqs, snapshot)
+
+
+class MeasuredStreamingEngine:
+    """Streaming analogue of ``MeasuredEngine``: advances the virtual
+    clock by the measured wall time of each inject (prefill + first
+    token) and each decode step."""
+
+    def __init__(self, inner, clock):
+        self.inner, self.clock = inner, clock
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def inject(self, reqs, snapshot):
+        t0 = time.perf_counter()
+        self.inner.inject(reqs, snapshot)
+        self.clock.advance(time.perf_counter() - t0)
+
+    def decode_tick(self):
+        t0 = time.perf_counter()
+        out = self.inner.decode_tick()
+        self.clock.advance(time.perf_counter() - t0)
+        return out
+
+
+def _pctl(sorted_vals, q):
+    return sorted_vals[min(len(sorted_vals) - 1, int(q * len(sorted_vals)))]
+
+
+def run_lm_interleave(
+    *,
+    arch: str = "qwen1_5-4b",
+    batch: int = 4,
+    longs: int = 2,
+    long_tokens: int = 32,
+    shorts: int = 12,
+    short_tokens: int = 2,
+    seed: int = 0,
+):
+    """Short generations interleaved with long ones, whole-generation
+    tiles vs per-slot decode-step batching (same model, same requests,
+    virtual time = measured compute)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import (
+        ContinuousBatchingScheduler,
+        Request,
+        ServeConfig,
+        ServingEngine,
+        VirtualClock,
+    )
+
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed)
+    prompts = [
+        rng.randint(2, cfg.vocab_size, size=rng.randint(2, 7)).astype(np.int32)
+        for _ in range(longs + shorts)
+    ]
+
+    modes = {}
+    for mode in ("blocking", "streaming"):
+        clock = VirtualClock()
+        eng = ServingEngine(
+            cfg, params, ServeConfig(batch=batch, max_len=128, bucket_min=8)
+        )
+        eng.warmup([8])  # both modes equally warm: measure decode, not compile
+        if mode == "blocking":
+            engine = MeasuredEngine(_BlockingFacade(eng), clock, 0, 1.0)
+        else:
+            engine = MeasuredStreamingEngine(eng, clock)
+        sched = ContinuousBatchingScheduler(engine, policy="fifo", clock=clock)
+        # longs first: they grab slots, shorts must ride alongside
+        reqs = [
+            Request(prompt=p.copy(), max_new_tokens=long_tokens)
+            for p in prompts[:longs]
+        ] + [
+            Request(prompt=p.copy(), max_new_tokens=short_tokens)
+            for p in prompts[longs:]
+        ]
+        sched.submit_many(reqs)
+        sched.run_until_idle()
+        assert all(r.status == "done" for r in reqs)
+        short_lat = sorted(
+            r.latency_s for r in reqs if r.max_new_tokens == short_tokens
+        )
+        modes[mode] = {
+            "short_p50_s": _pctl(short_lat, 0.50),
+            "short_p99_s": _pctl(short_lat, 0.99),
+            "long_max_s": max(
+                r.latency_s for r in reqs if r.max_new_tokens == long_tokens
+            ),
+            "decode_steps": sched.metrics.decode_steps,
+            "slot_occupancy": sched.metrics.slot_occupancy(),
+            "ttft_p99_s": sched.metrics.ttft.percentile(99.0),
+        }
+
+    blocked, streamed = modes["blocking"], modes["streaming"]
+    # the head-of-line fix, quantified: under whole-generation tiles a
+    # short request's p99 tracks the longest in-flight generation; under
+    # per-slot batching it tracks its own length
+    assert streamed["short_p99_s"] < 0.5 * blocked["short_p99_s"], (
+        f"per-slot batching did not cut short-request p99: "
+        f"{streamed['short_p99_s']:.4f}s vs {blocked['short_p99_s']:.4f}s"
+    )
+    return {
+        "kind": "lm_interleave",
+        "arch": arch,
+        "batch": batch,
+        "longs": longs,
+        "long_tokens": long_tokens,
+        "shorts": shorts,
+        "short_tokens": short_tokens,
+        "seed": seed,
+        "blocking": blocked,
+        "streaming": streamed,
+        "short_p99_speedup": blocked["short_p99_s"] / streamed["short_p99_s"],
+    }
+
+
+def run_warm_vs_cold(*, arch: str = "qwen1_5-4b", repeats: int = 4, seed: int = 0):
+    """First-request wall time: cold engines (lazy compile on request 1)
+    vs AOT-warmed engines, for the LM decode bucket and the MTL scorer
+    tile. Asserts the warm worst case beats the cold first request."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import MTLScoringEngine, Request, ServeConfig, ServingEngine
+
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+
+    def lm_times(warm):
+        eng = ServingEngine(
+            cfg, params, ServeConfig(batch=2, max_len=64, bucket_min=8)
+        )
+        if warm:
+            eng.warmup([8])
+        times = []
+        for k in range(repeats):
+            r = Request(
+                prompt=np.asarray([3 + k, 5, 7], np.int32), max_new_tokens=4
+            )
+            t0 = time.perf_counter()
+            eng.run([r])
+            times.append(time.perf_counter() - t0)
+        return times
+
+    def mtl_times(warm):
+        rng = np.random.RandomState(seed)
+        W = rng.randn(8, 32).astype(np.float32)
+        eng = MTLScoringEngine(W, batch=16)
+        if warm:
+            eng.warmup()
+        times = []
+        for _ in range(repeats):
+            X = rng.randn(16, 32).astype(np.float32)
+            t0 = time.perf_counter()
+            eng.score_batch(X, np.zeros(16, np.int32))
+            times.append(time.perf_counter() - t0)
+        return times
+
+    lm_cold, lm_warm = lm_times(False), lm_times(True)
+    mtl_cold, mtl_warm = mtl_times(False), mtl_times(True)
+    # warm-start p99 must carry NO retrace spike: the SLOWEST warm request
+    # (first included) stays below the cold first request, which pays the
+    # trace+compile
+    assert max(lm_warm) < lm_cold[0], (
+        f"LM warm worst case {max(lm_warm):.4f}s >= cold first "
+        f"{lm_cold[0]:.4f}s: warmup did not remove the retrace spike"
+    )
+    assert max(mtl_warm) < mtl_cold[0], (
+        f"MTL warm worst case {max(mtl_warm):.4f}s >= cold first "
+        f"{mtl_cold[0]:.4f}s: warmup did not remove the retrace spike"
+    )
+    return {
+        "kind": "warm_vs_cold",
+        "arch": arch,
+        "repeats": repeats,
+        "seed": seed,
+        "lm": {
+            "cold_first_s": lm_cold[0],
+            "warm_first_s": lm_warm[0],
+            "warm_max_s": max(lm_warm),
+            "steady_s": min(lm_cold + lm_warm),
+            "first_request_speedup": lm_cold[0] / lm_warm[0],
+        },
+        "mtl": {
+            "cold_first_s": mtl_cold[0],
+            "warm_first_s": mtl_warm[0],
+            "warm_max_s": max(mtl_warm),
+            "steady_s": min(mtl_cold + mtl_warm),
+            "first_request_speedup": mtl_cold[0] / mtl_warm[0],
+        },
     }
 
 
@@ -147,6 +382,12 @@ def main(argv=None):
     ap.add_argument("--straggler-mult", type=float, default=8.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policies", nargs="+", default=["edf", "fifo"])
+    ap.add_argument("--skip-lm", action="store_true",
+                    help="skip the LM interleaving + warm-vs-cold rows "
+                         "(MTL load rows only)")
+    ap.add_argument("--lm-batch", type=int, default=4)
+    ap.add_argument("--lm-long-tokens", type=int, default=32)
+    ap.add_argument("--lm-shorts", type=int, default=12)
     ap.add_argument(
         "--out",
         default=os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json"),
@@ -176,6 +417,30 @@ def main(argv=None):
             f"{lat['p99_s'] * 1e3:.2f},{s['throughput_rps']:.1f},"
             f"{s['slo_violations']},{s['queue_depth_max']},"
             f"{s['tile_fill']:.3f}",
+            flush=True,
+        )
+    if not args.skip_lm:
+        inter = run_lm_interleave(
+            batch=args.lm_batch, long_tokens=args.lm_long_tokens,
+            shorts=args.lm_shorts, seed=args.seed,
+        )
+        rows.append(inter)
+        print(
+            "lm_interleave: short p99 "
+            f"{inter['blocking']['short_p99_s'] * 1e3:.1f}ms (whole-gen tiles)"
+            f" -> {inter['streaming']['short_p99_s'] * 1e3:.1f}ms (per-slot),"
+            f" {inter['short_p99_speedup']:.1f}x; long max "
+            f"{inter['streaming']['long_max_s'] * 1e3:.1f}ms",
+            flush=True,
+        )
+        wc = run_warm_vs_cold(seed=args.seed)
+        rows.append(wc)
+        print(
+            "warm_vs_cold: LM first request "
+            f"{wc['lm']['cold_first_s'] * 1e3:.1f}ms cold -> "
+            f"{wc['lm']['warm_first_s'] * 1e3:.1f}ms warm; MTL "
+            f"{wc['mtl']['cold_first_s'] * 1e3:.1f}ms -> "
+            f"{wc['mtl']['warm_first_s'] * 1e3:.1f}ms",
             flush=True,
         )
     with open(args.out, "w") as f:

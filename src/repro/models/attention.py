@@ -119,7 +119,10 @@ def chunked_attention(
                 mask &= kp[None, :] <= qp[:, None]
             if window > 0:
                 mask &= kp[None, :] > qp[:, None] - window
-            mask &= (qp[:, None] >= 0) & (kp[None, :] < 2**30)
+            # position sentinels are invalid everywhere: -1 marks pad
+            # queries AND pad keys (prompt padding), 2**30 marks chunk
+            # padding on the key side
+            mask &= (qp[:, None] >= 0) & (kp[None, :] >= 0) & (kp[None, :] < 2**30)
             s = jnp.where(mask[None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -204,7 +207,11 @@ def chunked_attention_parallel_q(
             mask &= kp[None, None, :] <= qpos[:, :, None]
         if window > 0:
             mask &= kp[None, None, :] > qpos[:, :, None] - window
-        mask &= (qpos[:, :, None] >= 0) & (kp[None, None, :] < 2**30)
+        mask &= (
+            (qpos[:, :, None] >= 0)
+            & (kp[None, None, :] >= 0)
+            & (kp[None, None, :] < 2**30)
+        )
         s = jnp.where(mask[None, :, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -297,26 +304,40 @@ def cache_from_kv(
     v: Array,
     is_local: bool,
     max_len: int,
+    positions: Array | None = None,  # (S,) int32; -1 marks pad entries
 ) -> Dict[str, Array]:
     """Assemble a decode cache from prefill k/v, including ring placement
-    for local (sliding-window) layers."""
+    for local (sliding-window) layers.
+
+    ``positions`` carries the per-entry absolute positions (default
+    ``arange(S)``). Entries with position -1 (prompt padding in a
+    length-bucketed prefill) land with ``pos = -1`` so ``attention_decode``
+    masks them; real entries keep the slot == position layout the decode
+    writer assumes (right-padded prompts only).
+    """
     B, S = k.shape[:2]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    positions = positions.astype(jnp.int32)
     if is_local and cfg.window:
         W = min(cfg.window, max_len)
-        take = min(S, W)
-        kt, vt = k[:, -take:], v[:, -take:]
-        pos_t = jnp.arange(S - take, S, dtype=jnp.int32)
-        slots = pos_t % W
-        ck = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(kt)
-        cv = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(vt)
-        cpos = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(pos_t[None])
-        return {"k": ck, "v": cv, "pos": cpos}
+        valid = positions >= 0
+        true_len = jnp.sum(valid.astype(jnp.int32))
+        # keep the last W real entries; everything else goes to a dump row
+        keep = valid & (positions >= true_len - W)
+        slots = jnp.where(keep, positions % W, W)
+        ck = jnp.zeros((B, W + 1) + k.shape[2:], k.dtype).at[:, slots].set(k)
+        cv = jnp.zeros((B, W + 1) + v.shape[2:], v.dtype).at[:, slots].set(v)
+        cpos = (
+            jnp.full((B, W + 1), -1, jnp.int32)
+            .at[:, slots]
+            .set(jnp.where(keep, positions, -1)[None])
+        )
+        return {"k": ck[:, :W], "v": cv[:, :W], "pos": cpos[:, :W]}
     size = max_len
     ck = jnp.zeros((B, size) + k.shape[2:], k.dtype).at[:, :S].set(k)
     cv = jnp.zeros((B, size) + v.shape[2:], v.dtype).at[:, :S].set(v)
-    cpos = jnp.full((B, size), -1, jnp.int32).at[:, :S].set(
-        jnp.arange(S, dtype=jnp.int32)[None]
-    )
+    cpos = jnp.full((B, size), -1, jnp.int32).at[:, :S].set(positions[None])
     return {"k": ck, "v": cv, "pos": cpos}
 
 
@@ -343,27 +364,32 @@ def attention_decode(
     cache: Dict[str, Array],
     p: Dict[str, Array],
     cfg: ModelConfig,
-    position: Array,  # scalar int32 — current absolute position
+    position: Array,  # scalar OR (B,) int32 — current absolute position(s)
     is_local: bool,
 ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode. ``position`` may be a scalar (all rows at the same
+    position — the classic batched-generation shape) or per-row ``(B,)``
+    (slot-table continuous batching, where each sequence is at its own
+    decode offset). Writes land at ``slot == position`` per row; masking is
+    per-row against the cache's per-slot ``pos`` array."""
     B = x.shape[0]
     hd = cfg.head_dim
     q, k, v = _project_qkv(x, p, cfg)  # (B,1,H,hd), (B,1,KV,hd)
+    pos_v = jnp.broadcast_to(position, (B,)).astype(jnp.int32)  # (B,)
     if cfg.rope_theta > 0:
-        pos_b = jnp.broadcast_to(position, (1, 1))
+        pos_b = pos_v[:, None]  # (B, 1)
         q = apply_rope(q, pos_b, cfg.rope_theta)
         k = apply_rope(k, pos_b, cfg.rope_theta)
 
     size = cache["k"].shape[1]
     slot = jnp.where(
-        jnp.logical_and(is_local, cfg.window > 0), position % size, position
+        jnp.logical_and(is_local, cfg.window > 0), pos_v % size, pos_v
     ).astype(jnp.int32)
-    slot = jnp.minimum(slot, size - 1)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    cpos = jax.lax.dynamic_update_slice(
-        cache["pos"], jnp.broadcast_to(position, (B, 1)).astype(jnp.int32), (0, slot)
-    )
+    slot = jnp.minimum(slot, size - 1)  # (B,)
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, slot].set(k[:, 0])
+    cv = cache["v"].at[rows, slot].set(v[:, 0])
+    cpos = cache["pos"].at[rows, slot].set(pos_v)
 
     kk = _expand_kv(ck, cfg.n_heads)  # (B, size, H, hd)
     vv = _expand_kv(cv, cfg.n_heads)
@@ -373,9 +399,9 @@ def attention_decode(
         * scale
     )  # (B,H,1,size)
     valid = cpos >= 0
-    valid &= cpos <= position
+    valid &= cpos <= pos_v[:, None]
     if is_local and cfg.window:
-        valid &= cpos > position - cfg.window
+        valid &= cpos > pos_v[:, None] - cfg.window
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))

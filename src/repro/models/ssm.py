@@ -172,8 +172,17 @@ def ssm_block_train(
 
 
 def xbc_raw_tail(x: Array, p: Dict[str, Array], cfg: ModelConfig) -> Array:
-    """Last (K-1) pre-conv xbc inputs — the decode conv state."""
+    """Last (K-1) pre-conv xbc inputs — the decode conv state.
+
+    Prompts shorter than the conv receptive field are left-padded with
+    zeros, matching ``_causal_conv``'s implicit zero history (the
+    projections are bias-free, so zero inputs give zero xbc rows): the
+    cache keeps its fixed (B, K-1, conv_ch) shape for any prompt length.
+    """
     K = cfg.ssm_conv
+    L = x.shape[1]
+    if L < K - 1:
+        x = jnp.pad(x, ((0, 0), (K - 1 - L, 0), (0, 0)))
     _, xbc, _ = _project(x[:, -(K - 1) :], p, cfg)
     return xbc  # (B, K-1, conv_ch)
 

@@ -433,7 +433,10 @@ def _decode_step_scanned(
 def decode_step(
     cfg: ModelConfig, params, token: Array, cache: DecodeCache
 ) -> Tuple[Array, DecodeCache]:
-    """One-token decode. token: (B,) int32. Returns (logits (B, Vp), cache)."""
+    """One-token decode. token: (B,) int32. Returns (logits (B, Vp), cache).
+
+    ``cache.position`` may be a scalar (whole batch at one offset) or a
+    per-row ``(B,)`` vector (slot-table continuous batching)."""
     if uniform_layers(cfg) and isinstance(cache.layers, dict):
         return _decode_step_scanned(cfg, params, token, cache)
     B = token.shape[0]
@@ -441,7 +444,8 @@ def decode_step(
     h = params["embed"][token][:, None, :]  # (B, 1, d)
     if cfg.is_encoder_decoder:
         p_idx = pos % params["dec_pos"].shape[0]
-        h = h + params["dec_pos"][p_idx][None, None]
+        pe = params["dec_pos"][p_idx]  # (d,) scalar pos | (B, d) per-row
+        h = h + (pe[None, None] if pe.ndim == 1 else pe[:, None])
 
     kinds = cfg.layer_kinds()
     new_layers: List[Dict[str, Array]] = []
@@ -508,17 +512,42 @@ def prefill(
     tokens: Array,
     side: Optional[Array] = None,
     extra_len: int = 1024,
+    true_len: Optional[Array] = None,
 ) -> Tuple[Array, DecodeCache]:
     """Run the full prompt, return last-position logits + a FILLED cache
     (k/v collected from the layer scan; ring placement for local layers;
     SSD final states for SSM layers). Consistency with decode_step is
-    covered by tests/test_serve.py."""
+    covered by tests/test_serve.py.
+
+    ``true_len`` (traced scalar int32) marks a RIGHT-padded prompt: only
+    ``tokens[:, :true_len]`` are real, the tail is bucket padding. Pad
+    positions are set to -1 so attention masks them on both the query and
+    key side (``chunked_attention``) and their cache slots stay invalid
+    (``pos = -1``) for decode; the returned logits are taken at
+    ``true_len - 1`` and ``cache.position`` starts at ``true_len``. The
+    executable is shape-keyed by the BUCKET length, so one compiled
+    prefill serves every true length in its bucket. Only attention
+    architectures support it: an SSM/hybrid state scan or the enc-dec
+    decoder cannot skip pad steps, so those archs must prefill at exact
+    length (``true_len=None``).
+    """
     B, S = tokens.shape
     max_len = S + extra_len
     dtype = dtype_of(cfg.dtype)
+    if true_len is not None and (
+        cfg.arch_type in ("ssm", "hybrid") or cfg.is_encoder_decoder
+    ):
+        raise ValueError(
+            "true_len (pad-masked bucketed prefill) is only supported for "
+            f"attention architectures, not arch_type={cfg.arch_type!r} / "
+            "encoder-decoder; prefill those at exact length"
+        )
     h = params["embed"][tokens]
     h = maybe_shard(h, batch_axes(), None, None)
-    positions = jnp.arange(S)
+    if true_len is None:
+        positions = jnp.arange(S)
+    else:
+        positions = jnp.where(jnp.arange(S) < true_len, jnp.arange(S), -1)
     kinds = cfg.layer_kinds()
 
     if cfg.is_encoder_decoder:
@@ -558,6 +587,13 @@ def prefill(
 
     h, _, collected = _scan_layers(cfg, params, h, positions, collect=True)
 
+    if true_len is None:
+        next_pos = jnp.asarray(S, jnp.int32)
+        last_of = lambda logits: logits[:, -1]
+    else:
+        next_pos = jnp.asarray(true_len, jnp.int32)
+        last_of = lambda logits: logits[jnp.arange(B), next_pos - 1]
+
     if uniform_layers(cfg):
         if cfg.arch_type == "ssm":
             states, convs = collected
@@ -565,13 +601,13 @@ def prefill(
         else:
             k_all, v_all = collected
             stacked = jax.vmap(
-                lambda k, v: attn_mod.cache_from_kv(cfg, k, v, False, max_len)
+                lambda k, v: attn_mod.cache_from_kv(
+                    cfg, k, v, False, max_len, positions=positions
+                )
             )(k_all, v_all)
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         logits = h @ params["lm_head"]
-        return logits[:, -1], DecodeCache(
-            stacked, jnp.asarray(S, jnp.int32), None, None
-        )
+        return last_of(logits), DecodeCache(stacked, next_pos, None, None)
 
     layers: List[Dict[str, Array]] = []
     shared = None
@@ -594,10 +630,13 @@ def prefill(
         k_all, v_all = collected
         for i, kind in enumerate(kinds):
             layers.append(
-                attn_mod.cache_from_kv(cfg, k_all[i], v_all[i], kind == "local", max_len)
+                attn_mod.cache_from_kv(
+                    cfg, k_all[i], v_all[i], kind == "local", max_len,
+                    positions=positions,
+                )
             )
 
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = h @ params["lm_head"]
-    cache = DecodeCache(layers, jnp.asarray(S, jnp.int32), shared, None)
-    return logits[:, -1], cache
+    cache = DecodeCache(layers, next_pos, shared, None)
+    return last_of(logits), cache

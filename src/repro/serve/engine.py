@@ -1,22 +1,39 @@
-"""Batched LM serving engine: request queue -> batched prefill -> decode loop.
+"""LM serving engine: per-slot continuous batching over one decode batch.
 
-The jitted ``serve_step`` (one token for the whole batch, cache in/out) is
-the unit the dry-run lowers for the decode_32k / long_500k shapes.
+The engine owns a slot table over a batch-wide KV cache: each of the
+``batch`` rows (slots) is free or holds exactly one in-flight request.
+New requests are PREFILLED INDIVIDUALLY (B=1) through length-bucketed,
+AOT-compiled prefill executables — the prompt is right-padded to the
+next power-of-two bucket and the pad is carried as an explicit mask
+(``prefill(..., true_len=)``), so one compiled executable serves every
+prompt length in its bucket and a padded prefill is bit-equal to a solo
+unpadded one — then inserted into a free slot at a decode-step boundary.
+The whole batch then advances ONE token per ``decode_tick``; a request
+that hits EOS or its token budget frees its slot for the next waiting
+request. That is the head-of-line-blocking fix: a long generation only
+ever occupies its own slot, it never gates the other ``batch - 1`` rows.
+
+Sampled tokens stay on device in a detokenize backlog (one entry per
+decode step) and are only transferred/finalized when the backlog drains
+(every ``drain_every`` steps, when slots are needed, or at idle), so the
+hot loop never blocks on host syncs per token.
 
 ``Request`` shares the ``ServeRequest`` queue fields with the MTL scorer
-(arrival/deadline/status/snapshot_version), and the engine implements the
-same scheduler adapter surface (``admit`` / ``run_tile`` /
-``model_snapshot`` — LM params are fixed for the engine's lifetime, so
-its snapshots never change version), so both engines run behind ONE
-``ContinuousBatchingScheduler``. The LM tile unit is a full
-prefill+decode generation for <= batch requests; decode-step-level
-continuous batching (injecting requests mid-decode) is future work
-(docs/DESIGN.md §10).
+and the engine keeps the classic scheduler adapter surface (``admit`` /
+``run_tile`` / ``model_snapshot``) PLUS the streaming surface the
+scheduler prefers when present (``free_slots`` / ``active`` / ``inject``
+/ ``decode_tick`` / ``drain`` / ``evict_active``), so both engines run
+behind ONE ``ContinuousBatchingScheduler`` — the LM tile unit is one
+decode STEP, not a whole generation (docs/DESIGN.md §10).
+
+SSM / hybrid / encoder-decoder architectures cannot mask pad steps out
+of a state scan, so they prefill at EXACT prompt length (one executable
+per distinct length) but share the same slot table and per-row decode.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +41,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
+from repro.models.transformer import DecodeCache
 from .scheduler import ModelSnapshot, ServeRequest
 
 Array = jax.Array
@@ -31,11 +49,13 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    batch: int = 8
-    max_len: int = 2048
+    batch: int = 8        # decode slots
+    max_len: int = 2048   # KV slots per sequence: prompt + generated tokens
     temperature: float = 0.0  # 0 => greedy
     eos_id: int = 1
     seed: int = 0
+    bucket_min: int = 16  # smallest prefill bucket (buckets are powers of 2)
+    drain_every: int = 4  # decode steps between detokenize-backlog drains
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
@@ -60,25 +80,68 @@ class Request(ServeRequest):
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_reason: Optional[str] = None  # "eos" | "length"
+    side: Optional[np.ndarray] = None  # (F, d) audio frames for enc-dec cfgs
+
+
+def _next_bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power-of-two >= max(n, lo), capped at hi (hi >= n always
+    holds because admission bounds prompt lengths)."""
+    b = max(lo, 1)
+    while b < n:
+        b *= 2
+    return min(b, hi)
 
 
 class ServingEngine:
-    """Batched generate engine: right-pad a tile of <= batch prompts to a
-    common length, batched prefill, then decode until every request
-    finishes (EOS or token budget).
+    """Slot-table LM engine: bucketed B=1 prefill into free slots, one
+    shared decode batch stepping all occupied slots together.
 
-    The decode loop is ``_decode`` so its stopping semantics (EOS vs
-    budget) are testable against a scripted step function without a real
-    model.
+    Two surfaces over the same slot machinery:
+
+      * streaming (the scheduler's preferred path): ``inject`` new
+        requests at a decode-step boundary, ``decode_tick`` one step,
+        finished requests surface from the drain backlog;
+      * blocking ``run(requests)``: inject all, tick until every request
+        finishes — kept for one-shot batches and the legacy
+        ``run_tile`` adapter.
+
+    ``warmup()`` AOT-compiles every fixed tile shape (each prefill
+    bucket + the decode step + the slot insert) so the first real
+    request never pays a retrace.
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        if scfg.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {scfg.batch}")
+        if scfg.drain_every < 1:
+            raise ValueError(f"drain_every must be >= 1, got {scfg.drain_every}")
         self.cfg, self.params, self.scfg = cfg, params, scfg
-        self._step = jax.jit(make_serve_step(cfg))
         self._key = jax.random.PRNGKey(scfg.seed)
         # one stable snapshot object: the scheduler detects engine-side
         # swaps by identity, and LM params never change
         self._snapshot = ModelSnapshot(version=0)
+        # pad-masked bucketed prefill needs attention-only archs; state
+        # scans (ssm/hybrid) and the enc-dec decoder prefill exactly
+        self._maskable = not (
+            cfg.arch_type in ("ssm", "hybrid") or cfg.is_encoder_decoder
+        )
+        # slot table
+        B = scfg.batch
+        self._slots: List[Optional[Request]] = [None] * B
+        self._free: List[int] = list(range(B - 1, -1, -1))  # pop() -> slot 0 first
+        self._emitted = [0] * B   # tokens sampled for the CURRENT attempt
+        self._budget = [0] * B
+        # device state (allocated on first inject; shapes fixed after that)
+        self._cache: Optional[DecodeCache] = None
+        self._token: Optional[Array] = None  # (B,) next input token per row
+        self._one_sds = None  # B=1 cache shape template (set at alloc)
+        # detokenize/finalize backlog: [(device tokens, [(row, request)])]
+        self._backlog: List[Tuple[Array, List[Tuple[int, Request]]]] = []
+        self._finished: List[Request] = []
+        # compiled executables (AOT via jit(...).lower(...).compile())
+        self._prefill_exe: Dict[int, Callable] = {}
+        self._decode_exe: Optional[Callable] = None
+        self._insert_exe: Optional[Callable] = None
 
     # -- scheduler adapter surface -----------------------------------------
     @property
@@ -100,66 +163,386 @@ class ServingEngine:
                 f"prompt must hold integer token ids, got dtype {prompt.dtype}"
             )
         # canonicalize in place: a list/other-int-dtype prompt admitted
-        # here must also be servable by run() (which reads .shape)
+        # here must also be servable by the packers (which read .shape)
         r.prompt = prompt.astype(np.int32, copy=False)
         if r.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {r.max_new_tokens}"
             )
+        total = int(prompt.shape[0]) + int(r.max_new_tokens)
+        if total > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new_tokens "
+                f"({r.max_new_tokens}) = {total} exceeds max_len="
+                f"{self.scfg.max_len} KV slots"
+            )
+        if self.cfg.is_encoder_decoder and r.side is None:
+            raise ValueError(
+                "encoder-decoder configs need per-request side frames "
+                "(Request.side)"
+            )
 
     def run_tile(self, requests: Sequence[Request], snapshot: ModelSnapshot) -> None:
-        """LM tiles ignore the snapshot weights: params are fixed for the
+        """Legacy whole-generation tile hook (non-streaming schedulers).
+        LM tiles ignore the snapshot weights: params are fixed for the
         engine's lifetime (hot-swap is the MTL scorer's feature)."""
         self.run(list(requests))
+
+    # -- streaming surface --------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active(self) -> int:
+        """Occupied slots (requests injected and not yet drained-finished)."""
+        return self.scfg.batch - len(self._free)
+
+    def inject(
+        self, requests: Sequence[Request], snapshot: Optional[ModelSnapshot] = None
+    ) -> None:
+        """Admit <= free_slots requests into the running batch at a
+        decode-step boundary: per-request bucketed prefill, slot assign,
+        first token sampled from the prefill logits (time-to-first-token
+        is paid here, not after the whole batch finishes).
+
+        Per-attempt decode state (``output``/``done``/``finish_reason``)
+        is RESET on entry, so a request re-queued after a failed tile
+        never double-appends its previous partial output.
+        """
+        if len(requests) > len(self._free):
+            raise RuntimeError(
+                f"{len(requests)} requests for {len(self._free)} free slots; "
+                "drain() first or inject fewer"
+            )
+        for r in requests:
+            # per-attempt reset (retry double-append fix)
+            r.output = []
+            r.done = False
+            r.finish_reason = None
+            if snapshot is not None:
+                r.snapshot_version = snapshot.version
+            last_logits, one = self._prefill_one(r)
+            if self._cache is None:
+                self._alloc_batch_state(one)
+            self._key, sub = jax.random.split(self._key)
+            tok0 = _sample(last_logits, sub, self.scfg.temperature)  # (1,)
+            i = self._free.pop()  # slot assigned only after prefill succeeded
+            self._slots[i] = r
+            self._emitted[i] = 1
+            self._budget[i] = int(r.max_new_tokens)
+            self._cache, self._token = self._insert(one, i, tok0)
+            self._backlog.append((tok0, [(0, r)]))
+
+    def decode_tick(self) -> List[Request]:
+        """Advance every occupied slot one token; returns requests that
+        FINISHED (possibly injected many ticks ago). Token transfer and
+        finalize bookkeeping run off the hot loop: device tokens pile
+        into the backlog and drain every ``drain_every`` steps (or when
+        no slot can take another token), costing at most ``drain_every``
+        wasted decode rows after an undetected EOS."""
+        active = [
+            i
+            for i, r in enumerate(self._slots)
+            if r is not None and self._emitted[i] < self._budget[i]
+        ]
+        if not active:
+            self._drain_backlog()
+            return self._pop_finished()
+        logits, cache = self._step_call(self._token, self._cache)
+        self._cache = cache
+        self._key, sub = jax.random.split(self._key)
+        nxt = _sample(logits, sub, self.scfg.temperature)  # (B,)
+        self._token = nxt
+        self._backlog.append((nxt, [(i, self._slots[i]) for i in active]))
+        for i in active:
+            self._emitted[i] += 1
+        at_budget = all(
+            self._emitted[i] >= self._budget[i]
+            for i, r in enumerate(self._slots)
+            if r is not None
+        )
+        if len(self._backlog) >= self.scfg.drain_every or at_budget:
+            self._drain_backlog()
+        return self._pop_finished()
+
+    def drain(self) -> List[Request]:
+        """Force a backlog drain (the scheduler calls this when it needs
+        slots freed before packing); returns newly finished requests."""
+        self._drain_backlog()
+        return self._pop_finished()
+
+    def evict_active(self) -> List[Request]:
+        """Pull every in-flight (not yet finished) request out of the slot
+        table — the failed-tile path: the scheduler re-queues them and the
+        next ``inject`` resets their per-attempt state. Finished requests
+        already drained stay in the finished backlog."""
+        self._backlog.clear()
+        evicted = [r for r in self._slots if r is not None]
+        self._slots = [None] * self.scfg.batch
+        self._free = list(range(self.scfg.batch - 1, -1, -1))
+        self._emitted = [0] * self.scfg.batch
+        self._budget = [0] * self.scfg.batch
+        return evicted
 
     # -- blocking surface ---------------------------------------------------
     def run(
         self, requests: List[Request], side: Optional[Array] = None
     ) -> List[Request]:
-        cfg, scfg = self.cfg, self.scfg
+        """One-shot batch: inject every request, tick until all finish.
+        ``side`` optionally carries stacked (B, F, d) enc-dec frames,
+        distributed to the requests row-by-row."""
+        scfg = self.scfg
         if len(requests) > scfg.batch:
             raise ValueError(
                 f"{len(requests)} requests exceed the engine batch "
                 f"{scfg.batch}; run in tiles (or use the scheduler)"
             )
-        # pad the TILE with dummy requests, not the caller's list
-        tile = list(requests)
-        while len(tile) < scfg.batch:
-            tile.append(Request(prompt=np.array([0], np.int32), max_new_tokens=1))
-        S = max(int(r.prompt.shape[0]) for r in tile)
-        toks = np.zeros((scfg.batch, S), np.int32)
-        for i, r in enumerate(tile):
-            toks[i, S - r.prompt.shape[0] :] = r.prompt  # left-pad
-        last_logits, cache = prefill(
-            cfg, self.params, jnp.asarray(toks), side, extra_len=scfg.max_len
-        )
-        self._decode(tile, last_logits, cache)
+        if side is not None:
+            for i, r in enumerate(requests):
+                r.side = np.asarray(side[i])
+        for r in requests:
+            self.admit(r)
+        if len(requests) > len(self._free):
+            raise RuntimeError(
+                "blocking run() needs exclusive slots; engine has "
+                f"{self.active} in-flight streaming requests"
+            )
+        self.inject(requests, self._snapshot)
+        # bounded: every slot stops at its budget, drain then frees it
+        while not all(r.done for r in requests):
+            self.decode_tick()
+        self._pop_finished()
         return requests
 
-    def _decode(self, requests: List[Request], logits: Array, cache) -> None:
-        """Greedy/sampled decode until every request is done.
-
-        A request stops on EOS (``finish_reason="eos"``, the EOS token is
-        kept in the output) or on exhausting its ``max_new_tokens`` budget
-        (``finish_reason="length"``); the loop ends when all requests
-        stopped, never beyond the largest budget.
-        """
+    # -- AOT warmup ---------------------------------------------------------
+    def warmup(
+        self, buckets: Optional[Sequence[int]] = None
+    ) -> List[int]:
+        """AOT-compile every fixed tile shape ahead of traffic: each
+        prefill bucket, the decode step, and the slot insert. Returns the
+        bucket lengths compiled. With no argument, compiles the full
+        power-of-two ladder ``bucket_min .. max_len/2`` (exact-length
+        archs compile the same list as literal lengths)."""
         scfg = self.scfg
-        budget = max(r.max_new_tokens for r in requests)
-        for t in range(budget):
-            self._key, sub = jax.random.split(self._key)
-            nxt = _sample(logits, sub, scfg.temperature)
-            nxt_np = np.asarray(nxt)
-            for i, r in enumerate(requests):
-                if not r.done and t < r.max_new_tokens:
-                    tok = int(nxt_np[i])
-                    r.output.append(tok)
-                    if tok == scfg.eos_id:
-                        r.done = True
-                        r.finish_reason = "eos"
-                    elif len(r.output) >= r.max_new_tokens:
-                        r.done = True
-                        r.finish_reason = "length"
-            if all(r.done for r in requests):
-                break
-            logits, cache = self._step(self.params, nxt, cache)
+        if buckets is None:
+            buckets, b = [], scfg.bucket_min
+            while b <= scfg.max_len // 2:
+                buckets.append(b)
+                b *= 2
+        done = []
+        for b in buckets:
+            if b >= scfg.max_len:
+                raise ValueError(
+                    f"bucket {b} leaves no decode room in max_len={scfg.max_len}"
+                )
+            self._get_prefill_exe(int(b))
+            done.append(int(b))
+        if self._cache is None and not self.cfg.is_encoder_decoder:
+            # materialize batch state from an abstract prefill so the
+            # decode/insert executables compile now, not at first inject
+            one = jax.eval_shape(
+                lambda: self._run_prefill(
+                    int(buckets[0]) if buckets else scfg.bucket_min,
+                    jnp.zeros((1, int(buckets[0]) if buckets else scfg.bucket_min), jnp.int32),
+                    jnp.asarray(1, jnp.int32),
+                    None,
+                )
+            )[1]
+            self._alloc_batch_state(one)
+        if self._cache is not None:
+            self._ensure_decode_exe()
+            self._ensure_insert_exe()
+        return done
+
+    # -- internals: prefill/bucket machinery --------------------------------
+    def _bucket_for(self, L: int) -> int:
+        if not self._maskable:
+            return L  # exact-length prefill (state scans can't mask pads)
+        return _next_bucket(L, self.scfg.bucket_min, self.scfg.max_len - 1)
+
+    def _run_prefill(self, S: int, toks: Array, true_len: Array, side):
+        extra = self.scfg.max_len - S
+        tl = true_len if self._maskable else None
+        return prefill(self.cfg, self.params, toks, side, extra_len=extra, true_len=tl)
+
+    def _get_prefill_exe(self, S: int) -> Callable:
+        exe = self._prefill_exe.get(S)
+        if exe is None:
+            i32 = jnp.int32
+            if self.cfg.is_encoder_decoder:
+                fn = jax.jit(
+                    lambda toks, true_len, side: self._run_prefill(
+                        S, toks, true_len, side
+                    )
+                )
+                side_s = jax.ShapeDtypeStruct(
+                    (1, self.cfg.enc_frames, self.cfg.d_model), jnp.float32
+                )
+                exe = fn.lower(
+                    jax.ShapeDtypeStruct((1, S), i32),
+                    jax.ShapeDtypeStruct((), i32),
+                    side_s,
+                ).compile()
+            else:
+                fn = jax.jit(
+                    lambda toks, true_len: self._run_prefill(S, toks, true_len, None)
+                )
+                exe = fn.lower(
+                    jax.ShapeDtypeStruct((1, S), i32),
+                    jax.ShapeDtypeStruct((), i32),
+                ).compile()
+            self._prefill_exe[S] = exe
+        return exe
+
+    def _prefill_one(self, r: Request) -> Tuple[Array, DecodeCache]:
+        """Bucketed B=1 prefill of one request -> (logits (1, Vp), cache).
+        Tests stub THIS method to script token streams without a model."""
+        L = int(r.prompt.shape[0])
+        S = self._bucket_for(L)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :L] = r.prompt  # right-pad; the mask rides true_len
+        exe = self._get_prefill_exe(S)
+        args = [jnp.asarray(toks), jnp.asarray(L, jnp.int32)]
+        if self.cfg.is_encoder_decoder:
+            args.append(jnp.asarray(r.side, jnp.float32)[None])
+        logits, cache = exe(*args)
+        return logits, cache
+
+    # -- internals: batch state / insert / decode ---------------------------
+    @staticmethod
+    def _map_cache(fn, *caches):
+        """Apply ``fn(batch_axis, *leaves)`` over matching leaves of one or
+        more DecodeCaches. The batch axis is NOT uniform: uniform archs
+        stack layer caches as (n_layers, B, ...) dicts (batch at axis 1),
+        heterogeneous archs keep per-layer lists of (B, ...) leaves, and
+        the position is a scalar (B=1 prefill) or (B,) vector (batch)."""
+        c0 = caches[0]
+        ax = 1 if isinstance(c0.layers, dict) else 0
+        layers = jax.tree.map(lambda *ls: fn(ax, *ls), *(c.layers for c in caches))
+        shared = (
+            jax.tree.map(lambda *ls: fn(0, *ls), *(c.shared for c in caches))
+            if c0.shared is not None
+            else None
+        )
+        cross = (
+            jax.tree.map(lambda *ls: fn(0, *ls), *(c.cross for c in caches))
+            if c0.cross is not None
+            else None
+        )
+        pos = fn(0, *(c.position for c in caches))
+        return DecodeCache(layers, pos, shared, cross)
+
+    def _alloc_batch_state(self, one: DecodeCache) -> None:
+        """Allocate the batch-wide cache from the structure of one B=1
+        prefill cache: every leaf grows its batch axis to ``batch``; the
+        scalar position becomes a per-row (B,) vector."""
+        B = self.scfg.batch
+
+        def rep(ax, a):
+            if a.ndim == 0:  # position scalar -> per-row vector
+                return jnp.zeros((B,), a.dtype)
+            shape = list(a.shape)
+            shape[ax] = B
+            return jnp.zeros(tuple(shape), a.dtype)
+
+        if not isinstance(one, DecodeCache):  # scripted-test stub caches
+            self._cache = jax.tree.map(lambda a: rep(0, a), one)
+        else:
+            self._cache = self._map_cache(rep, one)
+        self._token = jnp.zeros((B,), jnp.int32)
+        # B=1 shape template for the insert executable: NOT recoverable
+        # from the batch cache (a scalar position leaf and a size-1 batch
+        # leaf both lose their identity there)
+        self._one_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), one
+        )
+
+    def _ensure_insert_exe(self) -> None:
+        if self._insert_exe is not None:
+            return
+
+        def insert(full, one, i, token_vec, tok0):
+            # dynamic_update_index_in_dim takes an update of equal rank
+            # with a size-1 batch axis (layer/shared/cross leaves) OR of
+            # rank-1 (the scalar position into the (B,) vector): the B=1
+            # prefill cache leaves are exactly one or the other
+            def put(ax, f, o):
+                return jax.lax.dynamic_update_index_in_dim(f, o, i, ax)
+
+            if not isinstance(full, DecodeCache):  # scripted-test stubs
+                new_cache = jax.tree.map(lambda f, o: put(0, f, o), full, one)
+            else:
+                new_cache = self._map_cache(put, full, one)
+            return new_cache, jax.lax.dynamic_update_index_in_dim(
+                token_vec, tok0[0], i, 0
+            )
+
+        sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        self._insert_exe = (
+            jax.jit(insert)
+            .lower(
+                jax.tree.map(sds, self._cache),
+                self._one_sds,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((self.scfg.batch,), jnp.int32),
+                jax.ShapeDtypeStruct((1,), jnp.int32),
+            )
+            .compile()
+        )
+
+    def _insert(self, one: DecodeCache, i: int, tok0: Array):
+        self._ensure_insert_exe()
+        return self._insert_exe(
+            self._cache, one, jnp.asarray(i, jnp.int32), self._token,
+            tok0.astype(jnp.int32),
+        )
+
+    def _ensure_decode_exe(self) -> None:
+        if self._decode_exe is not None:
+            return
+        sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        self._decode_exe = (
+            jax.jit(lambda token, cache: decode_step(self.cfg, self.params, token, cache))
+            .lower(
+                jax.ShapeDtypeStruct((self.scfg.batch,), jnp.int32),
+                jax.tree.map(sds, self._cache),
+            )
+            .compile()
+        )
+
+    def _step_call(self, token: Array, cache: DecodeCache):
+        self._ensure_decode_exe()
+        return self._decode_exe(token, cache)
+
+    # -- internals: detokenize/finalize backlog -----------------------------
+    def _drain_backlog(self) -> None:
+        """Transfer backlogged device tokens to host, append to request
+        outputs in decode order, finalize EOS/budget stops, recycle their
+        slots. The ONLY host-sync point of the decode loop."""
+        if not self._backlog:
+            return
+        events = self._backlog
+        self._backlog = []
+        for dev, rows in events:
+            arr = np.asarray(dev)
+            for row, r in rows:
+                if r.done:
+                    continue  # post-EOS rows sampled before the drain
+                tok = int(arr[row])
+                r.output.append(tok)
+                if tok == self.scfg.eos_id:
+                    r.done = True
+                    r.finish_reason = "eos"
+                elif len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    r.finish_reason = "length"
+        for j, r in enumerate(self._slots):
+            if r is not None and r.done:
+                self._slots[j] = None
+                self._free.append(j)
+                self._finished.append(r)
+
+    def _pop_finished(self) -> List[Request]:
+        out, self._finished = self._finished, []
+        return out

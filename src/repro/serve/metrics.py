@@ -121,6 +121,10 @@ class ServingMetrics:
         self._clock = clock
         self._t0 = clock()
         self.latency = LatencyHistogram()
+        self.ttft = LatencyHistogram()  # arrival -> first sampled token
+        self.decode_steps = 0
+        self.decode_occupied = 0
+        self.decode_slots = 0
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
@@ -178,6 +182,20 @@ class ServingMetrics:
         self.tile_filled += int(filled)
         self.tile_slots += int(slots)
 
+    def on_first_token(self, ttft_s: float) -> None:
+        """A streaming engine sampled a request's FIRST token (at inject:
+        the prefill logits); latency so far is the time-to-first-token."""
+        self.ttft.observe(ttft_s)
+
+    def on_decode_step(self, occupied: int, slots: int) -> None:
+        """One decode step advanced ``occupied`` of ``slots`` batch rows:
+        the continuous-batching utilisation signal (a head-of-line-blocked
+        engine shows long tails of near-empty steps; per-slot recycling
+        keeps occupancy near 1 under load)."""
+        self.decode_steps += 1
+        self.decode_occupied += int(occupied)
+        self.decode_slots += int(slots)
+
     def on_swap(self, version: int) -> None:
         self.swaps += 1
         self.last_version = int(version)
@@ -199,6 +217,13 @@ class ServingMetrics:
         """Mean fraction of tile slots carrying real requests."""
         return self.tile_filled / self.tile_slots if self.tile_slots else 0.0
 
+    def slot_occupancy(self) -> float:
+        """Mean fraction of decode-batch rows advancing a live request
+        per decode step (streaming engines only)."""
+        return (
+            self.decode_occupied / self.decode_slots if self.decode_slots else 0.0
+        )
+
     def summary(self) -> Dict[str, object]:
         """JSON-ready snapshot (the ``BENCH_serving.json`` row shape)."""
         return {
@@ -215,6 +240,9 @@ class ServingMetrics:
             "queue_depth_max": self.queue_depth_max,
             "tiles": self.tiles,
             "tile_fill": self.tile_fill(),
+            "decode_steps": self.decode_steps,
+            "slot_occupancy": self.slot_occupancy(),
+            "ttft": self.ttft.summary(),
             "latency": self.latency.summary(),
             "latency_buckets": self.latency.buckets(),
             "per_task": {str(k): dict(v) for k, v in sorted(self.per_task.items())},

@@ -100,6 +100,7 @@ class MTLScoringEngine:
         self.classify = bool(classify)
         self._snapshot = ModelSnapshot(version=int(version), W=W)
         self._step = jax.jit(make_score_step())
+        self._step_exe = None  # AOT executable installed by warmup()
         self._source = weakref.ref(source) if source is not None else None
         # serializes the swap surface (publish/swap/publish_weights/refresh)
         # against concurrent publishers; scoring reads one snapshot ref and
@@ -193,6 +194,25 @@ class MTLScoringEngine:
                 self.publish(snap)
             return self._snapshot.version
 
+    def warmup(self) -> None:
+        """AOT-compile the fixed (batch, d) scoring tile ahead of traffic
+        (``jit(...).lower(...).compile()``), so the first real request
+        never pays the trace+compile and warm-start p99 carries no
+        retrace spike. Hot-swapped W of the same shape/dtype reuses the
+        executable (W is an argument, exactly like the jitted path)."""
+        sds = jax.ShapeDtypeStruct
+        W = self.W
+        self._step_exe_dtype = W.dtype
+        self._step_exe = (
+            jax.jit(make_score_step())
+            .lower(
+                sds(W.shape, W.dtype),
+                sds((self.batch, self.d), jnp.float32),
+                sds((self.batch,), jnp.int32),
+            )
+            .compile()
+        )
+
     # -- validation (THE single point: every entry path lands here) ---------
     def _validate_batch(
         self, X, tasks
@@ -234,12 +254,16 @@ class MTLScoringEngine:
         if pad:
             X = np.concatenate([X, np.zeros((pad, self.d), np.float32)])
             t = np.concatenate([t, np.zeros((pad,), np.int32)])
+        W = jnp.asarray(W)
+        # the warm AOT executable is shape/dtype-exact; anything else
+        # (e.g. a differently-typed W) falls back to the jitted step
+        step = self._step
+        if self._step_exe is not None and W.dtype == self._step_exe_dtype:
+            step = self._step_exe
         out = np.empty((X.shape[0],), np.float32)
         for lo in range(0, X.shape[0], B):
             out[lo : lo + B] = np.asarray(
-                self._step(
-                    W, jnp.asarray(X[lo : lo + B]), jnp.asarray(t[lo : lo + B])
-                )
+                step(W, jnp.asarray(X[lo : lo + B]), jnp.asarray(t[lo : lo + B]))
             )
         return out[:n]
 

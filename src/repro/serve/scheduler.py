@@ -69,6 +69,7 @@ class ServeRequest:
     arrival_s: Optional[float] = None
     deadline_s: Optional[float] = None
     finish_s: Optional[float] = None
+    first_token_s: Optional[float] = None
     status: str = "new"
     snapshot_version: Optional[int] = None
 
@@ -77,6 +78,14 @@ class ServeRequest:
         if self.finish_s is None or self.arrival_s is None:
             return None
         return self.finish_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (arrival -> first sampled token); only
+        streaming engines stamp ``first_token_s``."""
+        if self.first_token_s is None or self.arrival_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
 
 
 class QueueFull(RuntimeError):
@@ -98,6 +107,8 @@ class VirtualClock:
         return self.t
 
     def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
         self.t += float(dt)
 
     def advance_to(self, t: float) -> None:
@@ -156,6 +167,10 @@ class ContinuousBatchingScheduler:
         self._engine_snap: ModelSnapshot = self._snapshot
         self._queue: List[ServeRequest] = []
         self._lock = threading.Lock()
+        # streaming engines (serve/engine.py) expose a per-decode-step
+        # surface; for them one step() = one decode STEP over the running
+        # batch, not one whole-generation tile
+        self._streaming = hasattr(engine, "decode_tick")
 
     # -- introspection ------------------------------------------------------
     @property
@@ -173,6 +188,12 @@ class ContinuousBatchingScheduler:
     def pending(self) -> int:
         with self._lock:
             return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        """Requests injected into a streaming engine's slot table and not
+        yet finished (always 0 for whole-tile engines)."""
+        return int(getattr(self.engine, "active", 0))
 
     # -- ingress ------------------------------------------------------------
     def submit(
@@ -277,48 +298,66 @@ class ContinuousBatchingScheduler:
                 keep.append(r)
         self._queue = keep
 
+    def _pickup_engine_snapshot_locked(self) -> None:
+        # pick up snapshots pushed INTO the engine directly (e.g. an
+        # estimator push to an engine this scheduler was composed
+        # over). Detected by IDENTITY, not version: producer counters
+        # are independent spaces, so an engine push can carry a lower
+        # number than a scheduler counter that transport pushes ran
+        # ahead — restamp it instead of ignoring it.
+        eng_snap = self.engine.model_snapshot()
+        if eng_snap is not self._engine_snap:
+            self._engine_snap = eng_snap
+            cur = self._snapshot.version
+            # equal version = the same model delivered down both paths
+            # (estimator pushes to engine AND scheduler): no-op
+            if eng_snap.version != cur:
+                v = eng_snap.version if eng_snap.version > cur else cur + 1
+                self._snapshot = (
+                    eng_snap
+                    if v == eng_snap.version
+                    else dataclasses.replace(eng_snap, version=v)
+                )
+                self.metrics.on_swap(v)
+
+    def _sort_queue_locked(self) -> None:
+        if self.policy == "edf":
+            # stable sort: FIFO within equal (or absent) deadlines
+            self._queue.sort(
+                key=lambda r: (
+                    r.deadline_s if r.deadline_s is not None else float("inf")
+                )
+            )
+
     def step(self) -> List[ServeRequest]:
         """Pack and run ONE tile; returns the completed requests.
 
-        Packing (under the lock): drop expired requests, order the queue
-        by policy, take up to ``engine.batch``, capture the current
-        snapshot. Execution (outside the lock): ``engine.run_tile`` on
-        the captured snapshot — concurrent ``publish``/``submit`` calls
-        only affect later tiles. An empty queue returns [].
+        Whole-tile engines: packing (under the lock) drops expired
+        requests, orders the queue by policy, takes up to
+        ``engine.batch``, captures the current snapshot; execution
+        (outside the lock) is ``engine.run_tile`` on the captured
+        snapshot — concurrent ``publish``/``submit`` calls only affect
+        later tiles. An empty queue returns [].
+
+        Streaming engines (``decode_tick`` present): the tile unit is one
+        decode STEP. Each step drains finished requests out of the slot
+        table, injects up to ``engine.free_slots`` queued requests into
+        the RUNNING batch (stamping time-to-first-token and the snapshot
+        version they were admitted under — a request completes on that
+        version even if a publish lands mid-generation), then advances
+        every occupied slot one token. Returns whatever finished this
+        step, possibly requests injected many steps ago.
         """
+        if self._streaming:
+            return self._step_streaming()
         with self._lock:
             now = self.clock()
             self._expire_locked(now)
-            # pick up snapshots pushed INTO the engine directly (e.g. an
-            # estimator push to an engine this scheduler was composed
-            # over). Detected by IDENTITY, not version: producer counters
-            # are independent spaces, so an engine push can carry a lower
-            # number than a scheduler counter that transport pushes ran
-            # ahead — restamp it instead of ignoring it.
-            eng_snap = self.engine.model_snapshot()
-            if eng_snap is not self._engine_snap:
-                self._engine_snap = eng_snap
-                cur = self._snapshot.version
-                # equal version = the same model delivered down both paths
-                # (estimator pushes to engine AND scheduler): no-op
-                if eng_snap.version != cur:
-                    v = eng_snap.version if eng_snap.version > cur else cur + 1
-                    self._snapshot = (
-                        eng_snap
-                        if v == eng_snap.version
-                        else dataclasses.replace(eng_snap, version=v)
-                    )
-                    self.metrics.on_swap(v)
+            self._pickup_engine_snapshot_locked()
             if not self._queue:
                 self.metrics.observe_queue_depth(0)
                 return []
-            if self.policy == "edf":
-                # stable sort: FIFO within equal (or absent) deadlines
-                self._queue.sort(
-                    key=lambda r: (
-                        r.deadline_s if r.deadline_s is not None else float("inf")
-                    )
-                )
+            self._sort_queue_locked()
             tile = self._queue[: self.engine.batch]
             del self._queue[: self.engine.batch]
             snap = self._snapshot
@@ -349,12 +388,74 @@ class ContinuousBatchingScheduler:
             self.metrics.on_tile(len(tile), self.engine.batch)
         return tile
 
+    def _step_streaming(self) -> List[ServeRequest]:
+        # surface generations finished on earlier ticks and free their
+        # slots BEFORE packing, so this step's injection sees them
+        finished: List[ServeRequest] = list(self.engine.drain())
+        with self._lock:
+            now = self.clock()
+            self._expire_locked(now)
+            self._pickup_engine_snapshot_locked()
+            take: List[ServeRequest] = []
+            free = self.engine.free_slots
+            if free and self._queue:
+                self._sort_queue_locked()
+                take = self._queue[:free]
+                del self._queue[:free]
+            snap = self._snapshot
+            self.metrics.observe_queue_depth(len(self._queue))
+        try:
+            if take:
+                # inject = per-request prefill + first sampled token:
+                # time-to-first-token is paid here, and the request is
+                # stamped with the snapshot it was ADMITTED under
+                self.engine.inject(take, snap)
+                t1 = self.clock()
+                with self._lock:
+                    for r in take:
+                        r.status = "running"
+                        r.first_token_s = t1
+                        self.metrics.on_first_token(t1 - r.arrival_s)
+                    self.metrics.on_tile(len(take), self.engine.batch)
+            occupied = self.engine.active
+            if occupied:
+                finished.extend(self.engine.decode_tick())
+            with self._lock:
+                self.metrics.on_decode_step(occupied, self.engine.batch)
+        except BaseException:
+            # never lose a request: evict everything in-flight (the next
+            # inject resets per-attempt decode state) and requeue at the
+            # head, then let the caller see the engine failure
+            evicted = self.engine.evict_active()
+            ids = {id(r) for r in evicted}
+            back = evicted + [r for r in take if id(r) not in ids]
+            with self._lock:
+                for r in back:
+                    r.status = "queued"
+                self._queue[:0] = back
+            raise
+        done_s = self.clock()
+        with self._lock:
+            slo = self.metrics.slo_s
+            for r in finished:
+                r.status = "done"
+                r.finish_s = done_s
+                # snapshot_version was stamped at INJECT (admission), not
+                # here: mid-generation publishes must not relabel it
+                lat = done_s - r.arrival_s
+                violated = (slo is not None and lat > slo) or (
+                    r.deadline_s is not None and done_s > r.deadline_s
+                )
+                self.metrics.on_complete(self._task_key(r), lat, violated)
+        return finished
+
     def run_until_idle(self, max_steps: int = 1_000_000) -> int:
-        """Step until the queue drains; returns requests completed."""
+        """Step until the queue AND any streaming slot table drain;
+        returns requests completed."""
         total = 0
         for _ in range(max_steps):
             done = self.step()
-            if not done and not self.pending:
+            if not done and not self.pending and not self.in_flight:
                 break
             total += len(done)
         return total

@@ -109,15 +109,21 @@ def test_greedy_decode_is_deterministic():
 # decode-loop stopping semantics (scripted step: no real model needed)
 # ---------------------------------------------------------------------------
 def _scripted_engine(monkeypatch, token_rows, batch=2, eos_id=1, seed=0):
-    """ServingEngine whose prefill/step are stubbed so greedy decode emits
-    ``token_rows[t]`` (one (B,) row per decode position t)."""
+    """ServingEngine whose prefill/step hooks are stubbed so greedy decode
+    emits ``token_rows[t]`` (one (B,) row per decode position t; a request
+    reads the row of the SLOT it occupies). ``drain_every=1`` keeps step
+    counts exact; ``max_len`` is large so scripted budgets always admit."""
     import jax.numpy as jnp
 
     from repro.serve import engine as engine_mod
 
     cfg = get_config("qwen1_5-4b").reduced()
     eng = engine_mod.ServingEngine(
-        cfg, None, engine_mod.ServeConfig(batch=batch, max_len=8, eos_id=eos_id)
+        cfg,
+        None,
+        engine_mod.ServeConfig(
+            batch=batch, max_len=256, eos_id=eos_id, drain_every=1
+        ),
     )
     script = np.asarray(token_rows, np.int32)  # (T, B)
     vocab = int(script.max()) + 2
@@ -129,16 +135,17 @@ def _scripted_engine(monkeypatch, token_rows, batch=2, eos_id=1, seed=0):
 
     calls = {"steps": 0}
 
-    def fake_prefill(cfg_, params, toks, side=None, extra_len=0):
+    def fake_prefill_one(r):
+        slot = eng._free[-1]  # the slot inject() is about to assign
         calls["steps"] = 0
-        return logits_for(0), None
+        return logits_for(0)[slot : slot + 1], jnp.zeros(())
 
-    def fake_step(params, tok, cache):
+    def fake_step(token, cache):
         calls["steps"] += 1
-        return logits_for(calls["steps"]), None
+        return logits_for(calls["steps"]), cache
 
-    monkeypatch.setattr(engine_mod, "prefill", fake_prefill)
-    eng._step = fake_step
+    eng._prefill_one = fake_prefill_one
+    eng._step_call = fake_step
     return eng, calls
 
 

@@ -1,0 +1,286 @@
+"""Decode-step continuous batching: slot recycling, bucketed-prefill pad
+masking, mid-decode admission/publish, retry reset, warmup.
+
+Scripted tests drive the slot machinery through stubbed prefill/step hooks
+(deterministic token streams, no model); the bit-equality tests run a real
+reduced config through the compiled bucketed-prefill + per-slot decode
+path and compare against solo (batch=1) generations token for token.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve import (
+    ContinuousBatchingScheduler,
+    ModelSnapshot,
+    MTLScoringEngine,
+    Request,
+    ServeConfig,
+    ServingEngine,
+    VirtualClock,
+)
+
+
+# ---------------------------------------------------------------------------
+# scripted slot engine (no model): token[t][slot] per decode boundary t
+# ---------------------------------------------------------------------------
+def _slot_scripted_engine(token_rows, batch=2, eos_id=1):
+    """ServingEngine whose hooks emit ``token_rows[t][slot]`` at global
+    decode boundary t. Unlike test_serve's helper the clock does NOT
+    reset on prefill, so requests injected into recycled slots mid-decode
+    read the CURRENT script row (their first token) while older slots
+    keep advancing — exactly the continuous-batching timeline."""
+    cfg = get_config("qwen1_5-4b").reduced()
+    eng = ServingEngine(
+        cfg,
+        None,
+        ServeConfig(batch=batch, max_len=256, eos_id=eos_id, drain_every=1),
+    )
+    script = np.asarray(token_rows, np.int32)  # (T, B)
+    vocab = int(script.max()) + 2
+    t = {"now": 0}
+
+    def logits_at(tt):
+        z = np.full((batch, vocab), -10.0, np.float32)
+        z[np.arange(batch), script[min(tt, script.shape[0] - 1)]] = 10.0
+        return jnp.asarray(z)
+
+    def fake_prefill_one(r):
+        slot = eng._free[-1]
+        return logits_at(t["now"])[slot : slot + 1], jnp.zeros(())
+
+    def fake_step(token, cache):
+        t["now"] += 1
+        return logits_at(t["now"]), cache
+
+    eng._prefill_one = fake_prefill_one
+    eng._step_call = fake_step
+    return eng
+
+
+def test_slot_recycling_no_drops_no_double_finish():
+    """Four requests stream through two slots: EOS and budget stops free
+    slots mid-run, later requests are injected into the RUNNING batch,
+    every request finishes exactly once with the scripted tokens."""
+    #               t=0     t=1     t=2     t=3
+    script = [[5, 6], [7, 8], [9, 1], [2, 3]]
+    eng = _slot_scripted_engine(script)
+    sched = ContinuousBatchingScheduler(eng, clock=VirtualClock(), policy="fifo")
+    r0 = Request(prompt=np.array([4], np.int32), max_new_tokens=3)
+    r1 = Request(prompt=np.array([4], np.int32), max_new_tokens=2)
+    r2 = Request(prompt=np.array([4], np.int32), max_new_tokens=2)
+    r3 = Request(prompt=np.array([4], np.int32), max_new_tokens=2)
+    sched.submit_many([r0, r1, r2, r3])
+
+    done = []
+    steps = 0
+    while (sched.pending or sched.in_flight) and steps < 50:
+        done += sched.step()
+        steps += 1
+    # no drops, no double-finishes across slot recycling
+    assert len(done) == 4 and len({id(r) for r in done}) == 4
+    assert all(r.status == "done" and r.done for r in done)
+    # slot0: r0 runs to budget while slot1 turns over r1 -> r2 -> r3
+    assert r0.output == [5, 7, 9] and r0.finish_reason == "length"
+    assert r1.output == [6, 8] and r1.finish_reason == "length"
+    assert r2.output == [8, 1] and r2.finish_reason == "eos"  # EOS recycle
+    assert r3.output == [1] and r3.finish_reason == "eos"  # EOS at prefill
+    assert eng.free_slots == eng.batch and eng.active == 0
+    m = sched.metrics
+    assert m.ttft.count == 4 and m.completed == 4
+    assert m.decode_steps == 3 and 0.0 < m.slot_occupancy() <= 1.0
+    # a long generation never head-of-line-blocks a short one: r1 (2 tokens)
+    # finished before r0 (3 tokens) despite sharing the batch
+    assert r1.finish_s <= r0.finish_s
+
+
+def test_mid_decode_publish_isolation():
+    """A publish landing between decode steps must not relabel in-flight
+    requests: they complete on the snapshot they were ADMITTED under."""
+    script = [[5, 6], [7, 8], [9, 2], [3, 4]]
+    eng = _slot_scripted_engine(script)
+    sched = ContinuousBatchingScheduler(eng, clock=VirtualClock(), policy="fifo")
+    a = Request(prompt=np.array([4], np.int32), max_new_tokens=3)
+    b = Request(prompt=np.array([4], np.int32), max_new_tokens=3)
+    sched.submit_many([a, b])
+    sched.step()  # inject on v0 + one decode step (nobody finished)
+    assert a.status == "running" and sched.in_flight == 2
+    sched.publish(ModelSnapshot(version=5))  # mid-generation hot-swap
+    late = Request(prompt=np.array([4], np.int32), max_new_tokens=1)
+    sched.submit(late)
+    n = sched.run_until_idle()
+    assert n == 3
+    # in-flight at publish time -> admitted version; injected after -> new
+    assert a.snapshot_version == 0 and b.snapshot_version == 0
+    assert late.snapshot_version == 5
+    assert sched.metrics.swaps == 1
+
+
+def test_retry_resets_per_attempt_decode_state():
+    """A request evicted after a failed decode keeps no stale output: the
+    re-inject resets output/done/finish_reason, so the retry emits the
+    scripted stream exactly once (no double-append)."""
+    script = [[5, 6], [7, 8], [9, 2], [3, 4]]
+    eng = _slot_scripted_engine(script)
+    snap = eng.model_snapshot()
+    r = Request(prompt=np.array([4], np.int32), max_new_tokens=3)
+    eng.inject([r], snap)
+    eng.decode_tick()
+    assert r.output == [5, 7] and not r.done  # partial attempt drained
+    evicted = eng.evict_active()  # simulated tile failure
+    assert evicted == [r] and eng.free_slots == eng.batch
+    eng.inject([r], snap)  # retry: per-attempt state reset
+    while not r.done:
+        eng.decode_tick()
+    # the retry re-prefills at the current boundary (t=1) and streams
+    # fresh: NOT [5, 7] + new tokens (the old double-append bug)
+    assert r.output == [7, 9, 3]
+    assert len(r.output) == r.max_new_tokens and r.finish_reason == "length"
+
+
+def test_scheduler_requeues_streaming_engine_failure():
+    """A decode-step crash evicts the whole slot table back to the queue
+    head; the rerun completes everything with exact budget lengths."""
+    script = [[5, 6], [7, 8], [9, 2], [3, 4], [5, 6]]
+    eng = _slot_scripted_engine(script)
+    sched = ContinuousBatchingScheduler(eng, clock=VirtualClock(), policy="fifo")
+    reqs = sched.submit_many(
+        [Request(prompt=np.array([4], np.int32), max_new_tokens=3) for _ in range(2)]
+    )
+    good_step = eng._step_call
+
+    def boom(token, cache):
+        raise RuntimeError("device fell over")
+
+    eng._step_call = boom
+    with pytest.raises(RuntimeError, match="fell over"):
+        sched.step()
+    assert sched.pending == 2 and sched.in_flight == 0
+    assert all(r.status == "queued" for r in reqs)
+    eng._step_call = good_step
+    assert sched.run_until_idle() == 2
+    for r in reqs:
+        assert r.status == "done" and len(r.output) == 3  # no stale tokens
+
+
+def test_inject_overflow_and_blocking_run_guards():
+    script = [[5, 6], [7, 8]]
+    eng = _slot_scripted_engine(script)
+    snap = eng.model_snapshot()
+    reqs = [
+        Request(prompt=np.array([4], np.int32), max_new_tokens=8)
+        for _ in range(3)
+    ]
+    with pytest.raises(RuntimeError, match="free slots"):
+        eng.inject(reqs, snap)
+    eng.inject(reqs[:2], snap)
+    with pytest.raises(RuntimeError, match="in-flight"):
+        eng.run([Request(prompt=np.array([4], np.int32), max_new_tokens=1)])
+
+
+def test_virtual_clock_rejects_negative_dt():
+    clk = VirtualClock()
+    clk.advance(0.0)
+    clk.advance(1.5)
+    with pytest.raises(ValueError, match="dt"):
+        clk.advance(-0.1)
+    assert clk() == 1.5  # unchanged after the rejected advance
+
+
+# ---------------------------------------------------------------------------
+# real-model bit-equality (compiled bucketed prefill + per-slot decode)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def qwen():
+    import jax
+
+    from repro.models import init_params
+
+    cfg = get_config("qwen1_5-4b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(5))
+
+
+def _solo(cfg, params, prompt, budget, bucket_min=8):
+    eng = ServingEngine(
+        cfg, params, ServeConfig(batch=1, max_len=64, bucket_min=bucket_min)
+    )
+    r = Request(prompt=np.asarray(prompt, np.int32), max_new_tokens=budget)
+    eng.run([r])
+    return r.output
+
+
+def test_bucketed_pad_prefill_batched_equals_solo(qwen):
+    """Prompts of length 3 and 7 share the padded length-8 bucket; the pad
+    mask must make their batched generations BIT-equal to solo runs (the
+    old left-pad-without-mask path diverged here)."""
+    cfg, params = qwen
+    p_short, p_long = [3, 5, 7], [2, 4, 6, 8, 10, 12, 14]
+    solo_s = _solo(cfg, params, p_short, 6)
+    solo_l = _solo(cfg, params, p_long, 6)
+    eng = ServingEngine(
+        cfg, params, ServeConfig(batch=2, max_len=64, bucket_min=8)
+    )
+    rs = Request(prompt=np.asarray(p_short, np.int32), max_new_tokens=6)
+    rl = Request(prompt=np.asarray(p_long, np.int32), max_new_tokens=6)
+    eng.run([rs, rl])
+    assert len(eng._prefill_exe) == 1  # one shared length-8 executable
+    assert rs.output == solo_s and rl.output == solo_l
+
+
+def test_mid_decode_admission_bit_equal_to_solo(qwen):
+    """A request injected while other slots are mid-generation decodes the
+    same tokens it would decode alone."""
+    cfg, params = qwen
+    prompts = [[3, 5, 7], [11, 13], [2, 4, 6, 8, 10]]
+    budgets = [8, 5, 6]
+    solo = [
+        _solo(cfg, params, p, b) for p, b in zip(prompts, budgets)
+    ]
+    eng = ServingEngine(
+        cfg,
+        params,
+        ServeConfig(batch=2, max_len=64, bucket_min=8, drain_every=2),
+    )
+    sched = ContinuousBatchingScheduler(eng, clock=VirtualClock(), policy="fifo")
+    reqs = [
+        Request(prompt=np.asarray(p, np.int32), max_new_tokens=b)
+        for p, b in zip(prompts, budgets)
+    ]
+    sched.submit_many(reqs[:2])
+    sched.step()
+    sched.step()  # two decode steps in, slots busy
+    sched.submit(reqs[2])  # arrives mid-decode, waits for an EOS/budget slot
+    sched.run_until_idle()
+    assert [r.output for r in reqs] == solo
+    for r in reqs:
+        assert r.first_token_s is not None and r.ttft_s <= r.latency_s
+
+
+def test_warmup_precompiles_all_tile_shapes(qwen):
+    """After warmup, serving a bucket-covered request compiles NOTHING new
+    (prefill bucket, decode step and slot insert are all AOT-built)."""
+    cfg, params = qwen
+    eng = ServingEngine(
+        cfg, params, ServeConfig(batch=2, max_len=64, bucket_min=8)
+    )
+    assert eng.warmup() == [8, 16, 32]
+    assert eng._decode_exe is not None and eng._insert_exe is not None
+    before = set(eng._prefill_exe)
+    r = Request(prompt=np.asarray([3, 5, 7], np.int32), max_new_tokens=4)
+    eng.run([r])
+    assert set(eng._prefill_exe) == before  # no new executables
+    assert len(r.output) == 4
+    with pytest.raises(ValueError, match="decode room"):
+        eng.warmup([64])
+
+
+def test_mtl_warmup_matches_jitted_scores():
+    W = np.random.RandomState(0).randn(5, 12).astype(np.float32)
+    X = np.random.RandomState(1).randn(7, 12).astype(np.float32)
+    t = np.arange(7, dtype=np.int32) % 5
+    cold = MTLScoringEngine(W, batch=4)
+    warm = MTLScoringEngine(W, batch=4)
+    warm.warmup()
+    assert warm._step_exe is not None
+    np.testing.assert_array_equal(warm.score_batch(X, t), cold.score_batch(X, t))

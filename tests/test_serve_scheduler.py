@@ -416,11 +416,21 @@ def test_load_generator_records_bench(tmp_path):
         "--out", str(out),
     ])
     rows = json.loads(out.read_text())
-    assert rows, "bench wrote no rows"
-    for row in rows:
+    load_rows = [r for r in rows if r["kind"] == "load"]
+    assert load_rows, "bench wrote no load rows"
+    for row in load_rows:
         s = row["metrics"]
         assert s["completed"] + s["expired"] == row["requests"] == s["submitted"]
         lat = s["latency"]
         assert 0 < lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"]
         assert s["throughput_rps"] > 0 and s["slo_violations"] >= 0
         assert s["swaps"] >= 1  # the bench hot-swaps mid-load
+    # head-of-line fix row: per-slot decode batching must decouple short-
+    # request p99 from the longest in-flight generation
+    (inter,) = [r for r in rows if r["kind"] == "lm_interleave"]
+    assert inter["streaming"]["short_p99_s"] < inter["blocking"]["short_p99_s"]
+    assert inter["streaming"]["slot_occupancy"] > 0
+    # AOT warmup row: warm-start worst case beat the cold trace+compile
+    (wc,) = [r for r in rows if r["kind"] == "warm_vs_cold"]
+    for eng in ("lm", "mtl"):
+        assert wc[eng]["warm_max_s"] < wc[eng]["cold_first_s"]
