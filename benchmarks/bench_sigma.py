@@ -1,0 +1,233 @@
+"""Structured-Sigma scaling sweep: m x {dense, low_rank_diag, graphical_lasso}.
+
+Measures, per (m, member) cell, the four costs the structured-Sigma PR
+claims to shrink (no training loop — the Omega-step, wire and serve-gather
+costs are benched directly on a synthetic W so m = 32768 stays tractable):
+
+  * ``omega_step_wall_s``     one Omega-step (jitted dense eigh vs jitted
+                              rank-r subspace iteration vs host-side
+                              blockwise soft-thresholding)
+  * ``peak_sigma_bytes``      resident Sigma representation
+                              (``SigmaView.nbytes()`` vs 4 m^2)
+  * ``commit_payload_bytes``  one worker's snapshot + commit wire bytes
+                              under the host parameter-server protocol
+                              (``transport.payload_nbytes``)
+  * ``serve_gather_s``        one 32-row serve-tile Sigma-row gather
+                              (``MTLScoringEngine.sigma_rows_for``)
+
+Cells that would materialize a dense (m, m) beyond the materialization
+limit are skipped with an explicit reason and analytic byte counts — a
+skip is recorded, never silent. Results land in ``BENCH_sigma.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_sigma
+    PYTHONPATH=src python -m benchmarks.bench_sigma --tiny
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+# the same dense-materialization ceiling core/sigma_view.py enforces
+DENSE_LIMIT = 4096
+# graphical_lasso's Omega-step is host-side O(m^2): cap the sweep there too
+GL_LIMIT = 4096
+WORKERS = 8
+D = 32
+N_MAX = 16
+RANK = 32
+TILE = 32
+
+
+def _best_of(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _payload_bytes(m, m_loc, sigma_entry_floats):
+    """Snapshot + commit wire bytes for one worker round (float32)."""
+    snapshot = m_loc * D + sigma_entry_floats + m_loc * N_MAX
+    commit = m_loc * N_MAX + m_loc * D  # dalpha_rows + db_rows
+    return 4 * (snapshot + commit)
+
+
+def run(tiny: bool, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.omega import omega_step, omega_step_lowrank
+    from repro.core.omega_regularizers import get_regularizer
+    from repro.core.sigma_view import LowRankDiagSigma
+    from repro.core.transport import Snapshot, payload_nbytes
+    from repro.serve.mtl import MTLScoringEngine
+
+    ms = [16, 64] if tiny else [64, 512, 4096, 32768]
+    members = ["dense", "low_rank_diag", "graphical_lasso"]
+    rng = np.random.RandomState(seed)
+
+    dense_step = jax.jit(omega_step)
+    rows = []
+    for m in ms:
+        W = jnp.asarray(rng.randn(m, D).astype(np.float32) / np.sqrt(D))
+        m_loc = max(m // WORKERS, 1)
+        W_rows = np.zeros((m_loc, D), np.float32)
+        alpha_rows = np.zeros((m_loc, N_MAX), np.float32)
+        tasks = rng.randint(0, m, size=TILE)
+        for member in members:
+            row = dict(
+                m=m, member=member, omega_step_wall_s=None,
+                peak_sigma_bytes=None, commit_payload_bytes=None,
+                serve_gather_s=None, skipped=None,
+            )
+            if member == "dense":
+                row["peak_sigma_bytes"] = 4 * m * m
+                row["commit_payload_bytes"] = payload_nbytes(
+                    Snapshot(
+                        W_rows=W_rows,
+                        sigma_rows=np.zeros((m_loc, m), np.float32),
+                        alpha_rows=alpha_rows, version=0,
+                    )
+                ) + 4 * (m_loc * N_MAX + m_loc * D)
+                if m > DENSE_LIMIT:
+                    row["skipped"] = (
+                        f"dense eigh/gather skipped at m={m} > {DENSE_LIMIT} "
+                        "(4 m^2 bytes recorded analytically)"
+                    )
+                else:
+                    sig, _ = dense_step(W, 1e-6)
+                    jax.block_until_ready(sig)
+                    row["omega_step_wall_s"] = _best_of(
+                        lambda: jax.block_until_ready(dense_step(W, 1e-6)[0])
+                    )
+                    eng = MTLScoringEngine(
+                        np.asarray(W), batch=TILE, sigma=np.asarray(sig)
+                    )
+                    eng.sigma_rows_for(tasks)
+                    row["serve_gather_s"] = _best_of(
+                        lambda: eng.sigma_rows_for(tasks)
+                    )
+            elif member == "low_rank_diag":
+                r = min(RANK, m)
+                lr_step = jax.jit(
+                    omega_step_lowrank, static_argnums=(1, 2)
+                )
+                U, s, d = lr_step(W, r, 8, 1e-6)
+                jax.block_until_ready(d)
+                row["omega_step_wall_s"] = _best_of(
+                    lambda: jax.block_until_ready(lr_step(W, r, 8, 1e-6)[2])
+                )
+                view = LowRankDiagSigma(U=U, core=jnp.diag(s), d=d)
+                row["peak_sigma_bytes"] = view.nbytes()
+                row["commit_payload_bytes"] = payload_nbytes(
+                    Snapshot(
+                        W_rows=W_rows, sigma_rows=None,
+                        alpha_rows=alpha_rows, version=0,
+                        sigma_diag=np.zeros((m_loc,), np.float32),
+                    )
+                ) + 4 * (m_loc * N_MAX + m_loc * D)
+                eng = MTLScoringEngine(np.asarray(W), batch=TILE, sigma=view)
+                eng.sigma_rows_for(tasks)
+                row["serve_gather_s"] = _best_of(
+                    lambda: eng.sigma_rows_for(tasks)
+                )
+            else:  # graphical_lasso
+                if m > GL_LIMIT:
+                    row["skipped"] = (
+                        f"graphical_lasso host step skipped at m={m} > "
+                        f"{GL_LIMIT} (O(m^2) host Gram)"
+                    )
+                else:
+                    reg = get_regularizer("graphical_lasso", penalty=0.5)
+                    view, _ = reg.step(W, 1e-6)
+                    row["omega_step_wall_s"] = _best_of(
+                        lambda: reg.step(W, 1e-6), reps=1 if m >= 4096 else 3
+                    )
+                    row["peak_sigma_bytes"] = view.nbytes()
+                    row["commit_payload_bytes"] = payload_nbytes(
+                        Snapshot(
+                            W_rows=W_rows, sigma_rows=None,
+                            alpha_rows=alpha_rows, version=0,
+                            sigma_diag=np.zeros((m_loc,), np.float32),
+                        )
+                    ) + 4 * (m_loc * N_MAX + m_loc * D)
+                    eng = MTLScoringEngine(
+                        np.asarray(W), batch=TILE, sigma=view
+                    )
+                    eng.sigma_rows_for(tasks)
+                    row["serve_gather_s"] = _best_of(
+                        lambda: eng.sigma_rows_for(tasks)
+                    )
+            rows.append(row)
+            wall = row["omega_step_wall_s"]
+            print(
+                f"m={m:6d} {member:16s} "
+                f"omega {wall * 1e3:9.2f} ms  " if wall is not None
+                else f"m={m:6d} {member:16s} omega      --     ",
+                end="",
+            )
+            print(
+                f"sigma {row['peak_sigma_bytes'] or 0:>12d} B  "
+                f"payload {row['commit_payload_bytes'] or 0:>10d} B"
+                + (f"  [{row['skipped']}]" if row["skipped"] else "")
+            )
+    return dict(
+        tiny=tiny, seed=seed, d=D, workers=WORKERS, rank=RANK,
+        n_max=N_MAX, tile=TILE, ms=ms, rows=rows,
+    )
+
+
+def check(res: dict) -> None:
+    """Schema + claim assertions (shared by the CI bench-smoke step)."""
+    keys = {
+        "m", "member", "omega_step_wall_s", "peak_sigma_bytes",
+        "commit_payload_bytes", "serve_gather_s", "skipped",
+    }
+    assert res["rows"], "empty sweep"
+    for row in res["rows"]:
+        assert keys <= set(row), f"missing keys in {row}"
+    by = {(r["m"], r["member"]): r for r in res["rows"]}
+    for m in res["ms"]:
+        dense = by[(m, "dense")]
+        lr = by[(m, "low_rank_diag")]
+        # the diag-not-rows wire win holds at every m; the factor-storage
+        # win only once m clears the rank (at m ~ r dense is smaller)
+        assert lr["commit_payload_bytes"] < dense["commit_payload_bytes"], m
+        if m >= 512:
+            assert lr["peak_sigma_bytes"] < dense["peak_sigma_bytes"], m
+        if m >= 4096:  # the PR's 10x acceptance bar at scale
+            assert lr["peak_sigma_bytes"] * 10 <= dense["peak_sigma_bytes"]
+            assert (
+                lr["commit_payload_bytes"] * 10 <= dense["commit_payload_bytes"]
+            )
+        if (
+            m >= 512
+            and dense["omega_step_wall_s"] is not None
+            and lr["omega_step_wall_s"] is not None
+        ):
+            assert lr["omega_step_wall_s"] <= dense["omega_step_wall_s"], m
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(args.tiny)
+    check(res)
+    out = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_sigma.json",
+    )
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

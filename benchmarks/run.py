@@ -1,18 +1,88 @@
 """Benchmark driver. One benchmark per paper table/figure plus kernel
-micro-benches and the roofline aggregation.
+micro-benches, the roofline aggregation, and the standalone sweep modules.
 
-    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run            # paper + kernels
     PYTHONPATH=src python -m benchmarks.run fig2 table2
+    PYTHONPATH=src python -m benchmarks.run sigma      # a standalone sweep
 
-Prints ``name,us_per_call,derived`` CSV rows and writes the full metric
-dicts to results/benchmarks.json.
+Standalone sweeps (``bench_async`` / ``bench_regularizers`` /
+``bench_serving`` / ``bench_sigma`` / ``bench_transport``) are discovered
+from the directory — a new ``bench_*.py`` with a ``main()`` shows up here
+with no driver edit — and selectable by short name (``sigma``) or module
+name (``bench_sigma``); ``--tiny`` is forwarded where supported.
+
+Prints ``name,us_per_call,derived`` CSV rows, writes the full metric dicts
+to results/benchmarks.json, and ends with the BENCH_*.json index: which
+root-level result files exist, which sweep refreshes each, and which
+sweeps have not been run yet (scanned live, so it can never go stale).
 """
 from __future__ import annotations
 
+import glob
+import importlib
 import json
 import os
 import sys
 import time
+
+# modules of the ALL-registry / aggregation kind the driver runs inline;
+# everything else matching bench_*.py is a standalone sweep with a main()
+_INLINE = {"bench_kernels", "bench_roofline"}
+# sweeps that accept --tiny (forwarded when the driver invokes them)
+_TINY_OK = {"bench_regularizers", "bench_sigma"}
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def standalone_sweeps() -> dict:
+    """{short_name: module_name} for every bench_*.py with its own main()."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(os.path.dirname(__file__), "bench_*.py"))):
+        mod = os.path.splitext(os.path.basename(path))[0]
+        if mod not in _INLINE:
+            out[mod.removeprefix("bench_")] = mod
+    return out
+
+
+def bench_json_index() -> list:
+    """The live BENCH_*.json index: (file, exists, producing sweep) rows."""
+    sweeps = standalone_sweeps()
+    rows = []
+    seen = set()
+    for short, mod in sorted(sweeps.items()):
+        fname = f"BENCH_{short}.json"
+        src_path = os.path.join(os.path.dirname(__file__), f"{mod}.py")
+        with open(src_path) as f:
+            src = f.read()
+        if fname not in src:
+            continue  # sweep writes elsewhere (e.g. results/), not a root file
+        path = os.path.join(_repo_root(), fname)
+        rows.append((fname, os.path.exists(path), f"python -m benchmarks.{mod}"))
+        seen.add(fname)
+    # kernels writes its BENCH file from the inline registry sweep
+    kfile = "BENCH_kernels.json"
+    rows.append(
+        (
+            kfile,
+            os.path.exists(os.path.join(_repo_root(), kfile)),
+            "python -m benchmarks.run kernels_*",
+        )
+    )
+    # orphans: result files no current sweep produces (renamed/removed)
+    for path in sorted(glob.glob(os.path.join(_repo_root(), "BENCH_*.json"))):
+        fname = os.path.basename(path)
+        if fname not in seen and fname != kfile:
+            rows.append((fname, True, "STALE — no sweep produces this file"))
+    return rows
+
+
+def _print_bench_index() -> None:
+    print("# BENCH_*.json index (repo root):", file=sys.stderr)
+    for fname, exists, producer in bench_json_index():
+        state = "present" if exists else "MISSING (not yet run)"
+        print(f"#   {fname:28s} {state:22s} <- {producer}", file=sys.stderr)
 
 
 def main() -> None:
@@ -21,9 +91,10 @@ def main() -> None:
     from benchmarks import bench_kernels
     from benchmarks import bench_roofline
 
-    selected = sys.argv[1:] or (
-        list(paper.ALL) + list(bench_kernels.ALL) + ["roofline"]
-    )
+    argv = [a for a in sys.argv[1:] if a != "--tiny"]
+    tiny = "--tiny" in sys.argv[1:]
+    sweeps = standalone_sweeps()
+    selected = argv or (list(paper.ALL) + list(bench_kernels.ALL) + ["roofline"])
     results = []
     print("name,us_per_call,derived")
     for name in selected:
@@ -44,6 +115,19 @@ def main() -> None:
             s = bench_roofline.summary(rows)
             print(f"roofline_grid,0,{s}", flush=True)
             results.append({"name": "roofline_grid", **s})
+        elif name in sweeps or name in sweeps.values():
+            mod_name = sweeps.get(name, name)
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            sweep_argv = ["--tiny"] if (tiny and mod_name in _TINY_OK) else []
+            t0 = time.time()
+            old_argv, sys.argv = sys.argv, [mod_name] + sweep_argv
+            try:
+                mod.main()
+            finally:
+                sys.argv = old_argv
+            us = (time.time() - t0) * 1e6
+            print(f"{mod_name},{us:.0f},standalone sweep", flush=True)
+            results.append({"name": mod_name, "us_per_call": us})
         else:
             print(f"{name},0,UNKNOWN BENCH", file=sys.stderr)
     os.makedirs("results", exist_ok=True)
@@ -52,6 +136,7 @@ def main() -> None:
     npass = sum(1 for r in results if r.get("pass") is True)
     nfail = sum(1 for r in results if r.get("pass") is False)
     print(f"# paper-claim benches: {npass} pass, {nfail} fail", file=sys.stderr)
+    _print_bench_index()
 
 
 if __name__ == "__main__":

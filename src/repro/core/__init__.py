@@ -53,8 +53,18 @@ from .omega import (
     correlation_from_sigma,
     init_sigma,
     omega_step,
+    omega_step_lowrank,
     rho_lemma10,
     rho_spectral,
+)
+from .sigma_view import (
+    DenseSigma,
+    LowRankDiagSigma,
+    SigmaView,
+    SparseSigma,
+    as_view,
+    maybe_dense,
+    view_from_factors,
 )
 from .omega_regularizers import (
     OmegaRegularizer,
@@ -77,6 +87,7 @@ from . import (
     feature_maps,
     omega_regularizers,
     sdca,
+    sigma_view,
     solver_backends,
 )
 from . import transport  # noqa: F401 (registry module, part of the API)
@@ -152,8 +163,16 @@ __all__ = [
     "correlation_from_sigma",
     "init_sigma",
     "omega_step",
+    "omega_step_lowrank",
     "rho_lemma10",
     "rho_spectral",
+    "SigmaView",
+    "DenseSigma",
+    "LowRankDiagSigma",
+    "SparseSigma",
+    "as_view",
+    "maybe_dense",
+    "view_from_factors",
     "SolverBackend",
     "available_backends",
     "get_backend",
@@ -166,6 +185,7 @@ __all__ = [
     "feature_maps",
     "omega_regularizers",
     "sdca",
+    "sigma_view",
     "solver_backends",
     "transport",
 ]

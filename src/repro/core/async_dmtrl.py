@@ -179,7 +179,7 @@ def fit_async(
         n_workers=cfg.n_workers,
         staleness_budget=cfg.staleness_budget,
     )
-    reg = omega_reg.resolve_regularizer(cfg, regularizer)
+    reg = omega_reg.resolve_regularizer(cfg, regularizer, m=raw.m)
     spec = get_transport(cfg.transport)
     transport = spec.factory()
     transport.setup(

@@ -32,6 +32,7 @@ from . import omega_regularizers as omega_reg
 from .dmtrl import DMTRLConfig, WarmStart, _rho_value
 from .losses import get_loss
 from .mtl_data import MTLData
+from .sigma_view import LowRankDiagSigma, SigmaView
 from .solver_backends import get_backend
 
 Array = jax.Array
@@ -132,6 +133,7 @@ def make_local_solve(
     n_max: int,
     d: int,
     rho: float,
+    sigma_input: str = "rows",
 ):
     """The worker half of one communication round, as a shard_map body.
 
@@ -141,7 +143,14 @@ def make_local_solve(
     (pod-psum'ed, eta/n-normalized) ready for the server reduce. The sync
     path passes the live ``W``; the async engine passes each worker group's
     bounded-staleness snapshot — the math is identical by construction.
+
+    ``sigma_input`` names what the sigma argument carries: ``"rows"`` the
+    dense (m_loc, m) owned Sigma rows (the historical layout — sigma_ii is
+    extracted by global task id), ``"diag"`` just the local (m_loc,)
+    diagonal (the structured-Sigma layout: workers never see full rows).
     """
+    if sigma_input not in ("rows", "diag"):
+        raise ValueError(f"sigma_input must be 'rows' or 'diag', got {sigma_input!r}")
     loss = get_loss(cfg.loss)
     dsz = _axis_size(mesh, axes.data)
     psz = _axis_size(mesh, axes.pod)
@@ -168,7 +177,10 @@ def make_local_solve(
         keys = jax.vmap(lambda t: jax.random.fold_in(jax.random.fold_in(key, t), pi))(
             tids
         )
-        sigma_ii = jnp.take_along_axis(sigma_rows, tids[:, None], axis=1)[:, 0]
+        if sigma_input == "diag":
+            sigma_ii = sigma_rows  # already the local (m_loc,) diagonal
+        else:
+            sigma_ii = jnp.take_along_axis(sigma_rows, tids[:, None], axis=1)[:, 0]
         # local valid sample count in this pod's contiguous slice
         n_local = jnp.clip(n - pi * n_loc, 0, n_loc).astype(jnp.int32)
         if use_gram:
@@ -282,6 +294,43 @@ def pad_sigma_blocks(sigma_t, omega_t, m: int, m_true: int, jitter: float):
     return sigma, omega
 
 
+def pad_sigma_any(sigma_t, omega_t, m: int, m_true: int, jitter: float):
+    """pad_sigma_blocks generalized to SigmaView / missing-omega inputs.
+    Dense (array, array) pairs go through pad_sigma_blocks unchanged (the
+    bit-parity anchor); views pad via their own factor-level embedding."""
+    if isinstance(sigma_t, SigmaView):
+        sigma = sigma_t.pad(m, jitter)
+        omega = omega_t.pad(m, 1.0 / jitter) if isinstance(omega_t, SigmaView) else None
+        return sigma, omega
+    if omega_t is None:
+        sigma, _ = pad_sigma_blocks(sigma_t, sigma_t, m, m_true, jitter)
+        return sigma, None
+    return pad_sigma_blocks(sigma_t, omega_t, m, m_true, jitter)
+
+
+def device_put_sigma(sigma, mesh: Mesh, axes: MeshAxes):
+    """Shard a padded Sigma onto the mesh: dense rows get the historical
+    P(data, None) row-sharding; a LowRankDiagSigma shards its task-indexed
+    leaves (U rows / d) over the data axis with the r x r core replicated.
+    SparseSigma has no mesh-native round yet — it densifies here (the
+    documented small-m fallback; host transports keep it structured)."""
+    if isinstance(sigma, LowRankDiagSigma):
+        return LowRankDiagSigma(
+            U=jax.device_put(sigma.U, NamedSharding(mesh, P(axes.data, None))),
+            core=jax.device_put(sigma.core, NamedSharding(mesh, P())),
+            d=jax.device_put(sigma.d, NamedSharding(mesh, P(axes.data))),
+        )
+    if isinstance(sigma, SigmaView):
+        sigma = sigma.dense()
+    return jax.device_put(sigma, NamedSharding(mesh, P(axes.data, None)))
+
+
+def device_put_omega(omega, mesh: Mesh, axes: MeshAxes):
+    if omega is None:
+        return None
+    return device_put_sigma(omega, mesh, axes)
+
+
 def install_initial_state(
     state: "DistributedState",
     raw: MTLData,
@@ -297,19 +346,23 @@ def install_initial_state(
     """Install a warm start (``init``) or a custom-init regularizer's Sigma
     into freshly padded mesh state, rederiving W(alpha). Shared by the sync
     and async engines so their tau=0 bit-parity anchor cannot drift."""
-    if init is None and not reg.custom_init:
+    if init is None and not reg.custom_init and not reg.structured:
         return state
     if init is not None:
-        sigma_t = jnp.asarray(init.sigma, data.x.dtype)
-        omega_t = jnp.asarray(init.omega, data.x.dtype)
+        if isinstance(init.sigma, SigmaView):
+            sigma_t = init.sigma
+        else:
+            sigma_t = jnp.asarray(init.sigma, data.x.dtype)
+        omega_t = init.omega
+        if omega_t is not None and not isinstance(omega_t, SigmaView):
+            omega_t = jnp.asarray(omega_t, data.x.dtype)
     else:
         sigma_t, omega_t = reg.init(raw.m, data.x.dtype)
-    sig, om = pad_sigma_blocks(sigma_t, omega_t, m, raw.m, cfg.omega_jitter)
-    sr = NamedSharding(mesh, P(axes.data, None))
+    sig, om = pad_sigma_any(sigma_t, omega_t, m, raw.m, cfg.omega_jitter)
     state = dataclasses.replace(
         state,
-        sigma=jax.device_put(sig, sr),
-        omega=jax.device_put(om, sr),
+        sigma=device_put_sigma(sig, mesh, axes),
+        omega=device_put_omega(om, mesh, axes),
     )
     if init is not None:
         alpha0 = jnp.zeros((m, data.n_max), data.x.dtype)
@@ -351,19 +404,47 @@ def make_distributed_round(
     n_max: int,
     d: int,
     rho: float,
+    structured: bool = False,
 ):
     """Build the jitted one-round function over sharded global arrays.
 
     round(x, y, mask, n, alpha, W, sigma, key) -> (alpha, W)
+
+    With ``structured=True`` the sigma argument is a LowRankDiagSigma pytree
+    (U/d row-sharded, core replicated) and the server reduce is factored:
+    instead of all-gathering the (m, d) delta_b block, each shard psums its
+    (r, d) projection U_rows^T db — O(r d) collective bytes per round
+    instead of O(m d), the communication win at large m — then applies
+    dW_rows = U_rows (C psum) + d_rows * db locally. The dense and factored
+    reduces agree to float tolerance (parity-tested).
     """
-    local_solve = make_local_solve(cfg, mesh, axes, m, n_max, d, rho)
-    in_specs = round_in_specs(axes) + (P(),)  # + key (replicated)
+    structured_specs = LowRankDiagSigma(
+        U=P(axes.data, None), core=P(), d=P(axes.data)
+    )
+    local_solve = make_local_solve(
+        cfg, mesh, axes, m, n_max, d, rho,
+        sigma_input="diag" if structured else "rows",
+    )
+    base_specs = round_in_specs(axes)
+    if structured:
+        base_specs = base_specs[:-1] + (structured_specs,)
+    in_specs = base_specs + (P(),)  # + key (replicated)
     out_specs = round_out_specs(axes)
 
-    def round_body(x, y, mask, n, alpha, W, sigma_rows, key):
-        dalpha, db = local_solve(x, y, n, alpha, W, sigma_rows, key)
-        dW = server_reduce(cfg, axes, sigma_rows, db)
-        return alpha + cfg.eta * dalpha, W + dW
+    if structured:
+
+        def round_body(x, y, mask, n, alpha, W, sv, key):
+            dalpha, db = local_solve(x, y, n, alpha, W, sv.diag(), key)
+            proj = jax.lax.psum(sv.U.T @ db, axes.data)  # (r, d_loc)
+            dW = (sv.U @ (sv.core @ proj) + sv.d[:, None] * db) / cfg.lam
+            return alpha + cfg.eta * dalpha, W + dW
+
+    else:
+
+        def round_body(x, y, mask, n, alpha, W, sigma_rows, key):
+            dalpha, db = local_solve(x, y, n, alpha, W, sigma_rows, key)
+            dW = server_reduce(cfg, axes, sigma_rows, db)
+            return alpha + cfg.eta * dalpha, W + dW
 
     shmapped = round_shard_map(cfg, axes, round_body, mesh, in_specs, out_specs)
     return jax.jit(shmapped)
@@ -373,8 +454,10 @@ def make_distributed_round(
 class DistributedState:
     alpha: Array
     W: Array
+    # dense row-sharded (m, m) array or a mesh-sharded SigmaView pytree
     sigma: Array
-    omega: Array
+    # precision; None for structured members without a cheap inverse
+    omega: Optional[Array]
 
 
 def init_state(
@@ -416,7 +499,7 @@ def fit_distributed(
         axes = options.axes if options is not None else MeshAxes()
     if options is not None:
         cfg = options.merge_into(cfg)
-    reg = omega_reg.resolve_regularizer(cfg, regularizer)
+    reg = omega_reg.resolve_regularizer(cfg, regularizer, m=raw.m)
     loss = get_loss(cfg.loss)
     data, m, d = shard_mtl_data(raw, mesh, axes)
     state = init_state(data, mesh, axes, m, d)
@@ -449,7 +532,10 @@ def fit_distributed(
 
     for p in range(cfg.outer_iters):
         rho = _rho_value(cfg, state.sigma, n_blocks_scale=float(n_pods), reg=reg)
-        round_fn = make_distributed_round(cfg, mesh, axes, m, data.n_max, d, rho)
+        round_fn = make_distributed_round(
+            cfg, mesh, axes, m, data.n_max, d, rho,
+            structured=isinstance(state.sigma, LowRankDiagSigma),
+        )
         # same key schedule as dmtrl.fit/w_step => bit-equal coordinate draws
         key, outer_key = jax.random.split(key)
         round_keys = jax.random.split(outer_key, cfg.rounds)
@@ -491,14 +577,13 @@ def fit_distributed(
             # would otherwise distort the trace-1 normalization.
             W_true = state.W[: raw.m]
             sigma_t, omega_t = reg.step(W_true, cfg.omega_jitter)
-            sigma, omega = pad_sigma_blocks(
+            sigma, omega = pad_sigma_any(
                 sigma_t, omega_t, m, raw.m, cfg.omega_jitter
             )
-            sr = NamedSharding(mesh, P(axes.data, None))
             state = dataclasses.replace(
                 state,
-                sigma=jax.device_put(sigma, sr),
-                omega=jax.device_put(omega, sr),
+                sigma=device_put_sigma(sigma, mesh, axes),
+                omega=device_put_omega(omega, mesh, axes),
             )
             state = dataclasses.replace(
                 state, W=w_from_alpha(state.alpha, state.sigma)
@@ -507,5 +592,10 @@ def fit_distributed(
     hist_np = {k: np.asarray(v) for k, v in hist.items()}
     # un-pad the task axis before returning
     W = np.asarray(state.W)[: raw.m, : raw.d]
-    sigma = np.asarray(state.sigma)[: raw.m, : raw.m]
+    if isinstance(state.sigma, SigmaView):
+        from .sigma_view import maybe_dense
+
+        sigma = maybe_dense(state.sigma.unpad(raw.m))
+    else:
+        sigma = np.asarray(state.sigma)[: raw.m, : raw.m]
     return W, sigma, state, hist_np

@@ -27,8 +27,10 @@ import numpy as np
 
 from . import dual as dual_mod
 from . import omega_regularizers as omega_reg
+from . import sigma_view as sigma_view_mod
 from .losses import get_loss
 from .mtl_data import MTLData
+from .sigma_view import SigmaView
 from .solver_backends import get_backend
 
 Array = jax.Array
@@ -180,21 +182,25 @@ class WarmStart:
     ``alpha``: (m, n_max) dual variables, ``sigma``/``omega``: (m, m) task
     covariance/precision — all at the RAW (unpadded) problem size. W is
     always rederived as W(alpha) under sigma, never carried separately.
+    Structured runs may carry a SigmaView for ``sigma`` and None (or a
+    view) for ``omega``.
     """
 
     alpha: Array
     sigma: Array
-    omega: Array
+    omega: Optional[Array] = None
 
 
 @dataclasses.dataclass
 class DMTRLResult:
     W: Array  # (m, d)
     alpha: Array  # (m, n_max)
-    sigma: Array  # (m, m)
-    omega: Array  # (m, m)
+    sigma: Array  # (m, m) dense, or a SigmaView when m is huge
+    omega: Optional[Array]  # (m, m); None for structured members w/o inverse
     history: Dict[str, np.ndarray]
     rho_per_outer: List[float]
+    # the structured representation itself, when the run used one
+    sigma_view: Optional[SigmaView] = None
 
 
 def _rho_value(
@@ -231,14 +237,20 @@ def make_w_step_round(cfg: DMTRLConfig, data: MTLData, rho: float):
         keys = jax.vmap(
             lambda t: jax.random.fold_in(jax.random.fold_in(key, t), 0)
         )(tids)
-        sigma_diag = jnp.diag(sigma)
+        if isinstance(sigma, SigmaView):
+            sigma_diag = sigma.diag()
+        else:
+            sigma_diag = jnp.diag(sigma)
         dalpha, r = jax.vmap(solver)(
             data.x, data.y, alpha, W, data.n, sigma_diag, keys
         )
         alpha = alpha + cfg.eta * dalpha
         # delta_b rows: (m, d); server reduce: W += (1/lam) Sigma @ dB
         db = cfg.eta * r / data.n[:, None].astype(r.dtype)
-        W = W + (sigma @ db) / cfg.lam
+        if isinstance(sigma, SigmaView):
+            W = W + sigma.matvec(db) / cfg.lam
+        else:
+            W = W + (sigma @ db) / cfg.lam
         return alpha, W
 
     return round_fn
@@ -291,13 +303,18 @@ def fit(
     as W(alpha); ``regularizer`` overrides the Omega family member resolved
     from the config (an ``OmegaRegularizer`` instance or name).
     """
-    reg = omega_reg.resolve_regularizer(cfg, regularizer)
+    reg = omega_reg.resolve_regularizer(cfg, regularizer, m=data.m)
     key = jax.random.PRNGKey(cfg.seed)
     m, n_max = data.m, data.n_max
     if init is not None:
         alpha = jnp.asarray(init.alpha, data.x.dtype)
-        sigma = jnp.asarray(init.sigma, data.x.dtype)
-        omega = jnp.asarray(init.omega, data.x.dtype)
+        if isinstance(init.sigma, SigmaView):
+            sigma = init.sigma
+        else:
+            sigma = jnp.asarray(init.sigma, data.x.dtype)
+        omega = init.omega
+        if omega is not None and not isinstance(omega, SigmaView):
+            omega = jnp.asarray(omega, data.x.dtype)
         W = dual_mod.weights_from_alpha(data, alpha, sigma, cfg.lam)
     else:
         alpha = jnp.zeros((m, n_max), data.x.dtype)
@@ -335,11 +352,13 @@ def fit(
     hist_np = {
         k: (np.concatenate(v) if v else np.zeros((0,))) for k, v in history.items()
     }
+    sigma_out, omega_out, sv = sigma_view_mod.result_sigma_omega(sigma, omega)
     return DMTRLResult(
         W=W,
         alpha=alpha,
-        sigma=sigma,
-        omega=omega,
+        sigma=sigma_out,
+        omega=omega_out,
         history=hist_np,
         rho_per_outer=rhos,
+        sigma_view=sv,
     )

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from .losses import Loss
 from .mtl_data import MTLData
+from .sigma_view import SigmaView
 
 Array = jax.Array
 
@@ -30,15 +31,26 @@ def compute_B(data: MTLData, alpha: Array) -> Array:
     return b.T  # (d, m)
 
 
-def weights_from_alpha(data: MTLData, alpha: Array, sigma: Array, lam: float) -> Array:
-    """W(alpha) = (1/lambda) B Sigma, returned as (m, d) rows = tasks."""
+def weights_from_alpha(data: MTLData, alpha: Array, sigma, lam: float) -> Array:
+    """W(alpha) = (1/lambda) B Sigma, returned as (m, d) rows = tasks.
+
+    ``sigma`` may be a dense (m, m) array or a SigmaView; the dense branch
+    keeps the historical expression bit-identical."""
     B = compute_B(data, alpha)  # (d, m)
+    if isinstance(sigma, SigmaView):
+        return sigma.matvec(B.T) / lam  # Sigma symmetric: (B Sigma)^T = Sigma B^T
     return (B @ sigma).T / lam  # (m, d)
 
 
-def quad_term(data: MTLData, alpha: Array, sigma: Array) -> Array:
-    """alpha^T K alpha = tr(Sigma B^T B)."""
+def quad_term(data: MTLData, alpha: Array, sigma) -> Array:
+    """alpha^T K alpha = tr(Sigma B^T B).
+
+    For a SigmaView, tr(Sigma B^T B) = sum_{i,d} (B^T)_{id} (Sigma B^T)_{id}
+    — two factor matvecs, never a dense Sigma."""
     B = compute_B(data, alpha)
+    if isinstance(sigma, SigmaView):
+        Bt = B.T  # (m, d)
+        return jnp.sum(Bt * sigma.matvec(Bt))
     return jnp.einsum("ij,ji->", sigma, B.T @ B)
 
 

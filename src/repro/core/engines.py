@@ -33,6 +33,7 @@ from .distributed import (
 )
 from .dmtrl import DMTRLConfig, WarmStart, fit as _fit_reference
 from .mtl_data import MTLData
+from .sigma_view import SigmaView, maybe_dense
 
 
 @dataclasses.dataclass
@@ -42,10 +43,13 @@ class EngineResult:
 
     W: np.ndarray  # (m, d) task weight rows
     alpha: np.ndarray  # (m, n_max) dual variables
-    sigma: np.ndarray  # (m, m) task covariance
-    omega: np.ndarray  # (m, m) task precision
+    sigma: np.ndarray  # (m, m) task covariance; a SigmaView at huge m
+    omega: Optional[np.ndarray]  # (m, m) task precision; None when the
+    #               structured member has no cheap inverse at this size
     history: Dict[str, np.ndarray]
     rho_per_outer: Optional[List[float]] = None  # reference engine only
+    # structured runs also expose the factors (SigmaView) directly
+    sigma_view: Optional[SigmaView] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +93,12 @@ def _default_mesh(axes: MeshAxes):
 def _unpad_state(state, raw: MTLData) -> tuple:
     """(alpha, omega) rows/cols of the REAL tasks from padded mesh state."""
     alpha = np.asarray(state.alpha)[: raw.m, : raw.n_max]
-    omega = np.asarray(state.omega)[: raw.m, : raw.m]
+    if state.omega is None:
+        omega = None
+    elif isinstance(state.omega, SigmaView):
+        omega = maybe_dense(state.omega.unpad(raw.m))
+    else:
+        omega = np.asarray(state.omega)[: raw.m, : raw.m]
     return alpha, omega
 
 
@@ -113,10 +122,11 @@ def _run_reference(
     return EngineResult(
         W=np.asarray(res.W),
         alpha=np.asarray(res.alpha),
-        sigma=np.asarray(res.sigma),
-        omega=np.asarray(res.omega),
+        sigma=maybe_dense(res.sigma),
+        omega=maybe_dense(res.omega),
         history=res.history,
         rho_per_outer=list(res.rho_per_outer),
+        sigma_view=res.sigma_view,
     )
 
 
@@ -143,9 +153,12 @@ def _make_mesh_run(fit_fn: Callable) -> Callable[..., EngineResult]:
             options=options, init=init, regularizer=regularizer,
         )
         alpha, omega = _unpad_state(state, data)
+        sigma_view = None
+        if isinstance(state.sigma, SigmaView):
+            sigma_view = state.sigma.unpad(data.m)
         return EngineResult(
-            W=np.asarray(W), alpha=alpha, sigma=np.asarray(sigma),
-            omega=omega, history=hist,
+            W=np.asarray(W), alpha=alpha, sigma=maybe_dense(sigma),
+            omega=omega, history=hist, sigma_view=sigma_view,
         )
 
     return run

@@ -43,6 +43,7 @@ from .engines import Engine, EngineResult, get_engine
 from .losses import get_loss
 from .mtl_data import MTLData
 from .omega_regularizers import OmegaRegularizer, get_regularizer
+from .sigma_view import SigmaView
 
 # engine-specific legacy config fields the facade refuses as core params
 _ASYNC_FIELDS = frozenset(
@@ -87,7 +88,10 @@ class DMTRLEstimator:
         members (e.g. ``{"adjacency": A}`` for graph_laplacian).
 
     Fitted attributes (trailing underscore): ``W_``, ``alpha_``,
-    ``sigma_``, ``omega_``, ``history_``, ``rho_per_outer_``.
+    ``sigma_``, ``omega_``, ``history_``, ``rho_per_outer_``;
+    structured regularizers additionally set ``sigma_view_`` (the
+    SigmaView factors; ``sigma_`` stays the view itself at huge m instead
+    of a dense (m, m), ``omega_`` may be None).
     """
 
     def __init__(
@@ -176,6 +180,7 @@ class DMTRLEstimator:
         self.regularizer: OmegaRegularizer = regularizer
         self._loss = get_loss(cfg.loss)
         self._fitted = False
+        self.sigma_view_: Optional[SigmaView] = None
         self.history_: Dict[str, np.ndarray] = {}
         self.rho_per_outer_: list = []
         self.n_fit_calls_: int = 0
@@ -219,6 +224,7 @@ class DMTRLEstimator:
         self.alpha_ = res.alpha
         self.sigma_ = res.sigma
         self.omega_ = res.omega
+        self.sigma_view_ = res.sigma_view
         if continued and self.history_:
             self.history_ = _merge_histories(self.history_, res.history)
         else:
@@ -248,10 +254,22 @@ class DMTRLEstimator:
         """
         init = None
         if self._fitted:
+            # structured fits warm-start from the factors, never a dense
+            # (m, m); dense fits keep the historical array path
+            sigma = (
+                self.sigma_view_
+                if self.sigma_view_ is not None
+                else self.sigma_
+            )
+            if not isinstance(sigma, SigmaView):
+                sigma = jnp.asarray(sigma)
+            omega = self.omega_
+            if omega is not None and not isinstance(omega, SigmaView):
+                omega = jnp.asarray(omega)
             init = WarmStart(
                 alpha=jnp.asarray(self.alpha_),
-                sigma=jnp.asarray(self.sigma_),
-                omega=jnp.asarray(self.omega_),
+                sigma=sigma,
+                omega=omega,
             )
         self._run(data, init=init, track=track)
         return self
@@ -335,10 +353,13 @@ class DMTRLEstimator:
         self._check_fitted()
         from ..serve.scheduler import ModelSnapshot
 
+        sigma = self.sigma_view_ if self.sigma_view_ is not None else self.sigma_
+        if not isinstance(sigma, SigmaView):
+            sigma = np.asarray(sigma)
         return ModelSnapshot(
             version=self._model_version,
             W=np.asarray(self.W_),
-            sigma=np.asarray(self.sigma_),
+            sigma=sigma,
         )
 
     def _publish_model(self) -> None:
@@ -357,22 +378,28 @@ class DMTRLEstimator:
         for obj in targets:
             obj.publish_weights(snap.W, snap.sigma, snap.version)
 
-    def scoring_engine(self, batch: int = 32):
+    def scoring_engine(self, batch: int = 32, *, gather_sigma_rows: bool = False):
         """Batched MTL scoring engine over the fitted W (serve/mtl.py).
 
         The engine is version-bound and SUBSCRIBED: a later
         ``partial_fit`` pushes the new weights into it (and ``refresh()``
-        pulls them), so it never silently serves stale weights.
+        pulls them), so it never silently serves stale weights.  The
+        fitted Sigma (structured factors when available) rides on the
+        snapshot; ``gather_sigma_rows=True`` makes every served tile
+        attach each request's task-relatedness row.
         """
         self._check_fitted()
         from ..serve.mtl import MTLScoringEngine
 
+        snap = self.model_snapshot()
         engine = MTLScoringEngine(
             self.W_,
             batch=batch,
             classify=self._loss.is_classification,
             version=self._model_version,
             source=self,
+            sigma=snap.sigma,
+            gather_sigma_rows=gather_sigma_rows,
         )
         self._model_refs.append(weakref.ref(engine))
         return engine

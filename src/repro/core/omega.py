@@ -13,6 +13,7 @@ the constraint still holds exactly.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -43,6 +44,56 @@ def omega_step(W: Array, jitter: float = 1e-6) -> Tuple[Array, Array]:
     sigma = 0.5 * (sigma + sigma.T)
     omega = 0.5 * (omega + omega.T)
     return sigma, omega
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def omega_step_lowrank(
+    W: Array, rank: int, iters: int = 8, jitter: float = 1e-6
+) -> Tuple[Array, Array, Array]:
+    """Rank-r Zhang-Yeung Omega-step without ever forming M = W W^T.
+
+    Subspace iteration with W-matvecs only (V <- W (W^T V), QR) followed by
+    Rayleigh-Ritz on the r-dimensional subspace gives the top-r eigenpairs
+    of M; sqrt of the Ritz values are the leading singular values of the
+    paper's (W^T W)^{1/2}. The trailing spectral mass is folded into a
+    per-task residual diagonal d_i = sqrt(max(M_ii - sum_k lam_k U_ik^2, 0))
+    so the trace constraint still holds exactly after normalization.
+
+    Cost: O(m d r) per iteration + an r x r eigh — no m x m anything.
+    Exact at r >= rank(M) (in particular r = m), where it reproduces
+    ``omega_step``'s Sigma: jitter is applied to the diagonal and the trace
+    renormalized by the same (1 + m*jitter) split as the dense path.
+
+    Returns ``(U, s, d)`` with U (m, r) orthonormal, s (r,) >= 0 Ritz-sqrt
+    weights and d (m,) > 0: Sigma = U diag(s) U^T + diag(d), tr == 1.
+    """
+    m = W.shape[0]
+    r = min(rank, m)
+    V = jax.random.normal(jax.random.PRNGKey(17), (m, r), W.dtype)
+    V, _ = jnp.linalg.qr(V)
+
+    def body(V, _):
+        V = W @ (W.T @ V)
+        V, _ = jnp.linalg.qr(V)
+        return V, None
+
+    V, _ = jax.lax.scan(body, V, None, length=iters)
+    T = V.T @ (W @ (W.T @ V))
+    evals, S = jnp.linalg.eigh(0.5 * (T + T.T))
+    U = V @ S
+    lam = jnp.maximum(evals, 0.0)
+    s = jnp.sqrt(lam)
+    # residual diagonal: spectral mass M_ii not captured by the subspace
+    M_diag = jnp.sum(W * W, axis=1)
+    captured = jnp.sum((U * U) * lam[None, :], axis=1)
+    d_raw = jnp.sqrt(jnp.maximum(M_diag - captured, 0.0))
+    tr = jnp.sum(s) + jnp.sum(d_raw)
+    safe = tr > 1e-30
+    s_n = jnp.where(safe, s / jnp.maximum(tr, 1e-30), jnp.zeros_like(s))
+    d_n = jnp.where(safe, d_raw / jnp.maximum(tr, 1e-30), jnp.ones_like(d_raw) / m)
+    d_n = d_n + jitter
+    renorm = jnp.sum(s_n) + jnp.sum(d_n)
+    return U, s_n / renorm, d_n / renorm
 
 
 def init_sigma(m: int, dtype=jnp.float32) -> Tuple[Array, Array]:

@@ -39,6 +39,8 @@ Usage:
 from __future__ import annotations
 
 import dataclasses
+import os
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -46,20 +48,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import omega as omega_mod
+from .sigma_view import LowRankDiagSigma, SigmaView, SparseSigma
 
 Array = jax.Array
 
 
 def default_rho_bound(
-    sigma: Array, eta: float = 1.0, mode: str = "lemma10", fixed: float = 1.0
+    sigma, eta: float = 1.0, mode: str = "lemma10", fixed: float = 1.0
 ) -> float:
     """The paper's rho bounds; valid for ANY symmetric PD Sigma, so every
-    family member shares it unless it can prove something tighter."""
+    family member shares it unless it can prove something tighter.
+
+    Accepts a dense (m, m) array or any SigmaView; structured views use
+    their factor-aware bounds (Lemma 10 exact for sparse, a safe triangle-
+    inequality over-bound for low-rank; spectral via power iteration)."""
     if mode == "fixed":
         return float(fixed)
+    if isinstance(sigma, SigmaView):
+        if mode == "spectral":
+            return float(sigma.rho_spectral(eta))
+        return float(sigma.rho_lemma10(eta))
     if mode == "spectral":
         return float(omega_mod.rho_spectral(sigma, eta))
     return float(omega_mod.rho_lemma10(sigma, eta))
+
+
+def _check_finite_w(W, name: str) -> None:
+    """Raise before a NaN/inf W can flow through an Omega-step into Sigma.
+
+    jnp.linalg.eigh on non-finite input silently yields NaN eigenvectors,
+    which would propagate through install_sigma into live serving
+    snapshots; fail loudly at the regularizer step() boundary instead."""
+    if not bool(jnp.all(jnp.isfinite(W))):
+        raise ValueError(
+            f"omega regularizer {name!r}: step() received a non-finite W "
+            "(NaN/inf) — refusing to produce a corrupt Sigma. Check the "
+            "W-step inputs (labels/features) or lower eta/rho."
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,10 +108,24 @@ class OmegaRegularizer:
     # init differs from the paper's I/m: distributed engines must pad this
     # member's true-task Sigma instead of initializing at the padded size.
     custom_init: bool = False
+    # init/step produce SigmaView pytrees (low_rank_diag / graphical_lasso)
+    # instead of dense (m, m) arrays; engines keep the factors end-to-end.
+    structured: bool = False
 
     def __post_init__(self):
         if self.learns and self.step is None:
             raise ValueError(f"regularizer {self.name!r}: learns=True needs a step")
+        if self.step is not None:
+            base_step = self.step
+            if not getattr(base_step, "_finite_w_guarded", False):
+                name = self.name
+
+                def guarded_step(W, jitter: float = 1e-6):
+                    _check_finite_w(W, name)
+                    return base_step(W, jitter)
+
+                guarded_step._finite_w_guarded = True
+                object.__setattr__(self, "step", guarded_step)
 
 
 # factory(**params) -> OmegaRegularizer; params are member-specific
@@ -118,28 +157,64 @@ def available_regularizers() -> Dict[str, str]:
     return dict(sorted(_DESCRIPTIONS.items()))
 
 
-def resolve_regularizer(cfg, regularizer=None) -> OmegaRegularizer:
+# dense-Sigma members above this many tasks get a one-time nudge toward the
+# structured members (m^2 floats + O(m^3) eigh stop being host-trivial)
+DENSE_SIGMA_WARN_THRESHOLD = int(os.environ.get("REPRO_DENSE_SIGMA_WARN_M", "2048"))
+_dense_scale_warned: set = set()
+
+
+def _warn_if_dense_at_scale(reg: OmegaRegularizer, m, threshold) -> None:
+    if m is None or reg.structured:
+        return
+    limit = DENSE_SIGMA_WARN_THRESHOLD if threshold is None else int(threshold)
+    if m <= limit or reg.name in _dense_scale_warned:
+        return
+    _dense_scale_warned.add(reg.name)
+    warnings.warn(
+        f"omega regularizer {reg.name!r} materializes a dense {m}x{m} Sigma "
+        f"(m > {limit}): storage is m^2 floats and the Omega-step is O(m^3). "
+        "Consider the structured members 'low_rank_diag' (Sigma ~ U U^T + D) "
+        "or 'graphical_lasso' (sparse coupling) which scale to huge m. "
+        "Raise REPRO_DENSE_SIGMA_WARN_M to silence.",
+        stacklevel=3,
+    )
+
+
+def resolve_regularizer(
+    cfg, regularizer=None, m=None, dense_warn_threshold=None
+) -> OmegaRegularizer:
     """Resolve the regularizer an engine should run under.
 
     Precedence: an explicit ``regularizer`` argument (instance or name) >
     legacy ``cfg.learn_omega=False`` (maps to identity_stl) >
     ``cfg.omega_regularizer``. ``cfg`` is duck-typed: only
-    ``learn_omega`` / ``omega_regularizer`` are read.
+    ``learn_omega`` / ``omega_regularizer`` are read. When the caller
+    knows the task count it passes ``m`` so a dense member requested at
+    scale gets a one-time structured-member warning.
     """
     if regularizer is not None:
         if isinstance(regularizer, str):
             regularizer = get_regularizer(regularizer)
+        if not isinstance(regularizer, OmegaRegularizer):
+            raise TypeError(
+                f"regularizer must be a name or OmegaRegularizer instance, "
+                f"got {type(regularizer).__name__}; parameterized members "
+                "are built via get_regularizer(name, **params)"
+            )
         if not getattr(cfg, "learn_omega", True) and regularizer.learns:
             raise ValueError(
                 f"learn_omega=False conflicts with the learning regularizer "
                 f"{regularizer.name!r}; drop learn_omega or pick a fixed member"
             )
+        _warn_if_dense_at_scale(regularizer, m, dense_warn_threshold)
         return regularizer
     if not getattr(cfg, "learn_omega", True):
         return get_regularizer("identity_stl")
     name = getattr(cfg, "omega_regularizer", "trace_constraint")
     try:
-        return get_regularizer(name)
+        reg = get_regularizer(name)
+        _warn_if_dense_at_scale(reg, m, dense_warn_threshold)
+        return reg
     except ValueError as e:
         # members needing parameters (graph_laplacian's task graph) cannot
         # be named through the bare config — point at the working route
@@ -265,6 +340,141 @@ def _frobenius_shrunk(shrinkage: float = 0.5) -> OmegaRegularizer:
     )
 
 
+# ---------------------------------------------------------------------------
+# low_rank_diag — structured Zhang-Yeung: Sigma = U diag(s) U^T + diag(d)
+# ---------------------------------------------------------------------------
+def _low_rank_diag(rank: int = 32, iters: int = 8) -> OmegaRegularizer:
+    """Rank-r subspace-iteration Omega-step (core/omega.py:
+    omega_step_lowrank): O(m*r) storage, O(m*d*r) step, no m x m ever.
+    Exact Zhang-Yeung at r >= rank(W W^T) (in particular r = m), so the
+    dense-parity tests pin it against trace_constraint."""
+    if rank < 1:
+        raise ValueError(f"low_rank_diag needs rank >= 1, got {rank}")
+    if iters < 1:
+        raise ValueError(f"low_rank_diag needs iters >= 1, got {iters}")
+
+    def init(m: int, dtype=jnp.float32):
+        r = min(rank, m)
+        # Sigma = I/m: empty factor + uniform diagonal (Algorithm 1 init)
+        sigma = LowRankDiagSigma(
+            U=jnp.zeros((m, r), dtype),
+            core=jnp.zeros((r, r), dtype),
+            d=jnp.full((m,), 1.0 / m, dtype),
+        )
+        omega = LowRankDiagSigma(
+            U=jnp.zeros((m, r), dtype),
+            core=jnp.zeros((r, r), dtype),
+            d=jnp.full((m,), float(m), dtype),
+        )
+        return sigma, omega
+
+    def step(W: Array, jitter: float = 1e-6):
+        U, s, d = omega_mod.omega_step_lowrank(W, rank, iters, jitter)
+        sigma = LowRankDiagSigma(U=U, core=jnp.diag(s), d=d)
+        return sigma, sigma.precision()
+
+    return OmegaRegularizer(
+        name="low_rank_diag",
+        description=_DESCRIPTIONS["low_rank_diag"],
+        learns=True,
+        init=init,
+        step=step,
+        structured=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# graphical_lasso — soft-thresholded sparse task coupling (arXiv:1802.03830)
+# ---------------------------------------------------------------------------
+def _graphical_lasso(
+    penalty: float = 0.5, block: int = 2048, max_nnz: Optional[int] = None
+) -> OmegaRegularizer:
+    """Learned sparse task graph: the normalized coupling S = W W^T / tr is
+    soft-thresholded off-diagonally at lambda = penalty/m (i.e. ``penalty``
+    in units of the mean diagonal), one coordinate at a time, then stored
+    as diagonal + ELL sparse rows (SparseSigma).
+
+    PSD is preserved analytically: thresholding removes a symmetric error
+    matrix E with ||E||_2 <= ||E||_inf = max_i sum_j min(|s_ij|, lambda),
+    and that bound is added back onto the diagonal before trace
+    renormalization — so Sigma stays PD for any penalty, and at penalty=0
+    the boost is zero and Sigma equals the dense trace-normalized coupling
+    (the dense-parity anchor).
+
+    The Gram coupling is built blockwise on the host (O(block * m) peak,
+    never m x m); ``max_nnz`` optionally caps per-row off-diagonal entries
+    (keeping the largest-magnitude ones).
+    """
+    if penalty < 0:
+        raise ValueError(f"graphical_lasso needs penalty >= 0, got {penalty}")
+    if block < 1:
+        raise ValueError(f"graphical_lasso needs block >= 1, got {block}")
+
+    def init(m: int, dtype=jnp.float32):
+        sigma = SparseSigma(
+            diag_v=jnp.full((m,), 1.0 / m, dtype),
+            cols=jnp.zeros((m, 0), jnp.int32),
+            vals=jnp.zeros((m, 0), dtype),
+        )
+        omega = SparseSigma(
+            diag_v=jnp.full((m,), float(m), dtype),
+            cols=jnp.zeros((m, 0), jnp.int32),
+            vals=jnp.zeros((m, 0), dtype),
+        )
+        return sigma, omega
+
+    def step(W: Array, jitter: float = 1e-6):
+        Wn = np.asarray(W, np.float64)
+        m = Wn.shape[0]
+        dtype = np.asarray(W).dtype
+        tr = float((Wn * Wn).sum())  # tr(W W^T)
+        if tr <= 1e-30:  # degenerate W -> fall back to Sigma = I/m
+            return init(m, dtype)
+        lam_abs = penalty / m
+        diag_s = (Wn * Wn).sum(axis=1) / tr
+        row_cols: list = []
+        row_vals: list = []
+        boost = 0.0
+        for lo in range(0, m, block):
+            hi = min(lo + block, m)
+            S_blk = (Wn[lo:hi] @ Wn.T) / tr  # (b, m) coupling rows
+            for i in range(lo, hi):
+                row = S_blk[i - lo].copy()
+                row[i] = 0.0  # off-diagonal only
+                removed = np.minimum(np.abs(row), lam_abs).sum()
+                boost = max(boost, removed)
+                keep = np.nonzero(np.abs(row) > lam_abs)[0]
+                v = np.sign(row[keep]) * (np.abs(row[keep]) - lam_abs)
+                if max_nnz is not None and keep.size > max_nnz:
+                    top = np.argsort(-np.abs(v))[:max_nnz]
+                    keep, v = keep[top], v[top]
+                row_cols.append(keep.astype(np.int32))
+                row_vals.append(v)
+        k_max = max((c.size for c in row_cols), default=0)
+        cols = np.zeros((m, k_max), np.int32)
+        vals = np.zeros((m, k_max), np.float64)
+        for i, (c, v) in enumerate(zip(row_cols, row_vals)):
+            cols[i, : c.size] = c
+            vals[i, : v.size] = v
+        diag_f = diag_s + boost + jitter
+        total = diag_f.sum()  # off-diagonals don't contribute to the trace
+        sigma = SparseSigma(
+            diag_v=jnp.asarray(diag_f / total, dtype),
+            cols=jnp.asarray(cols),
+            vals=jnp.asarray(vals / total, dtype),
+        )
+        return sigma, None  # sparse Sigma has no cheap structured inverse
+
+    return OmegaRegularizer(
+        name="graphical_lasso",
+        description=_DESCRIPTIONS["graphical_lasso"],
+        learns=True,
+        init=init,
+        step=step,
+        structured=True,
+    )
+
+
 register_regularizer(
     "trace_constraint",
     _trace_constraint,
@@ -288,4 +498,17 @@ register_regularizer(
     _frobenius_shrunk,
     "Zhang-Yeung update shrunk toward I/m by a shrinkage factor in [0, 1] "
     "(trace stays 1; couplings bounded away from rank collapse)",
+)
+register_regularizer(
+    "low_rank_diag",
+    _low_rank_diag,
+    "structured Zhang-Yeung: Sigma = U diag(s) U^T + diag(d) via rank-r "
+    "subspace iteration — O(m*r) storage, no m x m eigh; exact at r = m",
+)
+register_regularizer(
+    "graphical_lasso",
+    _graphical_lasso,
+    "learned sparse task graph (arXiv:1802.03830): soft-thresholded "
+    "coupling stored as diagonal + ELL sparse rows; PSD by diagonal "
+    "compensation, dense-equal at penalty=0",
 )

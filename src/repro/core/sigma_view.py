@@ -1,0 +1,457 @@
+"""SigmaView — structured task-covariance representations engines can share.
+
+At m=16 tasks the m x m Sigma is host-trivial; at the 10k-1M regime the
+ROADMAP targets (one task per cohort/tenant), a dense Sigma is 4 bytes * m^2
+and the eigendecomposition behind the Zhang-Yeung Omega-step is O(m^3) —
+both dead. The engines, transports and the serve path never actually need
+the dense matrix though: between them they consume exactly
+
+    diag()           per-task sigma_ii for the local SDCA subproblems
+    matvec(V)        Sigma @ V — the server reduce (W += Sigma dB / lam),
+                     weights_from_alpha and the duality-gap quad term
+    rows(idx)        a few gathered rows (serve tiles, worker snapshots)
+    logdet_bound()   a cheap upper bound for diagnostics
+    rho bounds       Lemma 10 / spectral aggregation safety bounds
+
+``SigmaView`` names that contract. Three members:
+
+  DenseSigma        wraps the existing (m, m) array — the small-m fallback,
+                    bit-identical to the historical dense path (parity
+                    pinned by tests).
+  LowRankDiagSigma  Sigma = U C U^T + diag(d) with U (m, r), C (r, r),
+                    d (m,): O(m r) storage, O(m r) matvec. Produced by the
+                    ``low_rank_diag`` regularizer's subspace-iteration
+                    Omega-step; the matrix-determinant lemma gives an exact
+                    logdet and Woodbury an (approximate) precision.
+  SparseSigma       diagonal + ELL-packed sparse off-diagonal coupling
+                    (cols/vals (m, k_max), zero-padded rows): the
+                    graph-sparse member of arXiv:1802.03830 with O(nnz)
+                    storage/matvec and exact Lemma-10 row sums.
+
+Every member is a registered JAX pytree, so a view can be passed straight
+through ``jit``/``shard_map`` boundaries as an argument (engines pass the
+factors, never a materialized matrix) and sharded leaf-by-leaf on a mesh
+(U/d/diag row-sharded over the data axis, the r x r core replicated).
+
+``factors()``/``view_from_factors`` define the structured snapshot wire
+format (numpy leaves + a ``kind`` tag) used by transports and serving
+publishes — a few KB instead of m^2 floats per install.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# engines materialize dense (sigma, omega) result arrays only up to this
+# many tasks; above it results carry the structured view itself
+MATERIALIZE_LIMIT = 4096
+# SparseSigma.precision() densifies; refuse beyond this
+_PRECISION_DENSE_LIMIT = 4096
+
+
+class SigmaView:
+    """Contract every structured Sigma representation implements.
+
+    All methods are jit-traceable (members are registered pytrees); the
+    float-returning bounds are used eagerly by the rho machinery.
+    """
+
+    kind: str = "?"
+
+    @property
+    def m(self) -> int:
+        raise NotImplementedError
+
+    def diag(self) -> Array:
+        raise NotImplementedError
+
+    def matvec(self, v: Array) -> Array:
+        """Sigma @ v for v of shape (m,) or (m, k)."""
+        raise NotImplementedError
+
+    def rows(self, idx: Array) -> Array:
+        """Dense gathered rows Sigma[idx, :], shape (len(idx), m)."""
+        raise NotImplementedError
+
+    def dense(self) -> Array:
+        return self.rows(jnp.arange(self.m, dtype=jnp.int32))
+
+    def trace(self) -> Array:
+        return jnp.sum(self.diag())
+
+    def nbytes(self) -> int:
+        """Persistent storage of the representation (the factors)."""
+        return int(sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(self)))
+
+    def logdet_bound(self) -> float:
+        """An upper bound on logdet(Sigma) (exact where cheap)."""
+        raise NotImplementedError
+
+    def col_block_matvec(self, lo: int, db: Array) -> Array:
+        """Sigma[:, lo:lo+k] @ db for db (k, d) — one worker's commit
+        reduce (Sigma symmetric => equals Sigma[lo:lo+k, :].T @ db)."""
+        raise NotImplementedError
+
+    def pad(self, m_new: int, jitter: float) -> "SigmaView":
+        """Embed into m_new >= m tasks; padded tasks get an inert
+        jitter-scaled diagonal (mirrors distributed.pad_sigma_blocks)."""
+        raise NotImplementedError
+
+    def unpad(self, m_true: int) -> "SigmaView":
+        """Drop padded tasks again (rows [m_true:] must be decoupled)."""
+        raise NotImplementedError
+
+    def precision(self) -> Optional["SigmaView"]:
+        """Sigma^{-1} where representable, else None."""
+        return None
+
+    # -- rho safety bounds (must be UPPER bounds; see core/omega.py) --------
+    def rho_lemma10(self, eta: float = 1.0) -> Array:
+        raise NotImplementedError
+
+    # exact spectral rho densifies + eighs; do that only up to this size
+    _SPECTRAL_EXACT_LIMIT = 2048
+
+    def rho_spectral(self, eta: float = 1.0, iters: int = 24) -> Array:
+        """eta * lambda_max(D^-1/2 Sigma D^-1/2): exact (dense eigvalsh) at
+        small m; beyond that a power-iteration estimate with a safety
+        factor, clamped into [eta, rho_lemma10] so it stays a valid upper
+        bound (Lemma 10 always is; the rescaled lambda_max is always >= 1
+        for PSD Sigma with positive diagonal)."""
+        dd = jnp.sqrt(jnp.maximum(self.diag(), 1e-30))
+        if self.m <= self._SPECTRAL_EXACT_LIMIT:
+            S = self.dense() / (dd[:, None] * dd[None, :])
+            ev = jnp.linalg.eigvalsh(0.5 * (S + S.T))
+            return eta * ev[-1]
+        v = jnp.ones((self.m,), dd.dtype) / jnp.sqrt(float(self.m))
+        for _ in range(iters):
+            v = self.matvec(v / dd) / dd
+            v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+        lam = jnp.vdot(v, self.matvec(v / dd) / dd)
+        est = eta * lam * 1.05  # power iteration under-estimates from below
+        return jnp.clip(est, eta, self.rho_lemma10(eta))
+
+    def factors(self) -> Dict[str, object]:
+        """Wire format: numpy leaves + the member tag."""
+        out = {"kind": self.kind}
+        for f in dataclasses.fields(self):
+            out[f.name] = np.asarray(getattr(self, f.name))
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DenseSigma(SigmaView):
+    """The historical dense (m, m) array behind the shared interface."""
+
+    sigma: Array
+    kind = "dense"
+
+    def tree_flatten(self):
+        return (self.sigma,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def m(self) -> int:
+        return int(self.sigma.shape[0])
+
+    def diag(self) -> Array:
+        return jnp.diagonal(self.sigma)
+
+    def matvec(self, v: Array) -> Array:
+        return self.sigma @ v
+
+    def rows(self, idx: Array) -> Array:
+        return self.sigma[idx]
+
+    def dense(self) -> Array:
+        return self.sigma
+
+    def col_block_matvec(self, lo: int, db: Array) -> Array:
+        return jnp.swapaxes(self.sigma[lo : lo + db.shape[0]], 0, 1) @ db
+
+    def logdet_bound(self) -> float:
+        ev = jnp.linalg.eigvalsh(self.sigma)
+        return float(jnp.sum(jnp.log(jnp.maximum(ev, 1e-30))))
+
+    def pad(self, m_new: int, jitter: float) -> "DenseSigma":
+        padn = m_new - self.m
+        if not padn:
+            return self
+        s = jnp.zeros((m_new, m_new), self.sigma.dtype)
+        s = s.at[: self.m, : self.m].set(self.sigma)
+        s = s.at[self.m :, self.m :].set(jnp.eye(padn, dtype=self.sigma.dtype) * jitter)
+        return DenseSigma(s)
+
+    def unpad(self, m_true: int) -> "DenseSigma":
+        return DenseSigma(self.sigma[:m_true, :m_true])
+
+    def precision(self) -> "DenseSigma":
+        ev, Q = jnp.linalg.eigh(0.5 * (self.sigma + self.sigma.T))
+        ev = jnp.maximum(ev, 1e-30)
+        om = (Q * (1.0 / ev)) @ Q.T
+        return DenseSigma(0.5 * (om + om.T))
+
+    def rho_lemma10(self, eta: float = 1.0) -> Array:
+        dd = jnp.maximum(self.diag(), 1e-30)
+        return eta * jnp.max(jnp.sum(jnp.abs(self.sigma), axis=1) / dd)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LowRankDiagSigma(SigmaView):
+    """Sigma = U C U^T + diag(d): O(m r) storage, O(m r) matvec.
+
+    ``C`` is a small (r, r) symmetric core (a diagonal eigenvalue core for
+    the low_rank_diag Omega-step; a full negative-definite correction for
+    the Woodbury precision). On a mesh, U and d shard by task rows
+    (P(data, None) / P(data)) while C replicates — the factored server
+    reduce psums the (r, d) projection instead of all-gathering (m, d)
+    deltas, which is the communication win at scale.
+    """
+
+    U: Array  # (m, r)
+    core: Array  # (r, r)
+    d: Array  # (m,)
+    kind = "low_rank_diag"
+
+    def tree_flatten(self):
+        return (self.U, self.core, self.d), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def m(self) -> int:
+        return int(self.U.shape[0])
+
+    @property
+    def rank(self) -> int:
+        return int(self.U.shape[1])
+
+    def diag(self) -> Array:
+        return jnp.sum((self.U @ self.core) * self.U, axis=1) + self.d
+
+    def matvec(self, v: Array) -> Array:
+        proj = self.core @ (self.U.T @ v)
+        if v.ndim == 1:
+            return self.U @ proj + self.d * v
+        return self.U @ proj + self.d[:, None] * v
+
+    def rows(self, idx: Array) -> Array:
+        out = (self.U[idx] @ self.core) @ self.U.T
+        k = idx.shape[0]
+        return out.at[jnp.arange(k), idx].add(self.d[idx])
+
+    def col_block_matvec(self, lo: int, db: Array) -> Array:
+        hi = lo + db.shape[0]
+        out = self.U @ (self.core @ (self.U[lo:hi].T @ db))
+        return out.at[lo:hi].add(self.d[lo:hi, None] * db)
+
+    def logdet_bound(self) -> float:
+        # matrix determinant lemma: logdet(D) + logdet(I_r + C U^T D^-1 U)
+        d = jnp.maximum(self.d, 1e-30)
+        inner = jnp.eye(self.rank, dtype=self.U.dtype) + self.core @ (
+            self.U.T @ (self.U / d[:, None])
+        )
+        _, ld = jnp.linalg.slogdet(inner)
+        return float(jnp.sum(jnp.log(d)) + ld)
+
+    def pad(self, m_new: int, jitter: float) -> "LowRankDiagSigma":
+        padn = m_new - self.m
+        if not padn:
+            return self
+        U = jnp.zeros((m_new, self.rank), self.U.dtype).at[: self.m].set(self.U)
+        d = jnp.full((m_new,), jitter, self.d.dtype).at[: self.m].set(self.d)
+        return LowRankDiagSigma(U, self.core, d)
+
+    def unpad(self, m_true: int) -> "LowRankDiagSigma":
+        return LowRankDiagSigma(self.U[:m_true], self.core, self.d[:m_true])
+
+    def precision(self) -> "LowRankDiagSigma":
+        """Woodbury: (U C U^T + D)^-1 = D^-1 - D^-1 U (C^-1 + U^T D^-1 U)^-1
+        U^T D^-1. Exact when the factorization is exact (r = m); directions
+        with (near-)zero core eigenvalues degrade gracefully to D^-1."""
+        d = jnp.maximum(self.d, 1e-30)
+        Ud = self.U / d[:, None]
+        core_s = self.core + jnp.eye(self.rank, dtype=self.core.dtype) * 1e-30
+        inner = jnp.linalg.inv(core_s) + self.U.T @ Ud
+        corr = -jnp.linalg.inv(0.5 * (inner + inner.T))
+        return LowRankDiagSigma(Ud, 0.5 * (corr + corr.T), 1.0 / d)
+
+    # exact Lemma-10 row sums are O(m^2 r) flops; compute them (blockwise,
+    # never materializing (m, m)) up to this many tasks, fall back to the
+    # O(m r) factored over-bound beyond it (looser rho = smaller, still
+    # safe, aggregation steps)
+    _RHO_EXACT_LIMIT = 8192
+
+    def rho_lemma10(self, eta: float = 1.0) -> Array:
+        dd = jnp.maximum(self.diag(), 1e-30)
+        if self.m <= self._RHO_EXACT_LIMIT:
+            best = None
+            for lo in range(0, self.m, 1024):
+                idx = jnp.arange(lo, min(lo + 1024, self.m), dtype=jnp.int32)
+                ratio = jnp.max(jnp.sum(jnp.abs(self.rows(idx)), axis=1) / dd[idx])
+                best = ratio if best is None else jnp.maximum(best, ratio)
+            return eta * best
+        # triangle inequality on the factored rows: sum_j |sigma_ij| <=
+        # sum_k |(UC)_ik| * sum_j |U_jk| + d_i  — always >= the exact
+        # Lemma-10 value, so still a safe aggregation bound
+        UC = jnp.abs(self.U @ self.core)
+        colabs = jnp.sum(jnp.abs(self.U), axis=0)
+        rowbound = UC @ colabs + self.d
+        return eta * jnp.max(rowbound / dd)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseSigma(SigmaView):
+    """Diagonal + ELL-packed sparse off-diagonal coupling.
+
+    ``cols``/``vals`` are (m, k_max) with per-row zero padding (val 0,
+    col 0): row i couples to tasks cols[i, :nnz_i]. Storage and matvec are
+    O(m k_max); the Lemma-10 row sums are exact. Produced by the
+    ``graphical_lasso`` member's soft-thresholded coupling estimate
+    (arXiv:1802.03830's sparse task graph).
+    """
+
+    diag_v: Array  # (m,)
+    cols: Array  # (m, k_max) int32
+    vals: Array  # (m, k_max)
+    kind = "sparse"
+
+    def tree_flatten(self):
+        return (self.diag_v, self.cols, self.vals), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def m(self) -> int:
+        return int(self.diag_v.shape[0])
+
+    @property
+    def k_max(self) -> int:
+        return int(self.cols.shape[1])
+
+    def diag(self) -> Array:
+        return self.diag_v
+
+    def matvec(self, v: Array) -> Array:
+        if v.ndim == 1:
+            off = jnp.einsum("mk,mk->m", self.vals, v[self.cols])
+            return self.diag_v * v + off
+        off = jnp.einsum("mk,mkj->mj", self.vals, v[self.cols])
+        return self.diag_v[:, None] * v + off
+
+    def rows(self, idx: Array) -> Array:
+        k = idx.shape[0]
+        out = jnp.zeros((k, self.m), self.vals.dtype)
+        out = out.at[jnp.arange(k)[:, None], self.cols[idx]].add(self.vals[idx])
+        return out.at[jnp.arange(k), idx].add(self.diag_v[idx])
+
+    def col_block_matvec(self, lo: int, db: Array) -> Array:
+        hi = lo + db.shape[0]
+        sub_cols = self.cols[lo:hi].reshape(-1)
+        contrib = (self.vals[lo:hi, :, None] * db[:, None, :]).reshape(
+            -1, db.shape[1]
+        )
+        out = jnp.zeros((self.m, db.shape[1]), db.dtype).at[sub_cols].add(contrib)
+        return out.at[lo:hi].add(self.diag_v[lo:hi, None] * db)
+
+    def logdet_bound(self) -> float:
+        # Hadamard's inequality for PSD matrices: det <= prod(diag)
+        return float(jnp.sum(jnp.log(jnp.maximum(self.diag_v, 1e-30))))
+
+    def pad(self, m_new: int, jitter: float) -> "SparseSigma":
+        padn = m_new - self.m
+        if not padn:
+            return self
+        dg = jnp.full((m_new,), jitter, self.diag_v.dtype).at[: self.m].set(
+            self.diag_v
+        )
+        cols = jnp.zeros((m_new, self.k_max), self.cols.dtype).at[: self.m].set(
+            self.cols
+        )
+        vals = jnp.zeros((m_new, self.k_max), self.vals.dtype).at[: self.m].set(
+            self.vals
+        )
+        return SparseSigma(dg, cols, vals)
+
+    def unpad(self, m_true: int) -> "SparseSigma":
+        return SparseSigma(
+            self.diag_v[:m_true], self.cols[:m_true], self.vals[:m_true]
+        )
+
+    def precision(self) -> Optional[DenseSigma]:
+        if self.m > _PRECISION_DENSE_LIMIT:
+            return None
+        return DenseSigma(self.dense()).precision()
+
+    def rho_lemma10(self, eta: float = 1.0) -> Array:
+        dd = jnp.maximum(self.diag_v, 1e-30)
+        rowsum = dd + jnp.sum(jnp.abs(self.vals), axis=1)
+        return eta * jnp.max(rowsum / dd)
+
+
+_KINDS = {
+    "dense": DenseSigma,
+    "low_rank_diag": LowRankDiagSigma,
+    "sparse": SparseSigma,
+}
+
+
+def as_view(sigma) -> SigmaView:
+    """Wrap a raw (m, m) array; pass views through unchanged."""
+    if isinstance(sigma, SigmaView):
+        return sigma
+    return DenseSigma(jnp.asarray(sigma))
+
+
+def view_from_factors(factors: Dict[str, object]) -> SigmaView:
+    """Decode the ``SigmaView.factors()`` wire format."""
+    kind = factors["kind"]
+    try:
+        cls = _KINDS[kind]
+    except KeyError as e:
+        raise ValueError(f"unknown SigmaView kind {kind!r}") from e
+    kwargs = {
+        f.name: jnp.asarray(factors[f.name]) for f in dataclasses.fields(cls)
+    }
+    return cls(**kwargs)
+
+
+def maybe_dense(sigma, limit: int = MATERIALIZE_LIMIT):
+    """Materialize a view to a dense numpy array when small enough; large
+    views (and None) pass through so huge-m results never densify."""
+    if sigma is None:
+        return None
+    if isinstance(sigma, SigmaView):
+        if sigma.m <= limit:
+            return np.asarray(sigma.dense())
+        return sigma
+    return np.asarray(sigma)
+
+
+def result_sigma_omega(sigma, omega, limit: int = MATERIALIZE_LIMIT):
+    """Normalize an engine's final (sigma, omega) for its result object:
+    returns (sigma_out, omega_out, sigma_view). Dense arrays pass through;
+    small views materialize (deriving a missing omega from the view's
+    precision); huge views stay structured with omega possibly None."""
+    if not isinstance(sigma, SigmaView):
+        return sigma, omega, None
+    view = sigma
+    if omega is None and view.m <= limit:
+        omega = view.precision()
+    return maybe_dense(view, limit), maybe_dense(omega, limit), view

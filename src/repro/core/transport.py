@@ -96,6 +96,7 @@ from .distributed import (
     init_state,
     install_initial_state,
     make_local_solve,
+    pad_sigma_any,
     pad_sigma_blocks,
     pad_to_multiple,
     round_in_specs,
@@ -106,6 +107,7 @@ from .distributed import (
 )
 from .dmtrl import DMTRLConfig
 from .losses import get_loss
+from .sigma_view import SigmaView, maybe_dense
 from .solver_backends import get_backend
 
 Array = jax.Array
@@ -125,12 +127,29 @@ class Snapshot:
     ``alpha_rows`` are the worker's own dual coordinates — conceptually
     worker-owned state (only its commits ever move them); the in-host
     servers keep them centrally so ``weights_from_alpha`` stays one call.
+
+    Structured-Sigma wire format: when the server holds a SigmaView the
+    snapshot ships ``sigma_diag`` — the (m_loc,) diagonal entries the local
+    solver actually reads — and ``sigma_rows`` is None, shrinking the
+    per-snapshot Sigma payload from m_loc * m to m_loc floats.  Dense
+    servers keep populating ``sigma_rows`` (the historical wire shape), so
+    payload comparisons between the two modes stay honest.
     """
 
     W_rows: Array  # (m_loc, d) weight rows of the worker's tasks
-    sigma_rows: Array  # (m_loc, m) Sigma rows of the worker's tasks
+    sigma_rows: Array  # (m_loc, m) Sigma rows; None under a structured view
     alpha_rows: Array  # (m_loc, n_max) the worker's dual coordinates
     version: int  # server commit count when the snapshot was taken
+    sigma_diag: Optional[Array] = None  # (m_loc,) view-mode Sigma diagonal
+
+
+def payload_nbytes(snap: Snapshot) -> int:
+    """Total array bytes one snapshot puts on the wire (bench metric)."""
+    return sum(
+        int(np.asarray(a).nbytes)
+        for a in (snap.W_rows, snap.sigma_rows, snap.alpha_rows, snap.sigma_diag)
+        if a is not None
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,6 +303,22 @@ def _refresh_rows(dst, src, rowmask):
     return jnp.where(rowmask[:, None], src, dst)
 
 
+def _densify_pair(sig, om):
+    """Small-m dense fallback of the simulated transport: its fused SPMD
+    tick shards dense Sigma rows, so structured views materialize here (the
+    host transports keep the factors end-to-end).  A missing Omega (no
+    cheap structured inverse) becomes the dense inverse of the jittered
+    Sigma — only ever evaluated under ``MATERIALIZE_LIMIT``-sized fallbacks.
+    """
+    if isinstance(sig, SigmaView):
+        sig = sig.dense()
+        if om is None:
+            om = jnp.linalg.inv(sig)
+    if isinstance(om, SigmaView):
+        om = om.dense()
+    return sig, om
+
+
 # ---------------------------------------------------------------------------
 # host-side per-worker local solve (threaded / multiprocess workers)
 # ---------------------------------------------------------------------------
@@ -295,6 +330,11 @@ def make_block_solver(cfg: DMTRLConfig, n_max: int, rho: float) -> Callable:
 
     solve(x, y, alpha_rows, W_rows, n, sigma_rows, tids, key)
         -> (dalpha_rows, db_rows)
+
+    ``sigma_rows`` dispatches on rank at trace time: a 2-D array is the
+    historical (m_loc, m) row block (dense snapshots), a 1-D array is the
+    (m_loc,) ``Snapshot.sigma_diag`` of a structured server — the solver
+    only ever reads the diagonal, so the signature stays put.
     """
     loss = get_loss(cfg.loss)
     backend = get_backend(cfg.solver)
@@ -306,7 +346,12 @@ def make_block_solver(cfg: DMTRLConfig, n_max: int, rho: float) -> Callable:
         keys = jax.vmap(
             lambda t: jax.random.fold_in(jax.random.fold_in(key, t), 0)
         )(tids)
-        sigma_ii = jnp.take_along_axis(sigma_rows, tids[:, None], axis=1)[:, 0]
+        if sigma_rows.ndim == 1:
+            sigma_ii = sigma_rows
+        else:
+            sigma_ii = jnp.take_along_axis(
+                sigma_rows, tids[:, None], axis=1
+            )[:, 0]
         dalpha, r = jax.vmap(solver)(x, y, alpha_rows, W_rows, n, sigma_ii, keys)
         # delta_b_i = (eta / n_i) * X_i^T dalpha_i (padded tasks have n=1,
         # x=0 => inert); eta pre-applied exactly like the mesh local solve
@@ -347,12 +392,15 @@ class Transport:
         self._model_subscribers.append(callback)
         return callback
 
-    def _notify_model(self, W: Array, sigma: Array) -> None:
+    def _notify_model(self, W: Array, sigma) -> None:
         self._model_version += 1
         if not self._model_subscribers:
             return
         W = np.asarray(W)
-        sigma = np.asarray(sigma)
+        # structured Sigma ships as the view itself (factors, a few KB) —
+        # subscribers (serve/scheduler.py publish_weights) treat it opaquely
+        if not isinstance(sigma, SigmaView):
+            sigma = np.asarray(sigma)
         for cb in self._model_subscribers:
             cb(W, sigma, self._model_version)
 
@@ -501,6 +549,16 @@ class SimulatedTransport(Transport):
         self.state = install_initial_state(
             self.state, raw, data, m, cfg, mesh, axes, reg, init, w_from_alpha
         )
+        if isinstance(self.state.sigma, SigmaView) or isinstance(
+            self.state.omega, SigmaView
+        ):
+            sig0, om0 = _densify_pair(self.state.sigma, self.state.omega)
+            self.state = dataclasses.replace(
+                self.state,
+                sigma=jax.device_put(sig0, self._sr),
+                omega=jax.device_put(om0, self._sr),
+                W=w_from_alpha(self.state.alpha, jax.device_put(sig0, self._sr)),
+            )
 
         # snapshots start in sync with the live state
         self.W_snap = self.state.W
@@ -589,6 +647,7 @@ class SimulatedTransport(Transport):
             self._install(sigma, omega)
 
     def _install(self, sig, om):
+        sig, om = _densify_pair(sig, om)
         st = dataclasses.replace(
             self.state,
             sigma=jax.device_put(sig, self._sr),
@@ -615,7 +674,7 @@ class SimulatedTransport(Transport):
         return self.state.sigma
 
     def pad_sigma(self, sigma_t, omega_t):
-        return pad_sigma_blocks(
+        return pad_sigma_any(
             sigma_t, omega_t, self.m, self.raw.m, self.cfg.omega_jitter
         )
 
@@ -807,15 +866,22 @@ class _HostServerTransport(Transport):
         self.W = jnp.zeros((self.m, data.d), dtype)
         self.sigma, self.omega = omega_mod.init_sigma(self.m, dtype)
         # warm start / custom-init regularizer (mirrors the mesh engines'
-        # install_initial_state so cross-transport parity holds)
+        # install_initial_state so cross-transport parity holds); structured
+        # members install their SigmaView init and the server keeps the
+        # factors end-to-end — no dense (m, m) ever lives on the host path
         sigma_t = omega_t = None
         if init is not None:
-            sigma_t = jnp.asarray(init.sigma, dtype)
-            omega_t = jnp.asarray(init.omega, dtype)
-        elif reg.custom_init:
+            if isinstance(init.sigma, SigmaView):
+                sigma_t = init.sigma
+            else:
+                sigma_t = jnp.asarray(init.sigma, dtype)
+            omega_t = init.omega
+            if omega_t is not None and not isinstance(omega_t, SigmaView):
+                omega_t = jnp.asarray(omega_t, dtype)
+        elif reg.custom_init or reg.structured:
             sigma_t, omega_t = reg.init(raw.m, dtype)
         if sigma_t is not None:
-            self.sigma, self.omega = pad_sigma_blocks(
+            self.sigma, self.omega = pad_sigma_any(
                 sigma_t, omega_t, self.m, raw.m, cfg.omega_jitter
             )
         if init is not None:
@@ -891,6 +957,16 @@ class _HostServerTransport(Transport):
             self._snap_version[worker] = self._boundary_version
             self._snap_lag[worker] = self.completed[worker] - min(self.completed)
             W_b, sigma_b = self._boundary
+            if isinstance(sigma_b, SigmaView):
+                # structured server: ship only the diagonal the local
+                # solver reads — m_loc floats instead of m_loc * m
+                return Snapshot(
+                    W_rows=W_b[rows],
+                    sigma_rows=None,
+                    alpha_rows=self.alpha[rows],
+                    version=self._boundary_version,
+                    sigma_diag=sigma_b.diag()[rows],
+                )
             return Snapshot(
                 W_rows=W_b[rows],
                 sigma_rows=sigma_b[rows],
@@ -908,9 +984,14 @@ class _HostServerTransport(Transport):
             # the Sigma-coupled server reduce for ONE worker's delta_b rows:
             # W += Sigma[:, rows] @ db / lam  (sigma is symmetric)
             self.alpha = self.alpha.at[rows].add(cfg.eta * dalpha)
-            self.W = self.W + (
-                jnp.swapaxes(self.sigma[rows], 0, 1) @ db
-            ) / cfg.lam
+            if isinstance(self.sigma, SigmaView):
+                self.W = self.W + self.sigma.col_block_matvec(
+                    rows.start, db
+                ) / cfg.lam
+            else:
+                self.W = self.W + (
+                    jnp.swapaxes(self.sigma[rows], 0, 1) @ db
+                ) / cfg.lam
             stal = self.commits_total - self._snap_version[worker]
             self.commits_total += 1
             self.commits_outer += 1
@@ -951,10 +1032,11 @@ class _HostServerTransport(Transport):
         # member, whose post-install starters read the live state)
         self._boundary = (self.W, self.sigma)
         self._boundary_version = self.commits_total
-        self._notify_model(
-            self.W[: self.raw.m, : self.raw.d],
-            self.sigma[: self.raw.m, : self.raw.m],
-        )
+        if isinstance(self.sigma, SigmaView):
+            sigma_raw = self.sigma.unpad(self.raw.m)
+        else:
+            sigma_raw = self.sigma[: self.raw.m, : self.raw.m]
+        self._notify_model(self.W[: self.raw.m, : self.raw.d], sigma_raw)
 
     def _maybe_install(self):
         if self.pending is not None and self.commits_outer >= self.cfg.omega_delay:
@@ -993,7 +1075,7 @@ class _HostServerTransport(Transport):
             return self.sigma
 
     def pad_sigma(self, sigma_t, omega_t):
-        return pad_sigma_blocks(
+        return pad_sigma_any(
             sigma_t, omega_t, self.m, self.raw.m, self.cfg.omega_jitter
         )
 
@@ -1004,7 +1086,10 @@ class _HostServerTransport(Transport):
         with self.lock:
             hist_np = {k: np.asarray(v) for k, v in self.hist.items()}
             W = np.asarray(self.W)[: self.raw.m, : self.raw.d]
-            sigma = np.asarray(self.sigma)[: self.raw.m, : self.raw.m]
+            if isinstance(self.sigma, SigmaView):
+                sigma = maybe_dense(self.sigma.unpad(self.raw.m))
+            else:
+                sigma = np.asarray(self.sigma)[: self.raw.m, : self.raw.m]
             state = DistributedState(
                 alpha=self.alpha, W=self.W, sigma=self.sigma, omega=self.omega
             )
@@ -1038,10 +1123,13 @@ class ThreadedTransport(_HostServerTransport):
         # compile once before fanning out (all workers share one shape)
         x0, y0, n0, t0 = blocks[0]
         snap0 = self.snapshot(0)
+        sig0 = (
+            snap0.sigma_rows if snap0.sigma_rows is not None else snap0.sigma_diag
+        )
         jax.block_until_ready(
             solve(
                 x0, y0, snap0.alpha_rows, snap0.W_rows, n0,
-                snap0.sigma_rows, t0, round_keys[0],
+                sig0, t0, round_keys[0],
             )
         )
 
@@ -1051,9 +1139,14 @@ class ThreadedTransport(_HostServerTransport):
                 for r in range(self.R):
                     self.gate(g, r)
                     snap = self.snapshot(g)
+                    sig = (
+                        snap.sigma_rows
+                        if snap.sigma_rows is not None
+                        else snap.sigma_diag
+                    )
                     dalpha, db = solve(
                         x, y, snap.alpha_rows, snap.W_rows, n,
-                        snap.sigma_rows, tids, round_keys[r],
+                        sig, tids, round_keys[r],
                     )
                     dalpha = jax.block_until_ready(dalpha)
                     if self.pace:
@@ -1207,14 +1300,22 @@ class MultiprocessTransport(_HostServerTransport):
                     _send_msg(conn, ("ok",))
                 elif op == "snapshot":
                     s = self.snapshot(g)
+                    # the wire ships whichever Sigma payload is populated:
+                    # (m_loc, m) rows for dense servers, (m_loc,) diag for
+                    # structured ones (the payload-size win of this PR)
                     _send_msg(
                         conn,
                         (
                             "snap",
                             np.asarray(s.W_rows),
-                            np.asarray(s.sigma_rows),
+                            None
+                            if s.sigma_rows is None
+                            else np.asarray(s.sigma_rows),
                             np.asarray(s.alpha_rows),
                             s.version,
+                            None
+                            if s.sigma_diag is None
+                            else np.asarray(s.sigma_diag),
                         ),
                     )
                 elif op == "commit":
@@ -1322,10 +1423,13 @@ def _mp_worker_main():  # pragma: no cover - runs in worker subprocesses
                 _send_msg(sock, ("gate", r))
                 _recv_msg(sock)
                 _send_msg(sock, ("snapshot",))
-                _tag, W_rows, sigma_rows, alpha_rows, _version = _recv_msg(sock)
+                (
+                    _tag, W_rows, sigma_rows, alpha_rows, _version, sigma_diag
+                ) = _recv_msg(sock)
+                sig = sigma_rows if sigma_rows is not None else sigma_diag
                 dalpha, db = solve(
                     x, y, jnp.asarray(alpha_rows), jnp.asarray(W_rows), n,
-                    jnp.asarray(sigma_rows), tids, jnp.asarray(round_keys[r]),
+                    jnp.asarray(sig), tids, jnp.asarray(round_keys[r]),
                 )
                 dalpha = np.asarray(dalpha)
                 db = np.asarray(db)

@@ -54,6 +54,11 @@ class ScoreRequest(ServeRequest):
     x: np.ndarray  # (d,)
     score: Optional[float] = None
     label: Optional[float] = None
+    # filled by ``run_tile`` when the engine was built with
+    # ``gather_sigma_rows=True`` and the packed snapshot carries a Sigma:
+    # this request's task-relatedness row Sigma[task] (m,) — gathered
+    # sparsely from the structured factors, never via a dense (m, m)
+    sigma_row: Optional[np.ndarray] = None
 
 
 def make_score_step():
@@ -69,6 +74,25 @@ def make_score_step():
         return task_scores(W, X, tasks)
 
     return score_step
+
+
+def make_sigma_gather():
+    """gather(sigma, tasks (B,)) -> (B, m) Sigma rows of a tile's tasks.
+
+    ``sigma`` is a jit ARGUMENT (dense array or SigmaView pytree), keyed by
+    the tile's task ids at the fixed batch shape — so one compiled gather
+    serves every tile and a hot-swapped same-shape snapshot never retraces.
+    A SigmaView gathers from its factors (O(B * m) work / output, no dense
+    (m, m) ever); a dense Sigma is a plain row take.
+    """
+    from repro.core.sigma_view import SigmaView
+
+    def gather(sigma, tasks):
+        if isinstance(sigma, SigmaView):
+            return sigma.rows(tasks)
+        return jnp.asarray(sigma)[tasks]
+
+    return gather
 
 
 class MTLScoringEngine:
@@ -90,6 +114,8 @@ class MTLScoringEngine:
         *,
         version: int = 0,
         source=None,
+        sigma=None,
+        gather_sigma_rows: bool = False,
     ):
         W = jnp.asarray(W)
         if W.ndim != 2:
@@ -98,8 +124,10 @@ class MTLScoringEngine:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.batch = int(batch)
         self.classify = bool(classify)
-        self._snapshot = ModelSnapshot(version=int(version), W=W)
+        self.gather_sigma_rows = bool(gather_sigma_rows)
+        self._snapshot = ModelSnapshot(version=int(version), W=W, sigma=sigma)
         self._step = jax.jit(make_score_step())
+        self._gather = jax.jit(make_sigma_gather())
         self._step_exe = None  # AOT executable installed by warmup()
         self._source = weakref.ref(source) if source is not None else None
         # serializes the swap surface (publish/swap/publish_weights/refresh)
@@ -295,12 +323,45 @@ class MTLScoringEngine:
         """Blocking batch surface: score all requests in fixed-shape tiles
         against the current snapshot; fills score/label in place and
         returns the same list (validation + scoring both delegate to the
-        single ``score_batch`` path)."""
+        single ``score_batch`` path). Honors ``gather_sigma_rows`` the same
+        way the scheduler tile hook does."""
         if not requests:
             return requests
         X, t = self._stack(requests)
         self._write_back(requests, self.score_batch(X, t))
+        if self.gather_sigma_rows and self._snapshot.sigma is not None:
+            for r, row in zip(requests, self.sigma_rows_for(t)):
+                r.sigma_row = row
         return requests
+
+    def sigma_rows_for(self, tasks, sigma=None) -> np.ndarray:
+        """Sparse serve-path gather: the (n, m) Sigma rows of ``tasks``
+        against ``sigma`` (default: the current snapshot's), padded to the
+        fixed tile shape internally so the jitted gather never retraces.
+        Structured snapshots gather straight from the factors — the dense
+        (m, m) is never materialized on the serving host."""
+        if sigma is None:
+            sigma = self._snapshot.sigma
+        if sigma is None:
+            raise ValueError(
+                "no Sigma on the serving snapshot: build the engine with "
+                "sigma=... or publish a snapshot that carries one"
+            )
+        t = np.ascontiguousarray(np.asarray(tasks, np.int32).reshape(-1))
+        if t.size and (t.min() < 0 or t.max() >= self.m):
+            raise ValueError(
+                f"task id out of range [0, {self.m}): [{t.min()}, {t.max()}]"
+            )
+        n, B = t.shape[0], self.batch
+        pad = (-n) % B
+        if pad:
+            t = np.concatenate([t, np.zeros((pad,), np.int32)])
+        out = np.empty((t.shape[0], self.m), np.float32)
+        for lo in range(0, t.shape[0], B):
+            out[lo : lo + B] = np.asarray(
+                self._gather(sigma, jnp.asarray(t[lo : lo + B]))
+            )
+        return out[:n]
 
     def run_tile(
         self, requests: Sequence[ScoreRequest], snapshot: ModelSnapshot
@@ -309,6 +370,12 @@ class MTLScoringEngine:
         snapshot (not the engine's current one) so in-flight tiles complete
         on the model they were packed with. Requests were already validated
         at admission (``admit``), so the hot path goes straight to the
-        shared tile loop."""
+        shared tile loop. With ``gather_sigma_rows`` on and a Sigma-bearing
+        snapshot, each request also gets its task's Sigma row, gathered
+        only for the tasks this tile touches."""
         X, t = self._stack(requests)
         self._write_back(requests, self._score_tiles(X, t, jnp.asarray(snapshot.W)))
+        if self.gather_sigma_rows and snapshot.sigma is not None:
+            rows = self.sigma_rows_for(t, snapshot.sigma)
+            for r, row in zip(requests, rows):
+                r.sigma_row = row

@@ -45,10 +45,14 @@ class ModelSnapshot:
     """An immutable versioned model: what one tile is scored against.
 
     For the MTL scorer ``W`` (m, d) is the task-weight matrix and
-    ``sigma`` the task covariance that produced it (carried for
-    provenance; scoring only reads W). Versions are strictly increasing —
-    publishers (``DMTRLEstimator`` installs, transport subscriptions)
-    stamp them, consumers refuse to go backwards.
+    ``sigma`` the task covariance that produced it — either a dense
+    (m, m) array or, under a structured regularizer, a
+    ``core.sigma_view.SigmaView`` carrying only the factors (a few KB at
+    any m); consumers that need relatedness rows gather them sparsely
+    (``MTLScoringEngine.sigma_rows_for``), scoring itself only reads W.
+    Versions are strictly increasing — publishers (``DMTRLEstimator``
+    installs, transport subscriptions) stamp them, consumers refuse to go
+    backwards.
     """
 
     version: int

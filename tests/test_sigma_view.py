@@ -1,0 +1,463 @@
+"""Structured Sigma (core/sigma_view.py) — views, parity, wire, serve.
+
+The tentpole contract of the structured-Sigma PR:
+
+  * SigmaView ops (matvec / rows / diag / col_block_matvec / pad / unpad /
+    factors) agree with the materialized dense Sigma on every view class.
+  * ``low_rank_diag`` at r = m reproduces ``trace_constraint``'s Sigma and
+    iterates through all three engines and the simulated + threaded
+    transports (cross-engine tolerance covers eigensolver sensitivity to
+    float-association differences, not algorithmic drift).
+  * ``graphical_lasso`` at penalty=0 equals its own dense trace-normalized
+    coupling; any penalty keeps Sigma PD and trace-1.
+  * Every registry member yields a PSD trace-normalized Sigma at
+    m in {1, 2, 3, 257} (satellite sweep; hypothesis fuzz when available).
+  * The Omega step rejects non-finite W with a clear ValueError.
+  * Dense members warn once when resolved at m above the threshold.
+  * The serve-path gather returns exact Sigma rows from the factors.
+  * Snapshots from structured servers ship the diagonal, not (m_loc, m)
+    rows, and the block solver accepts both wire shapes identically.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DMTRLEstimator
+from repro.core.async_dmtrl import AsyncOptions
+from repro.core.dmtrl import DMTRLConfig
+from repro.core.engines import get_engine
+from repro.core.omega_regularizers import (
+    DENSE_SIGMA_WARN_THRESHOLD,
+    get_regularizer,
+    resolve_regularizer,
+)
+from repro.core.sigma_view import (
+    DenseSigma,
+    LowRankDiagSigma,
+    SigmaView,
+    SparseSigma,
+    as_view,
+    maybe_dense,
+    view_from_factors,
+)
+from repro.core.transport import Snapshot, make_block_solver, payload_nbytes
+from repro.data.synthetic import synthetic
+
+
+def _problem(m=6, d=8, seed=3):
+    return synthetic(1, m=m, d=d, n_train_avg=20, n_test_avg=8, seed=seed)
+
+
+def _cfg(**kw):
+    base = dict(outer_iters=2, rounds=3, lam=0.1, solver="block_gram")
+    base.update(kw)
+    return DMTRLConfig(**base)
+
+
+def _views(m=7, r=3, k=2, seed=0):
+    """One instance of each view class plus its dense reference."""
+    rng = np.random.RandomState(seed)
+    U = jnp.asarray(rng.randn(m, r).astype(np.float32))
+    core = jnp.asarray(np.diag(rng.rand(r).astype(np.float32) + 0.1))
+    d = jnp.asarray(rng.rand(m).astype(np.float32) + 0.05)
+    lr = LowRankDiagSigma(U=U, core=core, d=d)
+
+    cols = np.zeros((m, k), np.int32)
+    vals = np.zeros((m, k), np.float32)
+    for i in range(m):  # symmetric band: couple i with i+-1
+        js = [j for j in (i - 1, i + 1) if 0 <= j < m][:k]
+        cols[i, : len(js)] = js
+        vals[i, : len(js)] = 0.01 * (1 + np.arange(len(js)))
+    # symmetrize values so the matrix (not just the pattern) is symmetric
+    dense_off = np.zeros((m, m), np.float32)
+    for i in range(m):
+        for s in range(k):
+            if vals[i, s]:
+                dense_off[i, cols[i, s]] = vals[i, s]
+    dense_off = 0.5 * (dense_off + dense_off.T)
+    for i in range(m):
+        for s in range(k):
+            if vals[i, s]:
+                vals[i, s] = dense_off[i, cols[i, s]]
+    sp = SparseSigma(
+        diag_v=jnp.asarray(rng.rand(m).astype(np.float32) + 0.5),
+        cols=jnp.asarray(cols),
+        vals=jnp.asarray(vals),
+    )
+    dn = DenseSigma(sigma=jnp.asarray(lr.dense()))
+    return [lr, sp, dn]
+
+
+# ---------------------------------------------------------------------------
+# view-op consistency
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("idx", [0, 1, 2], ids=["lowrank", "sparse", "dense"])
+def test_view_ops_match_dense(idx):
+    view = _views()[idx]
+    m = view.m
+    S = np.asarray(view.dense())
+    assert np.allclose(S, S.T, atol=1e-6)
+    rng = np.random.RandomState(1)
+    v = jnp.asarray(rng.randn(m).astype(np.float32))
+    V = jnp.asarray(rng.randn(m, 3).astype(np.float32))
+    np.testing.assert_allclose(view.matvec(v), S @ np.asarray(v), atol=1e-5)
+    np.testing.assert_allclose(view.matvec(V), S @ np.asarray(V), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(view.diag()), np.diag(S), atol=1e-6)
+    idxs = jnp.asarray([0, m - 1, 2], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(view.rows(idxs)), S[np.asarray(idxs)], atol=1e-6
+    )
+    db = jnp.asarray(rng.randn(3, 4).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(view.col_block_matvec(2, db)),
+        S[:, 2:5] @ np.asarray(db),
+        atol=1e-5,
+    )
+    assert float(view.trace()) == pytest.approx(float(np.trace(S)), rel=1e-5)
+    assert view.nbytes() > 0
+    assert np.isfinite(float(view.logdet_bound()))
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2], ids=["lowrank", "sparse", "dense"])
+def test_view_pad_unpad_roundtrip(idx):
+    view = _views()[idx]
+    m = view.m
+    padded = view.pad(m + 3, 1e-6)
+    assert padded.m == m + 3
+    Sp = np.asarray(padded.dense())
+    np.testing.assert_allclose(Sp[:m, :m], np.asarray(view.dense()), atol=1e-6)
+    np.testing.assert_allclose(np.diag(Sp)[m:], 1e-6, atol=1e-8)
+    assert np.abs(Sp[m:, :m]).max() == 0.0
+    back = padded.unpad(m)
+    np.testing.assert_allclose(
+        np.asarray(back.dense()), np.asarray(view.dense()), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2], ids=["lowrank", "sparse", "dense"])
+def test_view_wire_factors_roundtrip(idx):
+    view = _views()[idx]
+    wire = view.factors()
+    # wire leaves are host numpy (+ the kind tag), picklable as-is
+    assert all(
+        isinstance(x, np.ndarray) for k, x in wire.items() if k != "kind"
+    )
+    back = view_from_factors(wire)
+    assert type(back) is type(view)
+    np.testing.assert_allclose(
+        np.asarray(back.dense()), np.asarray(view.dense()), atol=0
+    )
+
+
+def test_view_is_a_jit_pytree():
+    view = _views()[0]
+
+    @jax.jit
+    def f(sv, v):
+        return sv.matvec(v)
+
+    v = jnp.ones((view.m,), jnp.float32)
+    np.testing.assert_allclose(f(view, v), view.matvec(v), atol=1e-6)
+
+
+def test_as_view_and_maybe_dense():
+    S = jnp.eye(4) / 4.0
+    v = as_view(S)
+    assert isinstance(v, DenseSigma)
+    assert isinstance(maybe_dense(v), np.ndarray)
+    lr = _views()[0]
+    assert maybe_dense(lr, limit=2) is lr  # too big to materialize
+    assert isinstance(maybe_dense(lr, limit=1000), np.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# dense-vs-structured parity (tentpole acceptance)
+# ---------------------------------------------------------------------------
+def test_low_rank_full_rank_matches_trace_constraint_reference():
+    sp = _problem()
+    cfg = _cfg()
+    ref = get_engine("reference")
+    dense = ref.run(cfg, sp.train, regularizer=get_regularizer("trace_constraint"))
+    lr = ref.run(
+        cfg, sp.train,
+        regularizer=get_regularizer("low_rank_diag", rank=sp.train.m),
+    )
+    assert isinstance(lr.sigma_view, LowRankDiagSigma)
+    np.testing.assert_allclose(lr.sigma, dense.sigma, atol=1e-3)
+    np.testing.assert_allclose(lr.W, dense.W, atol=2e-3)
+
+
+@pytest.mark.parametrize("engine", ["distributed", "async"])
+def test_low_rank_full_rank_cross_engine(engine, one_device_mesh):
+    sp = _problem()
+    cfg = _cfg()
+    ref = get_engine("reference")
+    anchor = ref.run(
+        cfg, sp.train,
+        regularizer=get_regularizer("low_rank_diag", rank=sp.train.m),
+    )
+    res = get_engine(engine).run(
+        cfg, sp.train, mesh=one_device_mesh,
+        regularizer=get_regularizer("low_rank_diag", rank=sp.train.m),
+    )
+    # mesh psum reassociates floats; the eigensolver amplifies that into
+    # rotated (equivalent) factors — compare iterates loosely, Sigma tightly
+    np.testing.assert_allclose(res.W, anchor.W, atol=2e-2)
+    np.testing.assert_allclose(res.sigma, anchor.sigma, atol=2e-3)
+
+
+@pytest.mark.parametrize("transport", ["simulated", "threaded"])
+def test_structured_members_through_transports(transport, one_device_mesh):
+    sp = _problem()
+    cfg = _cfg()
+    ref = get_engine("reference")
+    eng = get_engine("async")
+    for reg_name, params in (
+        ("low_rank_diag", dict(rank=sp.train.m)),
+        ("graphical_lasso", dict(penalty=0.0)),
+    ):
+        anchor = ref.run(
+            cfg, sp.train, regularizer=get_regularizer(reg_name, **params)
+        )
+        n_workers = None if transport == "simulated" else 2
+        res = eng.run(
+            cfg, sp.train, mesh=one_device_mesh,
+            options=AsyncOptions(tau=0, transport=transport, n_workers=n_workers),
+            regularizer=get_regularizer(reg_name, **params),
+        )
+        np.testing.assert_allclose(res.W, anchor.W, atol=2e-2)
+        np.testing.assert_allclose(res.sigma, anchor.sigma, atol=2e-3)
+        if transport == "threaded":
+            # host servers keep the factors end-to-end
+            assert isinstance(res.sigma_view, SigmaView)
+
+
+def test_graphical_lasso_zero_penalty_is_dense_coupling():
+    rng = np.random.RandomState(0)
+    W = jnp.asarray(rng.randn(7, 5).astype(np.float32))
+    sigma, om = get_regularizer("graphical_lasso", penalty=0.0).step(W, 1e-6)
+    assert om is None  # sparse Sigma has no cheap structured inverse
+    Wn = np.asarray(W, np.float64)
+    S = Wn @ Wn.T / (Wn * Wn).sum()
+    S = S + np.eye(7) * 1e-6
+    S = S / np.trace(S)
+    np.testing.assert_allclose(maybe_dense(sigma), S, atol=1e-6)
+
+
+def test_graphical_lasso_positive_penalty_sparsifies_and_stays_pd():
+    sp = _problem(m=8)
+    res = get_engine("reference").run(
+        _cfg(), sp.train, regularizer=get_regularizer("graphical_lasso", penalty=2.0)
+    )
+    assert isinstance(res.sigma_view, SparseSigma)
+    S = np.asarray(res.sigma)
+    off = S - np.diag(np.diag(S))
+    dense_res = get_engine("reference").run(
+        _cfg(), sp.train, regularizer=get_regularizer("graphical_lasso", penalty=0.0)
+    )
+    dense_off = dense_res.sigma - np.diag(np.diag(dense_res.sigma))
+    assert np.count_nonzero(off) <= np.count_nonzero(np.abs(dense_off) > 1e-12)
+    assert np.linalg.eigvalsh(S).min() > 0
+    assert np.trace(S) == pytest.approx(1.0, abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# satellite: PSD + trace-normalized across ALL registry members
+# ---------------------------------------------------------------------------
+def _member_sigma(name, m, seed=0):
+    """One Omega-step Sigma (or the init Sigma for fixed members) at size m."""
+    params = {}
+    if name == "graph_laplacian":
+        A = np.zeros((m, m))
+        for i in range(m - 1):
+            A[i, i + 1] = A[i + 1, i] = 1.0
+        params["adjacency"] = A
+    reg = get_regularizer(name, **params)
+    if reg.learns:
+        W = jnp.asarray(np.random.RandomState(seed).randn(m, 5).astype(np.float32))
+        sigma, _ = reg.step(W, 1e-6)
+    else:
+        sigma, _ = reg.init(m, jnp.float32)
+    return maybe_dense(sigma, limit=10_000)
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 257])
+def test_all_members_sigma_psd_trace_normalized(m):
+    from repro.core import available_regularizers
+
+    for name in sorted(available_regularizers()):
+        S = np.asarray(_member_sigma(name, m), np.float64)
+        assert S.shape == (m, m), name
+        assert np.allclose(S, S.T, atol=1e-5), name
+        assert np.linalg.eigvalsh(S).min() > -1e-5, name
+        assert np.trace(S) == pytest.approx(1.0, abs=1e-3), name
+
+
+def test_all_members_sigma_psd_hypothesis_fuzz():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 40), seed=st.integers(0, 5))
+    def check(m, seed):
+        for name in ("trace_constraint", "low_rank_diag", "graphical_lasso"):
+            S = np.asarray(_member_sigma(name, m, seed), np.float64)
+            assert np.linalg.eigvalsh(S).min() > -1e-5
+            assert abs(np.trace(S) - 1.0) < 1e-3
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# satellite: non-finite W guard
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name", ["trace_constraint", "low_rank_diag", "graphical_lasso"]
+)
+def test_omega_step_rejects_non_finite_w(name):
+    reg = get_regularizer(name)
+    W = jnp.ones((4, 3))
+    W = W.at[1, 2].set(jnp.nan)
+    with pytest.raises(ValueError, match="non-finite"):
+        reg.step(W, 1e-6)
+    W = jnp.ones((4, 3)).at[0, 0].set(jnp.inf)
+    with pytest.raises(ValueError, match="non-finite"):
+        reg.step(W, 1e-6)
+
+
+def test_finite_guard_survives_dataclasses_replace():
+    reg = get_regularizer("trace_constraint")
+    reg2 = dataclasses.replace(reg, description="copy")
+    W = jnp.full((3, 2), jnp.nan)
+    with pytest.raises(ValueError, match="non-finite"):
+        reg2.step(W, 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellite: one-time dense-at-scale warning
+# ---------------------------------------------------------------------------
+def test_dense_member_warns_once_above_threshold():
+    from repro.core import omega_regularizers as mod
+
+    cfg = DMTRLConfig()
+    mod._dense_scale_warned.discard("trace_constraint")
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            resolve_regularizer(cfg, m=4, dense_warn_threshold=2)
+            resolve_regularizer(cfg, m=4, dense_warn_threshold=2)  # once only
+        msgs = [x for x in w if "dense" in str(x.message).lower()]
+        assert len(msgs) == 1
+        assert "low_rank_diag" in str(msgs[0].message)
+        # structured members never warn
+        with warnings.catch_warnings(record=True) as w2:
+            warnings.simplefilter("always")
+            resolve_regularizer(
+                cfg, regularizer=get_regularizer("low_rank_diag"),
+                m=10_000, dense_warn_threshold=2,
+            )
+        assert not [x for x in w2 if "dense" in str(x.message).lower()]
+        assert DENSE_SIGMA_WARN_THRESHOLD >= 1
+    finally:
+        mod._dense_scale_warned.discard("trace_constraint")
+
+
+# ---------------------------------------------------------------------------
+# wire format: structured snapshots ship the diagonal
+# ---------------------------------------------------------------------------
+def test_snapshot_payload_structured_smaller_than_dense():
+    m, m_loc, d, n_max = 64, 8, 5, 10
+    W_rows = np.zeros((m_loc, d), np.float32)
+    alpha_rows = np.zeros((m_loc, n_max), np.float32)
+    dense = Snapshot(
+        W_rows=W_rows, sigma_rows=np.zeros((m_loc, m), np.float32),
+        alpha_rows=alpha_rows, version=0,
+    )
+    structured = Snapshot(
+        W_rows=W_rows, sigma_rows=None, alpha_rows=alpha_rows, version=0,
+        sigma_diag=np.zeros((m_loc,), np.float32),
+    )
+    assert payload_nbytes(structured) < payload_nbytes(dense)
+    assert payload_nbytes(dense) - payload_nbytes(structured) == 4 * m_loc * (m - 1)
+
+
+def test_block_solver_accepts_rows_and_diag_identically():
+    sp = _problem(m=4, d=6)
+    data = sp.train
+    cfg = _cfg()
+    solve = make_block_solver(cfg, data.n_max, rho=1.0)
+    rng = np.random.RandomState(0)
+    sigma = np.eye(data.m, dtype=np.float32) / data.m + 0.01
+    alpha = jnp.zeros((data.m, data.n_max), jnp.float32)
+    W = jnp.asarray(rng.randn(data.m, data.d).astype(np.float32))
+    tids = jnp.arange(data.m, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    a1, b1 = solve(
+        data.x, data.y, alpha, W, data.n, jnp.asarray(sigma), tids, key
+    )
+    a2, b2 = solve(
+        data.x, data.y, alpha, W, data.n, jnp.asarray(np.diag(sigma)), tids, key
+    )
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+# ---------------------------------------------------------------------------
+# serve path: sparse Sigma-row gather
+# ---------------------------------------------------------------------------
+def test_serving_engine_gathers_sigma_rows_from_factors():
+    from repro.serve.mtl import ScoreRequest
+
+    sp = _problem()
+    est = DMTRLEstimator(
+        engine="reference", regularizer="low_rank_diag",
+        regularizer_params={"rank": sp.train.m},
+        outer_iters=2, rounds=3, lam=0.1,
+    )
+    est.fit(sp.train)
+    assert isinstance(est.sigma_view_, LowRankDiagSigma)
+    assert isinstance(est.model_snapshot().sigma, SigmaView)
+
+    eng = est.scoring_engine(batch=4, gather_sigma_rows=True)
+    tasks = [0, 3, 5, 1, 2]
+    rows = eng.sigma_rows_for(tasks)
+    dense = np.asarray(est.sigma_view_.dense())
+    np.testing.assert_allclose(rows, dense[tasks], atol=1e-6)
+
+    reqs = [
+        ScoreRequest(task=t, x=np.ones((sp.train.d,), np.float32))
+        for t in tasks[:4]
+    ]
+    eng.run_tile(reqs, eng.model_snapshot())
+    for r in reqs:
+        assert r.score is not None
+        assert r.sigma_row is not None
+        np.testing.assert_allclose(r.sigma_row, dense[r.task], atol=1e-6)
+
+
+def test_serving_engine_without_sigma_raises_on_gather():
+    eng_W = np.zeros((3, 2), np.float32)
+    from repro.serve.mtl import MTLScoringEngine
+
+    eng = MTLScoringEngine(eng_W, batch=2)
+    with pytest.raises(ValueError, match="no Sigma"):
+        eng.sigma_rows_for([0, 1])
+
+
+def test_estimator_partial_fit_roundtrips_structured_state():
+    sp = _problem()
+    est = DMTRLEstimator(
+        engine="reference", regularizer="low_rank_diag",
+        regularizer_params={"rank": 4},
+        outer_iters=1, rounds=2, lam=0.1,
+    )
+    est.fit(sp.train)
+    v1 = est.sigma_view_
+    est.partial_fit(sp.train)
+    assert isinstance(est.sigma_view_, LowRankDiagSigma)
+    assert est.sigma_view_ is not v1
+    assert est.n_fit_calls_ == 2
