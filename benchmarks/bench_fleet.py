@@ -1,0 +1,482 @@
+"""Fleet serving benchmark: N replicas behind the task-affinity router.
+
+Three virtual-clock fleet simulations, all recorded to BENCH_fleet.json
+(every scenario asserts its own invariants before the file is written,
+and ``check()`` re-validates the full record — the CI smoke gate):
+
+* ``kind: shed_vs_baseline`` — Zipf-skewed per-task traffic at ~1.3x the
+  FLEET's service capacity, served three ways: the no-router
+  single-scheduler baseline (one host drowning in backlog), the fleet
+  with shedding disabled (N hosts, still overloaded), and the fleet with
+  deadline-aware router shedding.  Half the traffic carries a hard
+  deadline (misses expire = SLO violations), half is best-effort (the
+  baseline queues it unboundedly — that is where its p99 explodes).  The
+  shedding router must beat the baseline on completed-request p99 AND
+  total SLO violations (asserted): rejecting at the door beats admitting
+  a guaranteed violation.
+
+* ``kind: rolling_swap`` — model publishes roll across the fleet one
+  replica per router step while sequential per-client sessions keep
+  submitting.  Every completion is checked against the version floor its
+  client had already observed at submit time: the row records ZERO
+  monotonic-read regressions (asserted) across every publish.
+
+* ``kind: crash_restart`` — a replica's engine starts raising mid-run;
+  the router fails it over (backlog re-pinned onto survivors, stamps
+  intact), later restores it (model caught up to the fleet version
+  first).  Every admitted request must end ``done`` or ``expired`` —
+  nothing lost, all non-expired requests complete (asserted).
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet
+    PYTHONPATH=src python -m benchmarks.bench_fleet --tiny
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _zipf_tasks(rng, n, tasks, a=1.2):
+    """Zipf-skewed task draw: p_k proportional to 1/(k+1)^a."""
+    import numpy as np
+
+    p = 1.0 / np.arange(1, tasks + 1) ** a
+    return rng.choice(tasks, size=n, p=p / p.sum())
+
+
+def _make_requests(rng, n, tasks, d, zipf_a):
+    from repro.serve import ScoreRequest
+
+    tids = _zipf_tasks(rng, n, tasks, zipf_a)
+    return [
+        ScoreRequest(task=int(t), x=rng.randn(d).astype("float32"))
+        for t in tids
+    ]
+
+
+class CrashableEngine:
+    """Adapter wrapper whose ``run_tile`` raises while ``crashed`` is set
+    — the router's failover path sees exactly what a dead host looks like
+    (the scheduler re-queues the packed tile, the router drains and
+    re-pins it).  Everything else delegates to the wrapped engine."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.crashed = False
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def run_tile(self, reqs, snapshot):
+        if self.crashed:
+            raise RuntimeError("replica host down")
+        self.inner.run_tile(reqs, snapshot)
+
+
+def _build_fleet(W, n_replicas, batch, clock, *, slo_s, tile_cost_s,
+                 crashable=False, version=1):
+    from repro.serve import FleetRouter, MTLScoringEngine
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+
+    engines = []
+    for _ in range(n_replicas):
+        eng = MTLScoringEngine(W, batch=batch, version=version)
+        engines.append(CrashableEngine(eng) if crashable else eng)
+    replicas = [
+        ContinuousBatchingScheduler(eng, slo_s=slo_s, clock=clock)
+        for eng in engines
+    ]
+    router = FleetRouter(replicas, slo_s=slo_s, tile_cost_s=tile_cost_s)
+    return router, engines
+
+
+def run_shed_vs_baseline(
+    *,
+    requests: int = 4000,
+    n_replicas: int = 3,
+    batch: int = 8,
+    tasks: int = 16,
+    d: int = 32,
+    tile_ms: float = 4.0,
+    overload: float = 1.3,
+    slo_ms: float = 20.0,
+    deadline_ms: float = 30.0,
+    zipf_a: float = 1.2,
+    seed: int = 0,
+):
+    """Zipf-skewed overload: single scheduler vs fleet (shed off / on).
+
+    One replica serves ``batch / tile_s`` requests per virtual second;
+    arrivals run at ``overload`` x the FLEET capacity, so even N replicas
+    cannot keep up — the only question is where the excess goes: into an
+    unbounded queue (baseline, fleet-noshed) or back to the client as an
+    explicit shed (fleet-shed).
+    """
+    import numpy as np
+
+    from repro.serve import MTLScoringEngine, VirtualClock
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+
+    tile_s = tile_ms / 1e3
+    slo_s = slo_ms / 1e3
+    rate = overload * n_replicas * batch / tile_s
+
+    def traffic():
+        rng = np.random.RandomState(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+        reqs = _make_requests(rng, requests, tasks, d, zipf_a)
+        with_deadline = rng.rand(requests) < 0.5
+        return arrivals, reqs, with_deadline
+
+    rng_w = np.random.RandomState(seed)
+    W = rng_w.randn(tasks, d).astype(np.float32)
+
+    def drive(submit, step, pending, clock, arrivals, reqs, with_deadline):
+        """Round-driven sim: deliver due arrivals, one parallel fleet step,
+        advance one tile time; idle-skip to the next arrival."""
+        i = 0
+        while i < len(reqs) or pending():
+            while i < len(reqs) and arrivals[i] <= clock():
+                submit(reqs[i], deadline_ms / 1e3 if with_deadline[i] else None)
+                i += 1
+            if not pending():
+                if i < len(reqs):
+                    clock.advance_to(max(clock(), arrivals[i]))
+                continue
+            step()
+            clock.advance(tile_s)
+
+    results = {}
+
+    # --- no-router single-scheduler baseline ------------------------------
+    clock = VirtualClock()
+    eng = MTLScoringEngine(W, batch=batch, version=1)
+    sched = ContinuousBatchingScheduler(eng, slo_s=slo_s, clock=clock)
+    arrivals, reqs, wd = traffic()
+    drive(
+        lambda r, dl: sched.submit(r, deadline_s=dl),
+        sched.step, lambda: sched.pending, clock, arrivals, reqs, wd,
+    )
+    results["baseline"] = {"metrics": sched.metrics.summary(), "shed": 0}
+
+    # --- fleet, shedding off / on -----------------------------------------
+    for label, tile_cost in (("fleet_noshed", None), ("fleet_shed", tile_s)):
+        clock = VirtualClock()
+        router, _ = _build_fleet(
+            W, n_replicas, batch, clock, slo_s=slo_s, tile_cost_s=tile_cost
+        )
+        arrivals, reqs, wd = traffic()
+        drive(
+            lambda r, dl: router.submit(r, deadline_s=dl),
+            router.step, lambda: router.pending, clock, arrivals, reqs, wd,
+        )
+        results[label] = {
+            "metrics": router.metrics().summary(),
+            "shed": router.counters["shed"],
+            "spills": router.counters["spills"],
+        }
+
+    base = results["baseline"]["metrics"]
+    shed = results["fleet_shed"]["metrics"]
+    assert results["fleet_shed"]["shed"] > 0, "overload never tripped the router"
+    assert shed["latency"]["p99_s"] < base["latency"]["p99_s"], (
+        f"router shedding did not beat the single-scheduler baseline p99: "
+        f"{shed['latency']['p99_s']:.4f}s vs {base['latency']['p99_s']:.4f}s"
+    )
+    assert shed["slo_violations"] < base["slo_violations"], (
+        f"router shedding did not cut SLO violations: "
+        f"{shed['slo_violations']} vs {base['slo_violations']}"
+    )
+    return {
+        "kind": "shed_vs_baseline",
+        "requests": requests,
+        "n_replicas": n_replicas,
+        "batch": batch,
+        "tasks": tasks,
+        "d": d,
+        "tile_ms": tile_ms,
+        "rate_rps": rate,
+        "overload": overload,
+        "slo_ms": slo_ms,
+        "deadline_ms": deadline_ms,
+        "zipf_a": zipf_a,
+        "seed": seed,
+        "results": results,
+        "p99_speedup": base["latency"]["p99_s"] / shed["latency"]["p99_s"],
+    }
+
+
+def run_rolling_swap(
+    *,
+    requests: int = 1200,
+    n_replicas: int = 3,
+    batch: int = 8,
+    tasks: int = 16,
+    d: int = 32,
+    tile_ms: float = 4.0,
+    clients: int = 24,
+    publish_every: int = 7,
+    seed: int = 1,
+):
+    """Rolling hot-swap under load with sequential per-client sessions.
+
+    ``clients`` sessions each keep ONE outstanding request (submit after
+    observing the previous completion — the regime the monotonic-read
+    guarantee covers).  A publish lands every ``publish_every`` rounds and
+    rolls across the fleet one replica per step; every completion is
+    checked against the floor its client had observed at submit time.
+    """
+    import numpy as np
+
+    from repro.serve import VirtualClock
+
+    tile_s = tile_ms / 1e3
+    rng = np.random.RandomState(seed)
+    W = rng.randn(tasks, d).astype(np.float32)
+    clock = VirtualClock()
+    router, _ = _build_fleet(
+        W, n_replicas, batch, clock, slo_s=None, tile_cost_s=None
+    )
+    reqs = _make_requests(rng, requests, tasks, d, 1.2)
+    tokens = [router.session() for _ in range(clients)]
+    owner = {}  # id(req) -> client index
+    floor = {}  # id(req) -> client's min_version at submit
+    idle = list(range(clients))
+    i = completed = regressions = 0
+    publishes = 0
+    rounds = 0
+    while completed + (requests - i) > 0 and (i < requests or router.pending):
+        while idle and i < requests:
+            c = idle.pop()
+            tok = tokens[c]
+            r = reqs[i]
+            owner[id(r)] = c
+            floor[id(r)] = tok.min_version
+            out = router.submit(r, client=tok)
+            assert out.admitted, out
+            i += 1
+        rounds += 1
+        if rounds % publish_every == 0:
+            W = W + rng.randn(tasks, d).astype(np.float32) * 0.01
+            router.publish_weights(W)
+            publishes += 1
+        for r in router.step():
+            completed += 1
+            if r.snapshot_version < floor[id(r)]:
+                regressions += 1
+            idle.append(owner[id(r)])
+        clock.advance(tile_s)
+        if i >= requests and not router.pending and not router.in_flight:
+            break
+    assert regressions == 0, f"{regressions} monotonic-read regressions"
+    assert completed == requests, f"completed {completed}/{requests}"
+    assert publishes > 0 and router.counters["rolled_installs"] >= publishes
+    return {
+        "kind": "rolling_swap",
+        "requests": requests,
+        "n_replicas": n_replicas,
+        "batch": batch,
+        "clients": clients,
+        "publish_every": publish_every,
+        "publishes": publishes,
+        "rolled_installs": router.counters["rolled_installs"],
+        "final_version": router.version,
+        "completed": completed,
+        "version_regressions": regressions,
+        "seed": seed,
+        "metrics": router.metrics().summary(),
+    }
+
+
+def run_crash_restart(
+    *,
+    requests: int = 1500,
+    n_replicas: int = 3,
+    batch: int = 8,
+    tasks: int = 16,
+    d: int = 32,
+    tile_ms: float = 4.0,
+    deadline_ms: float = 80.0,
+    crash_frac: float = 0.3,
+    restore_frac: float = 0.6,
+    seed: int = 2,
+):
+    """Replica crash + restart under load: no request is ever lost.
+
+    Replica 1's engine starts raising once ``crash_frac`` of the traffic
+    has arrived; the router fails it over (its backlog — including the
+    re-queued in-flight tile — re-pins onto the survivors) and restores it
+    at ``restore_frac`` (model caught up first).  Half the traffic carries
+    deadlines; everything admitted must end ``done`` or ``expired``.
+    """
+    import numpy as np
+
+    from repro.serve import VirtualClock
+
+    tile_s = tile_ms / 1e3
+    rate = 0.9 * n_replicas * batch / tile_s
+    rng = np.random.RandomState(seed)
+    W = rng.randn(tasks, d).astype(np.float32)
+    clock = VirtualClock()
+    router, engines = _build_fleet(
+        W, n_replicas, batch, clock, slo_s=None, tile_cost_s=None,
+        crashable=True,
+    )
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+    reqs = _make_requests(rng, requests, tasks, d, 1.2)
+    with_deadline = rng.rand(requests) < 0.5
+    admitted = []
+    i = 0
+    crashed = restored = False
+    while i < requests or router.pending:
+        while i < requests and arrivals[i] <= clock():
+            out = router.submit(
+                reqs[i],
+                deadline_s=deadline_ms / 1e3 if with_deadline[i] else None,
+            )
+            if out.admitted:
+                admitted.append(out.request)
+            i += 1
+            if not crashed and i >= int(crash_frac * requests):
+                engines[1].crashed = True  # next step() raises -> failover
+                crashed = True
+            if crashed and not restored and i >= int(restore_frac * requests):
+                engines[1].crashed = False
+                router.restore_replica(1)
+                restored = True
+        if not router.pending:
+            if i < requests:
+                clock.advance_to(max(clock(), arrivals[i]))
+            continue
+        router.step()
+        clock.advance(tile_s)
+    router.run_until_idle()
+
+    lost = [r for r in admitted if r.status not in ("done", "expired")]
+    expired = sum(1 for r in admitted if r.status == "expired")
+    done = sum(1 for r in admitted if r.status == "done")
+    assert crashed and restored
+    assert router.counters["failovers"] == 1, router.counters
+    assert router.replica(1).up and router.replica(1).restarts == 1
+    assert not lost, f"{len(lost)} requests lost in failover"
+    assert done + expired == len(admitted)
+    return {
+        "kind": "crash_restart",
+        "requests": requests,
+        "n_replicas": n_replicas,
+        "batch": batch,
+        "crash_frac": crash_frac,
+        "restore_frac": restore_frac,
+        "deadline_ms": deadline_ms,
+        "admitted": len(admitted),
+        "completed": done,
+        "expired": expired,
+        "lost": len(lost),
+        "requeued": router.counters["requeued"],
+        "failovers": router.counters["failovers"],
+        "restarts": router.counters["restarts"],
+        "seed": seed,
+        "metrics": router.metrics().summary(),
+    }
+
+
+def check(rows) -> None:
+    """Schema + invariant check of a BENCH_fleet.json record (also the CI
+    smoke gate: bench_fleet --tiny runs this before writing)."""
+    kinds = {r["kind"] for r in rows}
+    missing = {"shed_vs_baseline", "rolling_swap", "crash_restart"} - kinds
+    assert not missing, f"missing scenario rows: {sorted(missing)}"
+    for r in rows:
+        if r["kind"] == "shed_vs_baseline":
+            for arm in ("baseline", "fleet_noshed", "fleet_shed"):
+                m = r["results"][arm]["metrics"]
+                assert m["completed"] > 0, f"{arm} completed nothing"
+                assert "p99_s" in m["latency"]
+            base = r["results"]["baseline"]["metrics"]
+            shed = r["results"]["fleet_shed"]["metrics"]
+            assert r["results"]["fleet_shed"]["shed"] > 0
+            assert shed["latency"]["p99_s"] < base["latency"]["p99_s"]
+            assert shed["slo_violations"] < base["slo_violations"]
+        elif r["kind"] == "rolling_swap":
+            assert r["version_regressions"] == 0
+            assert r["completed"] == r["requests"]
+            assert r["publishes"] > 0
+        elif r["kind"] == "crash_restart":
+            assert r["lost"] == 0
+            assert r["completed"] + r["expired"] == r["admitted"]
+            assert r["restarts"] == 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="small fast run (CI smoke): same scenarios, "
+                         "fewer requests")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tasks", type=int, default=16)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--tile-ms", type=float, default=4.0)
+    ap.add_argument("--overload", type=float, default=1.3)
+    ap.add_argument("--zipf-a", type=float, default=1.2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json"),
+    )
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    n = args.requests or (400 if args.tiny else 4000)
+    shed = run_shed_vs_baseline(
+        requests=n, n_replicas=args.replicas, batch=args.batch,
+        tasks=args.tasks, d=args.d, tile_ms=args.tile_ms,
+        overload=args.overload, zipf_a=args.zipf_a, seed=args.seed,
+    )
+    base = shed["results"]["baseline"]["metrics"]
+    best = shed["results"]["fleet_shed"]["metrics"]
+    print(
+        f"shed_vs_baseline: p99 {base['latency']['p99_s'] * 1e3:.1f}ms "
+        f"(1 host) -> {best['latency']['p99_s'] * 1e3:.1f}ms "
+        f"({args.replicas} hosts + shed), {shed['p99_speedup']:.1f}x; "
+        f"violations {base['slo_violations']} -> {best['slo_violations']}; "
+        f"shed {shed['results']['fleet_shed']['shed']}",
+        flush=True,
+    )
+    roll = run_rolling_swap(
+        requests=n // 3 if args.tiny else 1200, n_replicas=args.replicas,
+        batch=args.batch, tasks=args.tasks, d=args.d,
+        tile_ms=args.tile_ms, seed=args.seed + 1,
+    )
+    print(
+        f"rolling_swap: {roll['publishes']} publishes rolled over "
+        f"{args.replicas} replicas ({roll['rolled_installs']} installs, "
+        f"final v{roll['final_version']}); {roll['completed']} requests, "
+        f"{roll['version_regressions']} version regressions",
+        flush=True,
+    )
+    crash = run_crash_restart(
+        requests=n // 2 if args.tiny else 1500, n_replicas=args.replicas,
+        batch=args.batch, tasks=args.tasks, d=args.d,
+        tile_ms=args.tile_ms, seed=args.seed + 2,
+    )
+    print(
+        f"crash_restart: {crash['requeued']} requests re-pinned on "
+        f"failover; {crash['completed']} done + {crash['expired']} expired "
+        f"= {crash['admitted']} admitted, {crash['lost']} lost",
+        flush=True,
+    )
+
+    rows = [shed, roll, crash]
+    check(rows)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -428,6 +428,61 @@ class DMTRLEstimator:
         self._model_refs.append(weakref.ref(scheduler))
         return scheduler
 
+    def serving_fleet(
+        self,
+        n_replicas: int = 2,
+        batch: int = 32,
+        *,
+        slo_s: Optional[float] = None,
+        policy: str = "edf",
+        max_queue: Optional[int] = None,
+        clock=None,
+        tile_cost_s: Optional[float] = None,
+        spill_depth: Optional[int] = None,
+    ):
+        """A ``FleetRouter`` over ``n_replicas`` fresh scheduler replicas
+        (serve/fleet.py), each wrapping its own scoring engine over the
+        fitted model — the multi-host mirror of ``serving_scheduler``.
+
+        Only the ROUTER subscribes to this estimator: a later
+        ``partial_fit`` pushes new weights through the router's rolling
+        ``publish_weights`` (one replica per router step, monotonic reads
+        preserved), never to replicas individually — direct per-replica
+        pushes would restamp versions divergently and break the fleet's
+        shared version space.  ``slo_s`` doubles as the router's shed
+        budget for deadline-less requests; give ``tile_cost_s`` to enable
+        backlog-estimate shedding.
+        """
+        self._check_fitted()
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        from ..serve.fleet import FleetRouter
+        from ..serve.mtl import MTLScoringEngine
+        from ..serve.scheduler import ContinuousBatchingScheduler
+
+        snap = self.model_snapshot()
+        kwargs = dict(slo_s=slo_s, policy=policy, max_queue=max_queue)
+        if clock is not None:
+            kwargs["clock"] = clock
+        replicas = []
+        for _ in range(n_replicas):
+            engine = MTLScoringEngine(
+                self.W_,
+                batch=batch,
+                classify=self._loss.is_classification,
+                version=self._model_version,
+                sigma=snap.sigma,
+            )
+            replicas.append(ContinuousBatchingScheduler(engine, **kwargs))
+        router = FleetRouter(
+            replicas,
+            slo_s=slo_s,
+            tile_cost_s=tile_cost_s,
+            spill_depth=spill_depth,
+        )
+        self._model_refs.append(weakref.ref(router))
+        return router
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         state = "fitted" if self._fitted else "unfitted"
         return (

@@ -385,12 +385,31 @@ class Transport:
 
             transport.subscribe(scheduler.publish_weights)
 
-        hot-swaps live training commits into a serving queue. Callbacks
-        run on the installing thread (under the server lock for host
-        members): keep them quick and NEVER call back into the transport.
+        hot-swaps live training commits into a serving queue, and a
+        ``serve.fleet.FleetRouter`` is a drop-in SECOND subscriber tier:
+
+            transport.subscribe(router.publish_weights)
+
+        rolls every install across a whole replica fleet (one replica per
+        router step) while the router's per-client tokens keep reads
+        monotonic mid-roll. Callbacks run on the installing thread (under
+        the server lock for host members): keep them quick and NEVER call
+        back into the transport.
         """
         self._model_subscribers.append(callback)
         return callback
+
+    def unsubscribe(self, callback: Callable) -> bool:
+        """Deregister a ``subscribe``d callback (identity match, first
+        occurrence). Returns True when removed, False when the callback
+        was not registered — so tearing down a serving tier (a drained
+        scheduler, a decommissioned fleet router) is an idempotent
+        operation, not an error path."""
+        try:
+            self._model_subscribers.remove(callback)
+            return True
+        except ValueError:
+            return False
 
     def _notify_model(self, W: Array, sigma) -> None:
         self._model_version += 1

@@ -12,11 +12,13 @@ _SCHED = {
     "ModelSnapshot",
     "QueueFull",
     "ServeRequest",
+    "SubmitOutcome",
     "VirtualClock",
 }
 _METRICS = {"LatencyHistogram", "ServingMetrics"}
+_FLEET = {"ClientToken", "FleetRouter", "ReplicaHandle"}
 
-__all__ = sorted(_LM | _MTL | _SCHED | _METRICS)
+__all__ = sorted(_LM | _MTL | _SCHED | _METRICS | _FLEET)
 
 
 def __getattr__(name):
@@ -36,4 +38,8 @@ def __getattr__(name):
         from . import metrics
 
         return getattr(metrics, name)
+    if name in _FLEET:
+        from . import fleet
+
+        return getattr(fleet, name)
     raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

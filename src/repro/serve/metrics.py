@@ -77,6 +77,37 @@ class LatencyHistogram:
             return 0.0
         return float(np.percentile(np.asarray(self._samples), q))
 
+    def merge(self, *others: "LatencyHistogram") -> "LatencyHistogram":
+        """Combine this histogram with ``others`` into a NEW histogram
+        (the inputs are untouched) — per-replica latency distributions
+        roll up into one fleet-level view, and multi-run bench records
+        aggregate the same way.
+
+        Counts, sums, maxima and bucket rows merge exactly.  Percentiles
+        merge from the retained samples: every input is first decimated to
+        the coarsest stride among the inputs (strides are powers of two,
+        so the decimation is exact), keeping each input's samples a
+        uniform-stride subsample of its observations — the same guarantee
+        a single over-full histogram gives — then the merged reservoir
+        decimates again if it exceeds ``max_samples``.
+        """
+        hists = (self,) + tuple(others)
+        out = LatencyHistogram(max_samples=self.max_samples)
+        out._seen = sum(h._seen for h in hists)
+        out._sum = sum(h._sum for h in hists)
+        out._max = max(h._max for h in hists)
+        out.counts = np.sum([h.counts for h in hists], axis=0)
+        stride = max(h._stride for h in hists)
+        samples: List[float] = []
+        for h in hists:
+            samples.extend(h._samples[:: stride // h._stride])
+        out._stride = stride
+        out._samples = samples
+        while len(out._samples) > out.max_samples:
+            out._samples = out._samples[::2]
+            out._stride *= 2
+        return out
+
     def buckets(self) -> List[Dict[str, float]]:
         """Non-cumulative ``{"le": bound, "count": n}`` rows (last row has
         ``le=inf``); only non-empty buckets are emitted."""
@@ -203,6 +234,40 @@ class ServingMetrics:
     def observe_queue_depth(self, depth: int) -> None:
         self.queue_depth = int(depth)
         self.queue_depth_max = max(self.queue_depth_max, int(depth))
+
+    # -- fleet rollup -------------------------------------------------------
+    def merge(self, *others: "ServingMetrics") -> "ServingMetrics":
+        """Roll this object and ``others`` up into ONE new ServingMetrics
+        (inputs untouched): counters and per-task rows sum, latency/ttft
+        histograms merge from retained samples (``LatencyHistogram.merge``),
+        queue-depth high-water is the max across queues, ``last_version``
+        the newest.  The merged elapsed time is the MAX of the inputs'
+        elapsed times frozen at merge time — replicas serve the same
+        wall/virtual window in parallel, so fleet throughput is total
+        completions over that shared window, not over the sum.
+        """
+        all_m = (self,) + tuple(others)
+        out = ServingMetrics(slo_s=self.slo_s, clock=self._clock)
+        # freeze elapsed at merge time: rollups are point-in-time records
+        elapsed = max(m.elapsed_s() for m in all_m)
+        out._t0 = self._clock() - elapsed
+        out.latency = self.latency.merge(*(m.latency for m in others))
+        out.ttft = self.ttft.merge(*(m.ttft for m in others))
+        for field in (
+            "decode_steps", "decode_occupied", "decode_slots", "submitted",
+            "completed", "rejected", "expired", "slo_violations", "swaps",
+            "queue_depth", "tiles", "tile_slots", "tile_filled",
+        ):
+            setattr(out, field, sum(getattr(m, field) for m in all_m))
+        out.queue_depth_max = max(m.queue_depth_max for m in all_m)
+        versions = [m.last_version for m in all_m if m.last_version is not None]
+        out.last_version = max(versions) if versions else None
+        for m in all_m:
+            for task, row in m.per_task.items():
+                dst = out.per_task.setdefault(task, _task_row())
+                for k, v in row.items():
+                    dst[k] += v
+        return out
 
     # -- derived ------------------------------------------------------------
     def elapsed_s(self) -> float:

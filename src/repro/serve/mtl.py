@@ -241,6 +241,24 @@ class MTLScoringEngine:
             .compile()
         )
 
+    def adopt_warmup(self, other: "MTLScoringEngine") -> bool:
+        """Share a sibling engine's warm AOT executable instead of
+        recompiling: homogeneous fleet replicas (same batch, same W
+        shape/dtype) serve the identical fixed-shape step, so ONE compile
+        warms the whole fleet (``FleetRouter.warmup``). Returns False —
+        and leaves this engine untouched — when the donor is cold or the
+        shapes differ (caller falls back to ``warmup()``)."""
+        if (
+            other._step_exe is None
+            or other.batch != self.batch
+            or other.W.shape != self.W.shape
+            or other._step_exe_dtype != self.W.dtype
+        ):
+            return False
+        self._step_exe = other._step_exe
+        self._step_exe_dtype = other._step_exe_dtype
+        return True
+
     # -- validation (THE single point: every entry path lands here) ---------
     def _validate_batch(
         self, X, tasks

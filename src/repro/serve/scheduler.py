@@ -66,7 +66,8 @@ class ServeRequest:
 
     ``arrival_s``/``deadline_s``/``finish_s`` are absolute times on the
     scheduler's clock; ``deadline_s`` is optional (None = best effort).
-    ``status`` walks new -> queued -> done | expired; ``snapshot_version``
+    ``status`` walks new -> queued -> done | expired (| shed, when a
+    ``serve.fleet.FleetRouter`` rejects at the door); ``snapshot_version``
     records the model version the request was scored against.
     """
 
@@ -96,27 +97,55 @@ class QueueFull(RuntimeError):
     """Raised by ``submit`` when the scheduler's bounded queue is full."""
 
 
+@dataclasses.dataclass(frozen=True)
+class SubmitOutcome:
+    """Per-request admission result of a batch submit or a fleet routing
+    decision.  ``admitted`` requests are queued somewhere; rejects carry a
+    ``reason`` (``"queue_full"`` | ``"expired"`` | ``"shed"`` |
+    ``"no_replica"``).  Behind a ``serve.fleet.FleetRouter``, ``replica``
+    names the replica whose queue admitted the request."""
+
+    request: ServeRequest
+    admitted: bool
+    reason: Optional[str] = None
+    replica: Optional[int] = None
+
+
 class VirtualClock:
     """Deterministic injectable scheduler clock (``clock=VirtualClock()``).
 
     Tests, the load bench and simulated-time demos advance it explicitly;
     latency/throughput metrics then measure virtual seconds exactly the
-    way they measure wall seconds.
+    way they measure wall seconds.  Thread-safe: fleet simulations share
+    ONE clock between a router, N replica schedulers and trainer threads,
+    so reads and advances are serialized under a lock.  Time never runs
+    backwards — ``advance`` rejects negative steps and ``advance_to``
+    rejects targets earlier than the current time.
     """
 
     def __init__(self, t: float = 0.0):
-        self.t = float(t)
+        self._t = float(t)
+        self._lock = threading.Lock()
 
     def __call__(self) -> float:
-        return self.t
+        with self._lock:
+            return self._t
 
     def advance(self, dt: float) -> None:
         if dt < 0:
             raise ValueError(f"dt must be >= 0, got {dt}")
-        self.t += float(dt)
+        with self._lock:
+            self._t += float(dt)
 
     def advance_to(self, t: float) -> None:
-        self.t = max(self.t, float(t))
+        t = float(t)
+        with self._lock:
+            if t < self._t:
+                raise ValueError(
+                    f"advance_to target {t} is earlier than the current "
+                    f"time {self._t}; virtual time never runs backwards"
+                )
+            self._t = t
 
 
 _POLICIES = ("edf", "fifo")
@@ -238,8 +267,81 @@ class ContinuousBatchingScheduler:
 
     def submit_many(
         self, reqs: Sequence[ServeRequest], *, deadline_s: Optional[float] = None
-    ) -> List[ServeRequest]:
-        return [self.submit(r, deadline_s=deadline_s) for r in reqs]
+    ) -> List[SubmitOutcome]:
+        """Admit a batch: one ``SubmitOutcome`` per request, in order.
+
+        Unlike ``submit``, a full queue does NOT raise — the offending
+        request is reported as ``admitted=False, reason="queue_full"`` and
+        the REST of the batch is still attempted (a mid-batch ``QueueFull``
+        used to silently drop the remainder), so callers — and the fleet
+        router — can retry or shed each reject deterministically.
+        """
+        out: List[SubmitOutcome] = []
+        for r in reqs:
+            try:
+                r = self.submit(r, deadline_s=deadline_s)
+            except QueueFull:
+                out.append(
+                    SubmitOutcome(request=r, admitted=False, reason="queue_full")
+                )
+                continue
+            if r.status == "expired":
+                out.append(
+                    SubmitOutcome(request=r, admitted=False, reason="expired")
+                )
+            else:
+                out.append(SubmitOutcome(request=r, admitted=True))
+        return out
+
+    # -- fleet failover hooks (serve/fleet.py) ------------------------------
+    def drain_queue(self) -> List[ServeRequest]:
+        """Remove and return every queued request, stamps intact.
+
+        The fleet router calls this on a replica it just marked dead: the
+        backlog (including any tile ``step`` re-queued on the engine
+        failure) is re-pinned onto surviving replicas via ``requeue``.
+        """
+        with self._lock:
+            drained, self._queue = self._queue, []
+            self.metrics.observe_queue_depth(0)
+            return drained
+
+    def requeue(self, reqs: Sequence[ServeRequest]) -> List[ServeRequest]:
+        """Re-admit requests ALREADY admitted once (fleet failover path).
+
+        Arrival/deadline stamps survive (latency keeps counting from the
+        ORIGINAL arrival), there is no re-validation and no second
+        ``on_submit`` count — the request was counted at the replica that
+        first admitted it.  Requests whose deadline passed in the meantime
+        expire here (counted against THIS queue); the bounded queue still
+        applies (``QueueFull`` admits none of the batch).  Returns the
+        requests actually queued.
+        """
+        reqs = list(reqs)
+        if not reqs:
+            return []
+        with self._lock:
+            now = self.clock()
+            live: List[ServeRequest] = []
+            for r in reqs:
+                if r.deadline_s is not None and r.deadline_s < now:
+                    r.status = "expired"
+                    self.metrics.on_expired(self._task_key(r))
+                else:
+                    live.append(r)
+            if (
+                self.max_queue is not None
+                and len(self._queue) + len(live) > self.max_queue
+            ):
+                raise QueueFull(
+                    f"requeue of {len(live)} requests would exceed "
+                    f"max_queue={self.max_queue}"
+                )
+            for r in live:
+                r.status = "queued"
+            self._queue.extend(live)
+            self.metrics.observe_queue_depth(len(self._queue))
+        return live
 
     # -- model hot-swap -----------------------------------------------------
     def publish(self, snapshot: ModelSnapshot) -> int:

@@ -145,9 +145,15 @@ def test_scheduler_requeues_streaming_engine_failure():
     script = [[5, 6], [7, 8], [9, 2], [3, 4], [5, 6]]
     eng = _slot_scripted_engine(script)
     sched = ContinuousBatchingScheduler(eng, clock=VirtualClock(), policy="fifo")
-    reqs = sched.submit_many(
-        [Request(prompt=np.array([4], np.int32), max_new_tokens=3) for _ in range(2)]
-    )
+    reqs = [
+        o.request
+        for o in sched.submit_many(
+            [
+                Request(prompt=np.array([4], np.int32), max_new_tokens=3)
+                for _ in range(2)
+            ]
+        )
+    ]
     good_step = eng._step_call
 
     def boom(token, cache):

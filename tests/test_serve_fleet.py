@@ -1,0 +1,486 @@
+"""Fleet router: affinity, spill, shed, failover, rolling swap, monotonic
+reads, metrics rollup.
+
+Everything runs on a shared VIRTUAL clock (thread-safe since the fleet
+PR), so routing and queueing behavior is deterministic; the threaded
+monotonicity property test at the bottom exercises real concurrency
+(producers interleaving publishes with serving) with a version-recording
+fake engine — no JAX in the hot loop.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    ClientToken,
+    ContinuousBatchingScheduler,
+    FleetRouter,
+    LatencyHistogram,
+    ModelSnapshot,
+    MTLScoringEngine,
+    ScoreRequest,
+    ServingMetrics,
+    SubmitOutcome,
+    VirtualClock as ManualClock,
+)
+
+
+@pytest.fixture()
+def W():
+    return np.random.RandomState(0).randn(5, 12).astype(np.float32)
+
+
+def _requests(n, m=5, d=12, seed=1):
+    rng = np.random.RandomState(seed)
+    return [
+        ScoreRequest(task=int(rng.randint(m)), x=rng.randn(d).astype(np.float32))
+        for _ in range(n)
+    ]
+
+
+def _fleet(W, n=3, batch=4, clock=None, *, version=1, **router_kw):
+    clock = clock or ManualClock()
+    reps = [
+        ContinuousBatchingScheduler(
+            MTLScoringEngine(W, batch=batch, version=version), clock=clock
+        )
+        for _ in range(n)
+    ]
+    return FleetRouter(reps, **router_kw), reps, clock
+
+
+# -- virtual clock (satellite) ----------------------------------------------
+def test_virtual_clock_rejects_backwards_advance_to():
+    clk = ManualClock(5.0)
+    with pytest.raises(ValueError, match="earlier than the current time"):
+        clk.advance_to(4.0)
+    clk.advance_to(5.0)  # equal target is fine (idempotent)
+    with pytest.raises(ValueError, match=">= 0"):
+        clk.advance(-1.0)
+    assert clk() == 5.0
+
+
+def test_virtual_clock_thread_safe_advances():
+    clk = ManualClock()
+
+    def bump():
+        for _ in range(1000):
+            clk.advance(0.001)
+
+    ts = [threading.Thread(target=bump) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert clk() == pytest.approx(8.0)
+
+
+# -- submit_many outcomes (satellite bugfix) --------------------------------
+def test_submit_many_reports_midbatch_queue_full_and_continues(W):
+    """A full queue mid-batch must NOT silently drop the rest: each
+    request gets an outcome and later submittable ones still land."""
+    clk = ManualClock()
+    sched = ContinuousBatchingScheduler(
+        MTLScoringEngine(W, batch=4), clock=clk, max_queue=2
+    )
+    outs = sched.submit_many(_requests(4))
+    assert [o.admitted for o in outs] == [True, True, False, False]
+    assert {o.reason for o in outs if not o.admitted} == {"queue_full"}
+    assert sched.pending == 2
+    sched.step()
+    # queue drained: the remainder of a NEW batch is attempted per-request
+    outs2 = sched.submit_many(_requests(3, seed=2))
+    assert [o.admitted for o in outs2] == [True, True, False]
+    assert all(isinstance(o, SubmitOutcome) for o in outs2)
+
+
+def test_submit_many_reports_expired_outcomes(W):
+    clk = ManualClock()
+    sched = ContinuousBatchingScheduler(MTLScoringEngine(W, batch=4), clock=clk)
+    reqs = _requests(2)
+    reqs[1].deadline_s = -1.0  # absolute deadline already in the past
+    outs = sched.submit_many(reqs)
+    assert outs[0].admitted and not outs[1].admitted
+    assert outs[1].reason == "expired"
+    assert reqs[1].status == "expired"
+
+
+# -- metrics merge (satellite) ----------------------------------------------
+def test_latency_histogram_merge_exact_counts_and_percentiles():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    va = np.linspace(0.001, 0.1, 500)
+    vb = np.linspace(0.05, 0.5, 300)
+    for v in va:
+        a.observe(float(v))
+    for v in vb:
+        b.observe(float(v))
+    m = a.merge(b)
+    assert m.count == 800
+    assert m.counts.sum() == 800
+    assert a.count == 500 and b.count == 300  # inputs untouched
+    both = np.concatenate([va, vb])
+    assert m.summary()["mean_s"] == pytest.approx(both.mean())
+    assert m.summary()["max_s"] == pytest.approx(both.max())
+    # within max_samples the merge keeps every sample: percentiles exact
+    assert m.percentile(99.0) == pytest.approx(np.percentile(both, 99.0))
+
+
+def test_latency_histogram_merge_decimated_strides():
+    a = LatencyHistogram(max_samples=64)
+    b = LatencyHistogram(max_samples=64)
+    rng = np.random.RandomState(3)
+    for v in rng.rand(500):  # a overflows -> stride > 1
+        a.observe(float(v))
+    for v in rng.rand(10):
+        b.observe(float(v))
+    m = a.merge(b)
+    assert m.count == 510
+    assert len(m._samples) <= m.max_samples
+    assert m._stride >= a._stride
+    assert 0.0 < m.percentile(50.0) < 1.0
+
+
+def test_serving_metrics_merge_rolls_up_counters_and_tasks():
+    clk = ManualClock()
+    ms = [ServingMetrics(slo_s=0.1, clock=clk) for _ in range(3)]
+    clk.advance(2.0)
+    for i, m in enumerate(ms):
+        for _ in range(i + 1):
+            m.on_submit(task=i)
+            m.on_complete(i, 0.01 * (i + 1), False)
+        m.on_tile(i + 1, 4)
+    ms[1].on_expired(task=1)
+    ms[2].on_swap(7)
+    ms[0].observe_queue_depth(5)
+    out = ms[0].merge(ms[1], ms[2])
+    assert out.submitted == 6 and out.completed == 6
+    assert out.expired == 1 and out.slo_violations == 1
+    assert out.swaps == 1 and out.last_version == 7
+    assert out.queue_depth_max == 5
+    assert out.latency.count == 6
+    assert out.per_task[1]["expired"] == 1
+    assert out.per_task[2]["completed"] == 3
+    # elapsed freezes at merge: fleet throughput uses the SHARED window
+    assert out.elapsed_s() == pytest.approx(2.0)
+    assert out.throughput() == pytest.approx(3.0)
+    for m in ms:  # inputs untouched
+        assert m.swaps in (0, 1)
+
+
+# -- affinity + spill --------------------------------------------------------
+def test_affinity_is_deterministic_and_sticky(W):
+    router, reps, _ = _fleet(W)
+    homes = {t: router.home_of(t) for t in range(5)}
+    # same ring, same placement — across router instances too
+    router2, _, _ = _fleet(W)
+    assert homes == {t: router2.home_of(t) for t in range(5)}
+    for t, rid in homes.items():
+        r = ScoreRequest(task=t, x=np.zeros(12, np.float32))
+        out = router.submit(r)
+        assert out.admitted and out.replica == rid
+
+
+def test_backlogged_home_spills_to_least_loaded(W):
+    router, reps, _ = _fleet(W, spill_depth=3)
+    t = 0
+    home = router.home_of(t)
+    for _ in range(3):
+        assert router.submit(
+            ScoreRequest(task=t, x=np.zeros(12, np.float32))
+        ).replica == home
+    out = router.submit(ScoreRequest(task=t, x=np.zeros(12, np.float32)))
+    assert out.admitted and out.replica != home
+    assert router.counters["spills"] == 1
+
+
+# -- shed --------------------------------------------------------------------
+def test_router_sheds_when_every_candidate_exceeds_budget(W):
+    router, reps, clock = _fleet(W, slo_s=0.05, tile_cost_s=0.02)
+    # 8 pending per replica -> est wait (8//4 + 1) * 20ms = 60ms > 50ms
+    for _ in range(24):
+        out = router.submit(_requests(1, seed=7)[0])
+        assert out.admitted
+    shed = router.submit(_requests(1, seed=8)[0])
+    assert not shed.admitted and shed.reason == "shed"
+    assert shed.request.status == "shed"
+    assert router.counters["shed"] == 1
+    # shed is router back-pressure, NOT a replica SLO violation
+    assert router.metrics().slo_violations == 0
+    # an explicit roomy deadline overrides the slo budget -> admitted
+    ok = router.submit(_requests(1, seed=9)[0], deadline_s=10.0)
+    assert ok.admitted
+
+
+def test_router_reports_queue_full_instead_of_raising(W):
+    clock = ManualClock()
+    reps = [
+        ContinuousBatchingScheduler(
+            MTLScoringEngine(W, batch=4), clock=clock, max_queue=1
+        )
+        for _ in range(2)
+    ]
+    router = FleetRouter(reps)
+    outs = [router.submit(r) for r in _requests(3, seed=4)]
+    assert [o.admitted for o in outs] == [True, True, False]
+    assert outs[2].reason == "queue_full"
+
+
+# -- rolling swap + monotonic reads -----------------------------------------
+def test_publish_rolls_one_replica_per_step(W):
+    router, reps, clock = _fleet(W)
+    W2 = W * 2.0
+    v = router.publish_weights(W2)
+    assert v == 2
+    # one replica converges immediately, one more per step
+    assert sorted(r.version for r in reps) == [1, 1, 2]
+    assert router.roll_pending == 2
+    router.step()
+    assert sorted(r.version for r in reps) == [1, 2, 2]
+    router.step()
+    assert sorted(r.version for r in reps) == [2, 2, 2]
+    assert router.roll_pending == 0
+
+
+def test_client_token_keeps_reads_monotonic_mid_roll(W):
+    router, reps, clock = _fleet(W)
+    tok = router.session()
+    router.publish_weights(W * 2.0)  # v2 on exactly one replica
+    fresh = [r for r in reps if r.version == 2]
+    assert len(fresh) == 1
+    # client observes v2; its next submit may only land on the fresh one
+    tok.observe(2)
+    for _ in range(6):
+        out = router.submit(_requests(1, seed=5)[0], client=tok)
+        assert out.admitted and reps[out.replica].version == 2
+    done = router.step()
+    assert all(r.snapshot_version >= 2 for r in done)
+
+
+def test_pull_forward_when_no_candidate_satisfies_token(W):
+    router, reps, clock = _fleet(W)
+    router.publish_weights(W * 2.0)  # v2 on exactly one replica
+    (fresh_id,) = [i for i, r in enumerate(reps) if r.version == 2]
+    tok = router.session()
+    tok.observe(2)
+    router.fail_replica(fresh_id)  # the only v2 holder dies mid-roll
+    out = router.submit(_requests(1, seed=6)[0], client=tok)
+    assert out.admitted and out.replica != fresh_id
+    assert reps[out.replica].version == 2  # latest was pulled forward
+    assert router.counters["pull_forwards"] == 1
+
+
+def test_publish_through_router_owns_the_version_space(W):
+    router, reps, clock = _fleet(W)
+    # an external counter behind the fleet's gets restamped, never ignored
+    v = router.publish_weights(W * 3.0, version=1)
+    assert v == 2
+    v = router.publish_weights(W * 4.0, version=100)
+    assert v == 100
+    v = router.publish(ModelSnapshot(version=5, W=W * 5.0))
+    assert v == 101
+    with pytest.raises(ValueError, match="shape"):
+        router.publish_weights(np.zeros((2, 2), np.float32))
+
+
+# -- failover + restore ------------------------------------------------------
+def test_failover_requeues_backlog_onto_survivors(W):
+    router, reps, clock = _fleet(W)
+    reqs = _requests(9, seed=8)
+    outs = [router.submit(r) for r in reqs]
+    victim = outs[0].replica
+    stranded = reps[victim].pending
+    assert stranded > 0
+    moved = router.fail_replica(victim)
+    assert moved == stranded and reps[victim].pending == 0
+    assert router.pending == 9  # nothing lost
+    done = []
+    while router.pending:
+        done.extend(router.step())
+    assert len(done) == 9 and all(r.status == "done" for r in reqs)
+    # completions carry real scores from the surviving replicas
+    assert all(r.score is not None for r in reqs)
+
+
+def test_step_detects_crashing_engine_and_fails_over(W):
+    class Boom:
+        def __init__(self, inner):
+            self.inner, self.crashed = inner, False
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+        def run_tile(self, reqs, snapshot):
+            if self.crashed:
+                raise RuntimeError("host down")
+            self.inner.run_tile(reqs, snapshot)
+
+    clock = ManualClock()
+    engines = [Boom(MTLScoringEngine(W, batch=4, version=1)) for _ in range(3)]
+    reps = [
+        ContinuousBatchingScheduler(e, clock=clock) for e in engines
+    ]
+    router = FleetRouter(reps)
+    reqs = _requests(12, seed=9)
+    for r in reqs:
+        assert router.submit(r).admitted
+    victim = next(i for i, rep in enumerate(reps) if rep.pending)
+    engines[victim].crashed = True
+    while router.pending:
+        router.step()
+    assert not router.replica(victim).up
+    assert router.counters["failovers"] == 1
+    assert all(r.status == "done" for r in reqs)  # re-pinned and served
+    engines[victim].crashed = False
+    router.restore_replica(victim)
+    assert router.replica(victim).up
+    assert router.replica(victim).restarts == 1
+
+
+def test_restore_catches_replica_up_to_fleet_version(W):
+    router, reps, clock = _fleet(W)
+    router.fail_replica(1)
+    router.publish_weights(W * 2.0)
+    while router.roll_pending:
+        router.step()
+    assert reps[1].version == 1  # down: the roll skipped it
+    router.restore_replica(1)
+    assert reps[1].version == router.version  # caught up BEFORE rejoining
+
+
+def test_all_replicas_down_sheds_with_no_replica(W):
+    router, reps, clock = _fleet(W, n=2)
+    router.fail_replica(0)
+    router.fail_replica(1)
+    out = router.submit(_requests(1, seed=3)[0])
+    assert not out.admitted and out.reason == "no_replica"
+
+
+# -- fleet metrics + estimator constructor ----------------------------------
+def test_fleet_metrics_rollup_and_summary(W):
+    router, reps, clock = _fleet(W)
+    for r in _requests(10, seed=11):
+        router.submit(r)
+    while router.pending:
+        router.step()
+        clock.advance(0.01)
+    m = router.metrics()
+    assert m.completed == 10
+    assert m.completed == sum(rep.metrics.completed for rep in reps)
+    s = router.summary()
+    assert s["replicas"] == 3 and s["up"] == 3
+    assert s["fleet"]["completed"] == 10
+    assert len(s["per_replica"]) == 3
+    assert s["router"]["admitted"] == 10
+
+
+def test_estimator_serving_fleet_constructor_and_rolling_push():
+    from repro.core import DMTRLEstimator
+    from repro.data.synthetic import synthetic
+
+    sp = synthetic(1, m=4, d=16, n_train_avg=30, n_test_avg=10, seed=0)
+    est = DMTRLEstimator(
+        loss="hinge", lam=1e-4, outer_iters=1, rounds=2, local_iters=16,
+        block_size=16, seed=0,
+    ).fit(sp.train)
+    clock = ManualClock()
+    router = est.serving_fleet(n_replicas=2, batch=4, clock=clock)
+    assert router.n_replicas == 2
+    v0 = router.version
+    est.partial_fit(sp.train)  # pushes through the ROUTER (rolling)
+    assert router.version > v0
+    r = ScoreRequest(task=0, x=np.asarray(sp.test.x[0, 0]))
+    out = router.submit(r)
+    assert out.admitted
+    router.run_until_idle()
+    assert r.status == "done" and r.score is not None
+
+
+def test_fleet_warmup_shares_compiled_step(W):
+    router, reps, _ = _fleet(W)
+    router.warmup()
+    exes = [rep.engine._step_exe for rep in reps]
+    assert all(e is not None for e in exes)
+    assert exes[0] is exes[1] is exes[2]  # one compile, shared
+
+
+# -- threaded monotonic-read property test (satellite) -----------------------
+class VersionEcho:
+    """Minimal adapter engine: 'scores' a request by recording the
+    snapshot version it ran against. Keeps the threaded property test
+    free of JAX (pure queue/version semantics under contention)."""
+
+    batch = 4
+
+    def __init__(self, version=1):
+        self._snap = ModelSnapshot(version=version, W=None)
+
+    def admit(self, r):
+        pass
+
+    def task_key(self, r):
+        return r.task
+
+    def model_snapshot(self):
+        return self._snap
+
+    def run_tile(self, reqs, snapshot):
+        for r in reqs:
+            r.score = float(snapshot.version)
+
+
+def test_threaded_publish_storm_never_regresses_client_reads():
+    """N producer threads interleave publish/publish_weights across the
+    fleet while clients run sequential sessions: no completed request may
+    record a snapshot_version below what its client already observed."""
+    clock = ManualClock()
+    reps = [
+        ContinuousBatchingScheduler(VersionEcho(), clock=clock)
+        for _ in range(3)
+    ]
+    router = FleetRouter(reps)
+    errors = []
+
+    def producer(k):
+        try:
+            rng = np.random.RandomState(100 + k)
+            for i in range(300):
+                if i % 3 == k % 2:
+                    router.publish_weights(None, version=int(rng.randint(1, 50)))
+                else:
+                    router.publish(ModelSnapshot(version=i, W=None))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    def client(seed):
+        try:
+            tok = router.session()
+            rng_c = np.random.RandomState(seed)
+            for _ in range(60):
+                r = ScoreRequest(task=int(rng_c.randint(5)),
+                                 x=np.zeros(1, np.float32))
+                floor = tok.min_version
+                out = router.submit(r, client=tok)
+                assert out.admitted, out
+                while r.status != "done":
+                    router.step()
+                assert r.snapshot_version >= floor, (
+                    f"monotonic read violated: served v{r.snapshot_version} "
+                    f"after the client observed v{floor}"
+                )
+                # the session observes its own completion before the next
+                # submit — the sequential regime the guarantee covers
+                tok.observe(r.snapshot_version)
+        except Exception as e:
+            errors.append(e)
+
+    producers = [
+        threading.Thread(target=producer, args=(k,)) for k in range(4)
+    ]
+    clients = [threading.Thread(target=client, args=(s,)) for s in range(6)]
+    for t in producers + clients:
+        t.start()
+    for t in producers + clients:
+        t.join()
+    assert not errors, errors[0]
+    assert router.metrics().completed >= 6 * 60

@@ -244,7 +244,9 @@ def test_scheduler_picks_up_engine_pushed_snapshot(W):
     eng = MTLScoringEngine(W, batch=4, version=1)
     sched = ContinuousBatchingScheduler(eng, clock=ManualClock())
     eng.swap(W2)  # push lands on the engine, not the scheduler
-    (r,) = sched.submit_many(_requests(1, seed=12))
+    (out,) = sched.submit_many(_requests(1, seed=12))
+    r = out.request
+    assert out.admitted
     sched.step()
     assert r.snapshot_version == 2 and sched.version == 2
     assert r.score == pytest.approx(float(r.x @ W2[r.task]), abs=1e-5)
@@ -264,7 +266,8 @@ def test_engine_push_survives_scheduler_counter_running_ahead(W):
         sched.publish_weights(W2)
     assert sched.version == 6 and eng.version == 1
     eng.swap(W3)  # engine-side push: version 2, numerically behind 6
-    (r,) = sched.submit_many(_requests(1, seed=16))
+    (out,) = sched.submit_many(_requests(1, seed=16))
+    r = out.request
     sched.step()
     assert r.snapshot_version == 7  # restamped into the scheduler space
     assert r.score == pytest.approx(float(r.x @ W3[r.task]), abs=1e-5)
@@ -273,7 +276,7 @@ def test_engine_push_survives_scheduler_counter_running_ahead(W):
 def test_failed_tile_requeues_requests(W):
     eng = MTLScoringEngine(W, batch=4)
     sched = ContinuousBatchingScheduler(eng, clock=ManualClock())
-    reqs = sched.submit_many(_requests(3, seed=13))
+    reqs = [o.request for o in sched.submit_many(_requests(3, seed=13))]
 
     def boom(tile, snapshot):
         raise RuntimeError("device fell over")
