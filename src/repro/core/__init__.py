@@ -39,6 +39,20 @@ from .transport import (
     get_transport,
     register_transport,
 )
+from .gossip import (
+    GossipTransport,
+    build_adjacency,
+    mixing_matrix,
+    spectral_gap,
+)
+from .wire import (
+    Codec,
+    Encoded,
+    ErrorFeedback,
+    TransportProtocolError,
+    available_codecs,
+    get_codec,
+)
 from .engines import (
     Engine,
     EngineResult,
@@ -145,6 +159,16 @@ __all__ = [
     "available_transports",
     "get_transport",
     "register_transport",
+    "GossipTransport",
+    "build_adjacency",
+    "mixing_matrix",
+    "spectral_gap",
+    "Codec",
+    "Encoded",
+    "ErrorFeedback",
+    "TransportProtocolError",
+    "available_codecs",
+    "get_codec",
     "Engine",
     "EngineResult",
     "available_engines",
@@ -188,4 +212,6 @@ __all__ = [
     "sigma_view",
     "solver_backends",
     "transport",
+    "gossip",
+    "wire",
 ]

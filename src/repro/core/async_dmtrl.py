@@ -115,6 +115,10 @@ class AsyncOptions:
     n_workers: Optional[int] = None  # host-transport worker count
     staleness_budget: Optional[float] = None  # tau="auto" cost target:
     #               narrow when windowed mean commit staleness exceeds it
+    topology: Union[str, tuple] = "complete"  # gossip neighbor graph
+    #               ("ring" | "torus" | "complete" | explicit adjacency)
+    codec: str = "none"  # wire codec for the (delta_w, Sigma) messages
+    #               ("none" | "bf16" | "int8"; core.wire registry)
 
     def __post_init__(self):
         validate_async_fields(
@@ -125,6 +129,8 @@ class AsyncOptions:
             transport=self.transport,
             n_workers=self.n_workers,
             staleness_budget=self.staleness_budget,
+            topology=self.topology,
+            codec=self.codec,
         )
 
     def merge_into(self, cfg: DMTRLConfig) -> DMTRLConfig:
@@ -137,6 +143,8 @@ class AsyncOptions:
             transport=self.transport,
             n_workers=self.n_workers,
             staleness_budget=self.staleness_budget,
+            topology=self.topology,
+            codec=self.codec,
         )
 
 
@@ -178,6 +186,8 @@ def fit_async(
         transport=cfg.transport,
         n_workers=cfg.n_workers,
         staleness_budget=cfg.staleness_budget,
+        topology=getattr(cfg, "topology", "complete"),
+        codec=getattr(cfg, "codec", "none"),
     )
     reg = omega_reg.resolve_regularizer(cfg, regularizer, m=raw.m)
     spec = get_transport(cfg.transport)

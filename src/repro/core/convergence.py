@@ -141,6 +141,12 @@ def staleness_summary(history: Dict[str, np.ndarray]) -> Dict[str, object]:
     synchronous engine's degenerate tau=0 commits record through
     ``transport.record_receipt`` into the same history keys.
 
+    Gossip histories additionally carry per-EDGE staleness events
+    (``e_src/e_dst/e_stal/e_tick``: at each neighbor exchange, how many
+    completed rounds the two endpoints disagreed by); when present the
+    summary gains ``n_exchanges`` / ``max_edge_staleness`` /
+    ``mean_edge_staleness`` / ``per_edge_mean`` keyed by ``(src, dst)``.
+
     Staleness of a contribution = server commits between its snapshot and
     its application; lag = rounds it ran ahead of the slowest worker. Under
     tau=0 with homogeneous delays both are 0 for every commit (the bulk-
@@ -158,7 +164,7 @@ def staleness_summary(history: Dict[str, np.ndarray]) -> Dict[str, object]:
     per_worker = {
         int(g): float(stal[workers == g].mean()) for g in np.unique(workers)
     }
-    return {
+    out = {
         "n_commits": int(stal.size),
         "max_staleness": float(stal.max()),
         "mean_staleness": float(stal.mean()),
@@ -166,6 +172,24 @@ def staleness_summary(history: Dict[str, np.ndarray]) -> Dict[str, object]:
         "max_lag": float(lag.max()),
         "per_worker_mean": per_worker,
     }
+    e_stal = np.asarray(history.get("e_stal", []), np.float64)
+    if e_stal.size:
+        e_src = np.asarray(history["e_src"], np.int64)
+        e_dst = np.asarray(history["e_dst"], np.int64)
+        edges = np.stack([e_src, e_dst], axis=1)
+        per_edge = {
+            (int(s), int(d)): float(
+                e_stal[(e_src == s) & (e_dst == d)].mean()
+            )
+            for s, d in np.unique(edges, axis=0)
+        }
+        out.update(
+            n_exchanges=int(e_stal.size),
+            max_edge_staleness=float(e_stal.max()),
+            mean_edge_staleness=float(e_stal.mean()),
+            per_edge_mean=per_edge,
+        )
+    return out
 
 
 def effective_gap_curve(

@@ -47,6 +47,30 @@ def validate_tau(tau) -> None:
         raise ValueError(f"tau must be >= 0, got {tau}")
 
 
+def validate_topology(topology) -> None:
+    """Eagerly reject malformed gossip topologies. Named topologies are
+    checked against the known set; an explicit adjacency must be a square
+    symmetric 0/1 matrix (connectivity is checked at transport setup,
+    where the worker count is known)."""
+    if isinstance(topology, str):
+        if topology not in ("ring", "torus", "complete"):
+            raise ValueError(
+                f"topology must be 'ring' | 'torus' | 'complete' or an "
+                f"explicit adjacency matrix, got {topology!r}"
+            )
+        return
+    adj = np.asarray(topology)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1] or adj.shape[0] < 1:
+        raise ValueError(
+            f"adjacency topology must be a square matrix, got shape "
+            f"{adj.shape}"
+        )
+    if not np.array_equal(adj, adj.T):
+        raise ValueError("adjacency topology must be symmetric")
+    if not np.isin(adj, (0, 1)).all():
+        raise ValueError("adjacency topology entries must be 0/1")
+
+
 def validate_async_fields(
     tau,
     tau_max,
@@ -55,6 +79,8 @@ def validate_async_fields(
     transport="simulated",
     n_workers=None,
     staleness_budget=None,
+    topology="complete",
+    codec="none",
 ) -> None:
     """Shared eager validation for DMTRLConfig (legacy surface) and
     AsyncOptions (the new home of these knobs)."""
@@ -62,6 +88,17 @@ def validate_async_fields(
     if not isinstance(transport, str):
         raise ValueError(
             f"transport must be a core.transport member name, got {transport!r}"
+        )
+    validate_topology(topology)
+    if not isinstance(codec, str):
+        raise ValueError(
+            f"codec must be a core.wire codec name, got {codec!r}"
+        )
+    from .wire import available_codecs  # local: wire is numpy-only
+
+    if codec not in available_codecs():
+        raise ValueError(
+            f"unknown wire codec {codec!r}; have {sorted(available_codecs())}"
         )
     if n_workers is not None and (
         not isinstance(n_workers, numbers.Integral)
@@ -157,6 +194,12 @@ class DMTRLConfig:
     #               derive from the mesh data axis (simulated always does)
     staleness_budget: Optional[float] = None  # tau="auto" cost target:
     #               narrow when windowed mean commit staleness exceeds it
+    topology: Union[str, tuple] = "complete"  # gossip neighbor graph:
+    #               "ring" | "torus" | "complete" or an explicit symmetric
+    #               0/1 adjacency (nested tuples); gossip transport only
+    codec: str = "none"  # wire codec for (delta_w, Sigma) messages,
+    #               resolved through core.wire: "none" | "bf16" | "int8";
+    #               host + gossip transports only
 
     def __post_init__(self):
         validate_async_fields(
@@ -167,6 +210,8 @@ class DMTRLConfig:
             transport=self.transport,
             n_workers=self.n_workers,
             staleness_budget=self.staleness_budget,
+            topology=self.topology,
+            codec=self.codec,
         )
         if self.omega_regularizer not in omega_reg.available_regularizers():
             raise ValueError(

@@ -55,6 +55,8 @@ _ASYNC_FIELDS = frozenset(
         "transport",
         "n_workers",
         "staleness_budget",
+        "topology",
+        "codec",
     }
 )
 _DIST_FIELDS = frozenset({"dist_block_hoisted", "gram_bf16"})

@@ -61,6 +61,15 @@ Members
                   localhost — the prerequisite step the ROADMAP names.
                   Trusted-local only: pickle framing is not an
                   authentication boundary.
+``gossip``        (``core/gossip.py``) serverless neighbor averaging over a
+                  configurable topology: per-node W replicas, Metropolis
+                  mixing at round boundaries; on a complete graph it
+                  matches the threaded server.
+
+Wire formats (``core/wire.py``): ``cfg.codec`` picks the snapshot/commit
+codec (``none`` / ``bf16`` / ``int8`` + error feedback) for the host
+transports and the gossip exchanges; the multiprocess frames carry a
+version byte so protocol skew raises ``TransportProtocolError``.
 
 The simulated member snapshots/commits whole worker groups as fused SPMD
 calls for efficiency (that is what makes it bit-reproducible and fast on a
@@ -70,6 +79,7 @@ protocol driver can run it one worker at a time (tested).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import pickle
 import socket
@@ -109,8 +119,19 @@ from .dmtrl import DMTRLConfig
 from .losses import get_loss
 from .sigma_view import SigmaView, maybe_dense
 from .solver_backends import get_backend
+from .wire import (
+    WIRE_VERSION,
+    Codec,
+    Encoded,
+    ErrorFeedback,
+    TransportProtocolError,
+    check_wire_version,
+    get_codec,
+)
 
 Array = jax.Array
+
+logger = logging.getLogger(__name__)
 
 # sleep pacing of one simulated delay tick for the host transports (so the
 # async_delays straggler schedules remain meaningful under real clocks)
@@ -143,12 +164,48 @@ class Snapshot:
     sigma_diag: Optional[Array] = None  # (m_loc,) view-mode Sigma diagonal
 
 
-def payload_nbytes(snap: Snapshot) -> int:
-    """Total array bytes one snapshot puts on the wire (bench metric)."""
+def payload_nbytes(snap: Snapshot, codec=None) -> int:
+    """Array bytes one snapshot puts on the wire (bench metric).
+
+    Without a codec this is the historical raw wire: every populated field
+    (W rows, Sigma rows/diag, the worker's alpha rows) at full precision.
+    With a codec (name or ``wire.Codec``) it is the steady-state
+    compressed wire: the ``(W, Sigma)`` payload encoded, and NO alpha —
+    under a codec the dual rows are worker-cached state shipped once at
+    init, not per-snapshot traffic (see DESIGN.md §13).
+    """
+    if codec is None or getattr(codec, "name", codec) == "none":
+        return sum(
+            int(np.asarray(a).nbytes)
+            for a in (
+                snap.W_rows, snap.sigma_rows, snap.alpha_rows, snap.sigma_diag
+            )
+            if a is not None
+        )
+    if not isinstance(codec, Codec):
+        codec = get_codec(codec)
     return sum(
-        int(np.asarray(a).nbytes)
-        for a in (snap.W_rows, snap.sigma_rows, snap.alpha_rows, snap.sigma_diag)
+        codec.encode(np.asarray(a)).nbytes
+        for a in (snap.W_rows, snap.sigma_rows, snap.sigma_diag)
         if a is not None
+    )
+
+
+def decode_snapshot_payload(payload: dict, codec: Codec) -> Snapshot:
+    """Worker-side decode of ``_HostServerTransport._encode_snapshot``'s
+    wire payload. ``alpha_rows`` is None when the server elided it (the
+    worker holds its own cached copy)."""
+    def dec(field):
+        enc = payload[field]
+        return None if enc is None else codec.decode(enc)
+
+    alpha = payload["alpha_rows"]
+    return Snapshot(
+        W_rows=dec("W_rows"),
+        sigma_rows=dec("sigma_rows"),
+        alpha_rows=None if alpha is None else np.asarray(alpha),
+        version=payload["version"],
+        sigma_diag=dec("sigma_diag"),
     )
 
 
@@ -420,8 +477,24 @@ class Transport:
         # subscribers (serve/scheduler.py publish_weights) treat it opaquely
         if not isinstance(sigma, SigmaView):
             sigma = np.asarray(sigma)
-        for cb in self._model_subscribers:
-            cb(W, sigma, self._model_version)
+        # per-subscriber isolation: one raising callback (a broken serving
+        # tier) must never unwind the Sigma-install path or starve the
+        # other subscribers — log it, drop it, keep installing
+        failed = []
+        for cb in list(self._model_subscribers):
+            try:
+                cb(W, sigma, self._model_version)
+            except Exception:
+                logger.exception(
+                    "transport %r: model subscriber %r raised at version "
+                    "%d; dropping it (installs continue)",
+                    self.name,
+                    cb,
+                    self._model_version,
+                )
+                failed.append(cb)
+        for cb in failed:
+            self.unsubscribe(cb)
 
     # -- driver lifecycle ---------------------------------------------------
     def setup(self, cfg, raw, *, mesh, axes, reg, init, track) -> None:
@@ -531,6 +604,19 @@ class SimulatedTransport(Transport):
     def setup(self, cfg, raw, *, mesh, axes, reg, init, track):
         if mesh is None:
             raise ValueError("the simulated transport needs a mesh")
+        codec = getattr(cfg, "codec", "none")
+        if codec != "none":
+            raise ValueError(
+                "transport='simulated' is the bit-parity anchor and has no "
+                f"wire; codec={codec!r} needs a host transport "
+                "('threaded' / 'multiprocess' / 'gossip')"
+            )
+        topology = getattr(cfg, "topology", "complete")
+        if not (isinstance(topology, str) and topology == "complete"):
+            raise ValueError(
+                "topology= is a gossip-transport option; transport="
+                "'simulated' has no neighbor graph (use transport='gossip')"
+            )
         G = _axis_size(mesh, axes.data)
         if cfg.n_workers is not None and cfg.n_workers != G:
             raise ValueError(
@@ -932,6 +1018,29 @@ class _HostServerTransport(Transport):
         self._shutdown = False  # set by close(); unparks gate waiters
         self._t0 = time.monotonic()
         self.p = 0
+        # --- wire codec (core/wire.py) ---------------------------------
+        topology = getattr(cfg, "topology", "complete")
+        if self.name in ("threaded", "multiprocess") and not (
+            isinstance(topology, str) and topology == "complete"
+        ):
+            raise ValueError(
+                f"topology= is a gossip-transport option; transport="
+                f"{self.name!r} is a star topology (use transport='gossip')"
+            )
+        self.codec: Codec = get_codec(getattr(cfg, "codec", "none"))
+        self._commit_ef = ErrorFeedback(self.codec)
+        self._alpha_cache: Dict[int, np.ndarray] = {}
+        self.wire_stats = {
+            "codec": self.codec.name,
+            "n_snapshots": 0,
+            "n_commits": 0,
+            "snapshot_bytes": 0,  # bytes actually shipped per snapshot
+            "commit_bytes": 0,  # bytes actually shipped per delta_w
+            "mix_bytes": 0,  # gossip neighbor-exchange bytes
+            "raw_snapshot_bytes": 0,  # what the none codec would have sent
+            "raw_commit_bytes": 0,
+            "raw_mix_bytes": 0,
+        }
 
     # -- protocol (all under the server condition variable) -----------------
     def _rows(self, worker):
@@ -1046,6 +1155,9 @@ class _HostServerTransport(Transport):
     def _install(self, sig, om):
         self.sigma, self.omega = sig, om
         self.W = self._w_from_alpha(self.alpha, self.sigma)
+        # W was just recomputed from exact (full-precision) alpha, so any
+        # pending quantization residual no longer refers to live state
+        self._commit_ef.reset()
         # the install must reach the NEXT snapshot, not wait for the next
         # floor advance: refresh the served boundary (matches the simulated
         # member, whose post-install starters read the live state)
@@ -1067,6 +1179,84 @@ class _HostServerTransport(Transport):
             if self.abort is None:
                 self.abort = exc
             self.cond.notify_all()
+
+    # -- wire codec (snapshot/commit serialization) -------------------------
+    def _encode_snapshot(self, worker: int, have_alpha: bool) -> dict:
+        """Take one snapshot and encode it for the wire.
+
+        ``(W, Sigma)`` fields go through the codec; the worker's alpha
+        rows are its own dual state — under a lossy codec they ship
+        exactly ONCE (``have_alpha=False``) and then live worker-side
+        (the worker replays its own ``eta * dalpha`` commits), under the
+        ``none`` codec they ship raw every time (the historical wire).
+        Updates ``wire_stats`` under the server lock.
+        """
+        snap = self.snapshot(worker)
+        raw = payload_nbytes(snap)
+        payload: dict = {"version": snap.version}
+        nb = 0
+        for field in ("W_rows", "sigma_rows", "sigma_diag"):
+            a = getattr(snap, field)
+            if a is None:
+                payload[field] = None
+                continue
+            enc = self.codec.encode(np.asarray(a))
+            payload[field] = enc
+            nb += enc.nbytes
+        ship_alpha = self.codec.name == "none" or not have_alpha
+        if ship_alpha:
+            alpha = np.asarray(snap.alpha_rows)
+            payload["alpha_rows"] = alpha
+            nb += int(alpha.nbytes)
+        else:
+            payload["alpha_rows"] = None
+        with self.lock:
+            self.wire_stats["n_snapshots"] += 1
+            self.wire_stats["raw_snapshot_bytes"] += raw
+            self.wire_stats["snapshot_bytes"] += nb
+        return payload
+
+    def wire_snapshot(self, worker: int) -> Snapshot:
+        """Snapshot as seen through the codec round-trip (the in-host
+        mirror of what a remote worker would decode off the socket)."""
+        have = self.codec.name != "none" and worker in self._alpha_cache
+        payload = self._encode_snapshot(worker, have_alpha=have)
+        snap = decode_snapshot_payload(payload, self.codec)
+        if snap.alpha_rows is None:
+            snap = dataclasses.replace(
+                snap, alpha_rows=self._alpha_cache[worker]
+            )
+        elif self.codec.name != "none":
+            self._alpha_cache[worker] = np.asarray(snap.alpha_rows)
+        return snap
+
+    def wire_commit(self, worker: int, rnd: int, delta) -> CommitReceipt:
+        """Commit through the codec: delta_w (``db``) is encoded with
+        per-worker error feedback and the server applies the DECODED
+        delta — exactly what a remote peer would receive. ``dalpha`` is
+        the worker's own dual state (shipped raw for the in-host server's
+        central bookkeeping; not part of the delta_w wire metric)."""
+        dalpha, db = delta
+        if self.codec.name == "none":
+            raw = int(np.asarray(db).nbytes)
+            with self.lock:
+                self.wire_stats["n_commits"] += 1
+                self.wire_stats["raw_commit_bytes"] += raw
+                self.wire_stats["commit_bytes"] += raw
+            return self.commit(worker, rnd, (dalpha, db))
+        enc = self._commit_ef.encode(("db", worker), np.asarray(db))
+        db_dec = jnp.asarray(self.codec.decode(enc))
+        if worker in self._alpha_cache:
+            # keep the worker-side alpha mirror exact: same f32 arithmetic
+            # as the server's alpha.at[rows].add(eta * dalpha)
+            self._alpha_cache[worker] = np.asarray(
+                self._alpha_cache[worker] + self.cfg.eta * np.asarray(dalpha)
+            )
+        with self.lock:
+            self.wire_stats["n_commits"] += 1
+            self.wire_stats["raw_commit_bytes"] += int(np.asarray(db).nbytes)
+            self.wire_stats["commit_bytes"] += enc.nbytes
+        return self.commit(worker, rnd, (dalpha, db_dec))
 
     # -- driver lifecycle ---------------------------------------------------
     def _begin_w_step(self, p):
@@ -1157,20 +1347,21 @@ class ThreadedTransport(_HostServerTransport):
                 x, y, n, tids = blocks[g]
                 for r in range(self.R):
                     self.gate(g, r)
-                    snap = self.snapshot(g)
+                    snap = self.wire_snapshot(g)
                     sig = (
                         snap.sigma_rows
                         if snap.sigma_rows is not None
                         else snap.sigma_diag
                     )
                     dalpha, db = solve(
-                        x, y, snap.alpha_rows, snap.W_rows, n,
-                        sig, tids, round_keys[r],
+                        x, y, jnp.asarray(snap.alpha_rows),
+                        jnp.asarray(snap.W_rows), n,
+                        jnp.asarray(sig), tids, round_keys[r],
                     )
                     dalpha = jax.block_until_ready(dalpha)
                     if self.pace:
                         time.sleep(self.pace * self.delays[g])
-                    self.commit(g, r, (dalpha, db))
+                    self.wire_commit(g, r, (dalpha, db))
             except BaseException as e:  # propagate into the driver
                 self._fail(e)
 
@@ -1191,8 +1382,12 @@ class ThreadedTransport(_HostServerTransport):
 # multiprocess — socket/pickle parameter-server shim, per-worker processes
 # ---------------------------------------------------------------------------
 def _send_msg(sock: socket.socket, obj) -> None:
+    """One frame: version byte + 8-byte length + pickle payload. The
+    leading ``WIRE_VERSION`` byte makes protocol/codec skew between the
+    two ends fail as a ``TransportProtocolError`` at the frame boundary
+    instead of a pickle garbage crash mid-payload (wire.py)."""
     buf = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    sock.sendall(struct.pack("!Q", len(buf)) + buf)
+    sock.sendall(struct.pack("!BQ", WIRE_VERSION, len(buf)) + buf)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -1207,7 +1402,8 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def _recv_msg(sock: socket.socket):
-    (n,) = struct.unpack("!Q", _recv_exact(sock, 8))
+    version, n = struct.unpack("!BQ", _recv_exact(sock, 9))
+    check_wire_version(version)
     return pickle.loads(_recv_exact(sock, n))
 
 
@@ -1318,27 +1514,30 @@ class MultiprocessTransport(_HostServerTransport):
                     self.gate(g, msg[1])
                     _send_msg(conn, ("ok",))
                 elif op == "snapshot":
-                    s = self.snapshot(g)
-                    # the wire ships whichever Sigma payload is populated:
-                    # (m_loc, m) rows for dense servers, (m_loc,) diag for
-                    # structured ones (the payload-size win of this PR)
+                    # codec-encoded payload dict: (W, Sigma) through the
+                    # wire codec, alpha elided once the worker caches it
+                    # (``have_alpha`` rides on the request); the wire
+                    # ships whichever Sigma field is populated — (m_loc,
+                    # m) rows for dense servers, (m_loc,) diag for
+                    # structured ones
+                    have_alpha = bool(msg[1]) if len(msg) > 1 else False
                     _send_msg(
-                        conn,
-                        (
-                            "snap",
-                            np.asarray(s.W_rows),
-                            None
-                            if s.sigma_rows is None
-                            else np.asarray(s.sigma_rows),
-                            np.asarray(s.alpha_rows),
-                            s.version,
-                            None
-                            if s.sigma_diag is None
-                            else np.asarray(s.sigma_diag),
-                        ),
+                        conn, ("snap", self._encode_snapshot(g, have_alpha))
                     )
                 elif op == "commit":
-                    r, dalpha, db = msg[1], msg[2], msg[3]
+                    r, dalpha, db_wire = msg[1], msg[2], msg[3]
+                    if isinstance(db_wire, Encoded):
+                        db = self.codec.decode(db_wire)
+                        nb = db_wire.nbytes
+                    else:
+                        db = db_wire
+                        nb = int(np.asarray(db).nbytes)
+                    with self.lock:
+                        self.wire_stats["n_commits"] += 1
+                        self.wire_stats["raw_commit_bytes"] += int(
+                            np.asarray(db).nbytes
+                        )
+                        self.wire_stats["commit_bytes"] += nb
                     rc = self.commit(
                         g, r, (jnp.asarray(dalpha), jnp.asarray(db))
                     )
@@ -1430,6 +1629,13 @@ def _mp_worker_main():  # pragma: no cover - runs in worker subprocesses
         n = jnp.asarray(init["n"])
         tids = jnp.asarray(init["tids"])
         R, sleep_s = init["R"], init["sleep_s"]
+        codec = get_codec(getattr(cfg, "codec", "none"))
+        commit_ef = ErrorFeedback(codec)
+        # worker-side alpha mirror under lossy codecs: alpha ships once,
+        # then the worker replays its own exact eta*dalpha f32 adds — the
+        # identical arithmetic the server performs, so the mirror stays
+        # bitwise equal to server state and alpha never rides the wire
+        alpha_loc: Optional[np.ndarray] = None
         while True:
             _send_msg(sock, ("next",))
             msg = _recv_msg(sock)
@@ -1441,20 +1647,36 @@ def _mp_worker_main():  # pragma: no cover - runs in worker subprocesses
             for r in range(R):
                 _send_msg(sock, ("gate", r))
                 _recv_msg(sock)
-                _send_msg(sock, ("snapshot",))
-                (
-                    _tag, W_rows, sigma_rows, alpha_rows, _version, sigma_diag
-                ) = _recv_msg(sock)
-                sig = sigma_rows if sigma_rows is not None else sigma_diag
+                have_alpha = codec.name != "none" and alpha_loc is not None
+                _send_msg(sock, ("snapshot", have_alpha))
+                _tag, payload = _recv_msg(sock)
+                snap = decode_snapshot_payload(payload, codec)
+                if snap.alpha_rows is not None:
+                    alpha_loc = np.asarray(snap.alpha_rows, dtype=np.float32)
+                sig = (
+                    snap.sigma_rows
+                    if snap.sigma_rows is not None
+                    else snap.sigma_diag
+                )
                 dalpha, db = solve(
-                    x, y, jnp.asarray(alpha_rows), jnp.asarray(W_rows), n,
-                    jnp.asarray(sig), tids, jnp.asarray(round_keys[r]),
+                    x, y, jnp.asarray(alpha_loc), jnp.asarray(snap.W_rows),
+                    n, jnp.asarray(sig), tids, jnp.asarray(round_keys[r]),
                 )
                 dalpha = np.asarray(dalpha)
                 db = np.asarray(db)
                 if sleep_s:
                     time.sleep(sleep_s)
-                _send_msg(sock, ("commit", r, dalpha, db))
+                if codec.name == "none":
+                    db_wire = db
+                else:
+                    db_wire = commit_ef.encode("db", db)
+                    # replay the server's alpha update in identical f32
+                    # arithmetic so next round's have_alpha elision holds
+                    alpha_loc = np.asarray(
+                        alpha_loc + np.float32(cfg.eta) * dalpha,
+                        dtype=np.float32,
+                    )
+                _send_msg(sock, ("commit", r, dalpha, db_wire))
                 _recv_msg(sock)
             _send_msg(sock, ("stepdone",))
             _recv_msg(sock)
@@ -1531,3 +1753,9 @@ register_transport(
         factory=MultiprocessTransport,
     )
 )
+
+# the gossip member lives in its own module (core/gossip.py) and registers
+# itself on import; importing it HERE — after every name it needs from this
+# module exists — keeps `get_transport("gossip")` working without the
+# caller having to know about the submodule, cycle-free
+from . import gossip as _gossip_registration  # noqa: E402,F401

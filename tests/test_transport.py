@@ -493,3 +493,251 @@ def test_multiprocess_ssp_straggler(small_problem, small_cfg):
     )
     assert h1["w_lag"].max() <= 1
     assert float(h1["gap"][-1]) <= 2.0 * abs(float(h0["gap"][-1])) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# subscriber isolation — a raising callback must not unwind installs
+# ---------------------------------------------------------------------------
+def test_raising_subscriber_is_isolated_and_dropped(
+    small_problem, small_cfg, caplog
+):
+    """Regression: a broken router subscriber used to propagate out of the
+    Sigma-install path and kill the fit. Now it is logged + dropped and
+    the install (and every other subscriber) proceeds."""
+    import logging
+
+    import jax.numpy as jnp
+
+    from repro.core.omega_regularizers import resolve_regularizer
+
+    cfg = dataclasses.replace(small_cfg, n_workers=1, transport="threaded")
+    transport = get_transport("threaded").factory()
+    reg = resolve_regularizer(cfg, None)
+    transport.setup(
+        cfg, small_problem.train, mesh=None, axes=None, reg=reg,
+        init=None, track=False,
+    )
+    try:
+        m = small_problem.train.m
+        seen = []
+
+        def broken_router(W, sigma, version):  # a raising subscriber tier
+            raise RuntimeError("router exploded")
+
+        transport.subscribe(broken_router)
+        transport.subscribe(lambda W, s, v: seen.append(v))
+        sig = jnp.asarray(np.eye(m, dtype=np.float32) / m)
+        om = jnp.asarray(np.eye(m, dtype=np.float32) * m)
+        with caplog.at_level(logging.ERROR, logger="repro.core.transport"):
+            transport.install_sigma(sig, om, defer=False)  # must NOT raise
+        assert seen == [1]  # the healthy subscriber still fired
+        assert any("dropping it" in r.message for r in caplog.records)
+        # the broken callback was dropped: the next install only reaches
+        # the healthy subscriber and nothing is logged
+        caplog.clear()
+        transport.install_sigma(sig, om, defer=False)
+        assert seen == [1, 2]
+        assert not caplog.records
+        assert not transport.unsubscribe(broken_router)  # already gone
+    finally:
+        transport.close()
+
+
+def test_raising_subscriber_does_not_break_the_fit(small_problem, small_cfg):
+    """End-to-end: a raising subscriber attached before fit_async leaves
+    the result identical to an undisturbed run."""
+    from repro.core import omega_regularizers as omega_reg
+    from repro.core.dmtrl import _rho_value
+
+    import jax
+
+    opts = AsyncOptions(transport="threaded", n_workers=2, tau=0)
+    cfg = opts.merge_into(small_cfg)
+    reg = omega_reg.resolve_regularizer(cfg, None, m=small_problem.train.m)
+    t = get_transport("threaded").factory()
+    t.setup(
+        cfg, small_problem.train, mesh=None, axes=MeshAxes(), reg=reg,
+        init=None, track=True,
+    )
+    try:
+        t.subscribe(lambda *a: (_ for _ in ()).throw(RuntimeError("boom")))
+        key = jax.random.PRNGKey(cfg.seed)
+        rho_sigma = t.rho_sigma()
+        for p in range(cfg.outer_iters):
+            rho = _rho_value(cfg, rho_sigma, n_blocks_scale=1.0, reg=reg)
+            key, ok = jax.random.split(key)
+            t.run_w_step(p, rho, ok)
+            sig_t, om_t = reg.step(t.w_true(), cfg.omega_jitter)
+            sig, om = t.pad_sigma(sig_t, om_t)
+            t.install_sigma(sig, om, defer=False)
+            rho_sigma = sig
+        W, sigma, _, _ = t.result()
+    finally:
+        t.close()
+    Wr, sr, _, _ = _fit_transport(
+        small_cfg, small_problem.train, "threaded", 2, tau=0
+    )
+    np.testing.assert_allclose(W, Wr, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# wire codecs on the server transports (core/wire.py integration)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_threaded_codec_objective_gap(
+    small_problem, small_cfg, ref_result, codec
+):
+    """Lossy snapshot/commit codecs (with error feedback) keep the final
+    objective within a small bounded gap of the exact run."""
+    _, _, _, h_exact = _fit_transport(
+        small_cfg, small_problem.train, "threaded", 2, tau=0
+    )
+    _, _, _, h_codec = _fit_transport(
+        small_cfg, small_problem.train, "threaded", 2, tau=0, codec=codec
+    )
+    ref = abs(float(h_exact["primal"][-1]))
+    gap = abs(float(h_codec["primal"][-1]) - float(h_exact["primal"][-1]))
+    bound = {"bf16": 5e-3, "int8": 2e-2}[codec]
+    assert gap <= bound * max(1.0, ref)
+
+
+def test_payload_nbytes_codec_accounting(small_problem, small_cfg):
+    """payload_nbytes: raw wire counts every field incl. alpha; codec wire
+    counts the encoded (W, Sigma) only (alpha is worker-cached under a
+    codec) and strictly shrinks none -> bf16 -> int8."""
+    from repro.core.omega_regularizers import resolve_regularizer
+    from repro.core.transport import payload_nbytes
+
+    cfg = dataclasses.replace(small_cfg, n_workers=2, transport="threaded")
+    t = get_transport("threaded").factory()
+    t.setup(
+        cfg, small_problem.train, mesh=None, axes=None,
+        reg=resolve_regularizer(cfg, None), init=None, track=False,
+    )
+    try:
+        snap = t.snapshot(0)
+        raw = payload_nbytes(snap)
+        assert raw == sum(
+            np.asarray(a).nbytes
+            for a in (snap.W_rows, snap.sigma_rows, snap.alpha_rows)
+            if a is not None
+        )
+        sizes = {c: payload_nbytes(snap, c) for c in ("bf16", "int8")}
+        assert raw > sizes["bf16"] > sizes["int8"]
+    finally:
+        t.close()
+
+
+def test_threaded_wire_stats_alpha_elision(small_problem, small_cfg):
+    """Under a lossy codec alpha ships exactly once per worker (then the
+    worker-side mirror replays the server's eta*dalpha updates), so the
+    aggregate compressed wire beats 4x on the fixture."""
+    from repro.core import omega_regularizers as omega_reg
+    from repro.core.dmtrl import _rho_value
+
+    import jax
+
+    opts = AsyncOptions(transport="threaded", n_workers=2, tau=0, codec="int8")
+    cfg = opts.merge_into(small_cfg)
+    reg = omega_reg.resolve_regularizer(cfg, None, m=small_problem.train.m)
+    t = get_transport("threaded").factory()
+    t.setup(
+        cfg, small_problem.train, mesh=None, axes=MeshAxes(), reg=reg,
+        init=None, track=False,
+    )
+    try:
+        key = jax.random.PRNGKey(0)
+        rho_sigma = t.rho_sigma()
+        for p in range(cfg.outer_iters):
+            rho = _rho_value(cfg, rho_sigma, n_blocks_scale=1.0, reg=reg)
+            key, ok = jax.random.split(key)
+            t.run_w_step(p, rho, ok)
+            sig_t, om_t = reg.step(t.w_true(), cfg.omega_jitter)
+            sig, om = t.pad_sigma(sig_t, om_t)
+            t.install_sigma(sig, om, defer=False)
+            rho_sigma = sig
+        s = t.wire_stats
+        assert s["codec"] == "int8"
+        shipped = s["snapshot_bytes"] + s["commit_bytes"]
+        raw = s["raw_snapshot_bytes"] + s["raw_commit_bytes"]
+        assert raw / shipped >= 4.0
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# frame versioning — protocol skew fails loudly (core/wire.py)
+# ---------------------------------------------------------------------------
+def test_legacy_frame_raises_transport_protocol_error():
+    """A legacy (unversioned) frame against the new receiver: the leading
+    byte is the high byte of a 64-bit length (0x00), never a valid
+    version, so the receiver diagnoses the skew instead of feeding pickle
+    garbage."""
+    import pickle
+    import socket
+    import struct
+
+    from repro.core.transport import _recv_msg
+    from repro.core.wire import TransportProtocolError
+
+    a, b = socket.socketpair()
+    try:
+        payload = pickle.dumps(("hello", 0))
+        a.sendall(struct.pack("!Q", len(payload)) + payload)  # OLD framing
+        with pytest.raises(TransportProtocolError, match="legacy"):
+            _recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_future_version_frame_raises_transport_protocol_error():
+    import pickle
+    import socket
+    import struct
+
+    from repro.core.transport import _recv_msg
+    from repro.core.wire import WIRE_VERSION, TransportProtocolError
+
+    a, b = socket.socketpair()
+    try:
+        payload = pickle.dumps(("hello", 0))
+        a.sendall(
+            struct.pack("!BQ", WIRE_VERSION + 3, len(payload)) + payload
+        )
+        with pytest.raises(TransportProtocolError, match="mismatch"):
+            _recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_current_frame_roundtrips():
+    import socket
+
+    from repro.core.transport import _recv_msg, _send_msg
+
+    a, b = socket.socketpair()
+    try:
+        _send_msg(a, ("commit", 3, [1, 2]))
+        assert _recv_msg(b) == ("commit", 3, [1, 2])
+    finally:
+        a.close()
+        b.close()
+
+
+@pytest.mark.slow
+def test_multiprocess_codec_matches_exact_run(small_problem, small_cfg):
+    """The socket path with int8 + error feedback: worker-side alpha
+    mirror + encoded frames stay within the codec gap bound of its own
+    exact (codec='none') run."""
+    W0, _, _, h0 = _fit_transport(
+        small_cfg, small_problem.train, "multiprocess", 2, tau=0
+    )
+    W1, _, _, h1 = _fit_transport(
+        small_cfg, small_problem.train, "multiprocess", 2, tau=0,
+        codec="int8",
+    )
+    assert np.abs(W1 - W0).max() <= 5e-2
+    gap = abs(float(h1["primal"][-1]) - float(h0["primal"][-1]))
+    assert gap <= 2e-2 * max(1.0, abs(float(h0["primal"][-1])))

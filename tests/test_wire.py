@@ -1,0 +1,183 @@
+"""Wire-format layer (core/wire.py): codecs, error feedback, framing."""
+import numpy as np
+import pytest
+
+from repro.core.wire import (
+    WIRE_VERSION,
+    Encoded,
+    ErrorFeedback,
+    TransportProtocolError,
+    available_codecs,
+    check_wire_version,
+    get_codec,
+    roundtrip,
+)
+
+SHAPES = [(3,), (16,), (256,), (257,), (300, 7), (1,), (8, 32)]
+
+
+def _x(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_members():
+    assert set(available_codecs()) >= {"none", "bf16", "int8"}
+
+
+def test_unknown_codec_is_a_clear_error():
+    with pytest.raises(KeyError, match="unknown wire codec"):
+        get_codec("zstd")
+
+
+# ---------------------------------------------------------------------------
+# roundtrips + error bounds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES)
+def test_none_codec_is_exact(shape):
+    x = _x(shape)
+    y = roundtrip(get_codec("none"), x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    np.testing.assert_array_equal(y, x)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_bf16_roundtrip_error_bound(shape):
+    x = _x(shape)
+    y = roundtrip(get_codec("bf16"), x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # bf16 keeps 8 mantissa bits: relative error <= 2^-8 after rounding
+    np.testing.assert_allclose(y, x, rtol=2.0 ** -8, atol=0.0)
+
+
+def test_bf16_matches_true_bfloat16_cast():
+    # round-to-nearest-even at the mantissa boundary, checked against the
+    # jax bfloat16 cast on values that straddle the tie
+    import jax.numpy as jnp
+
+    x = np.asarray(
+        [1.0, 1.0 + 2.0 ** -8, 1.0 + 2.0 ** -9, -3.14159, 1e-30, 65504.0],
+        np.float32,
+    )
+    got = roundtrip(get_codec("bf16"), x)
+    want = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_int8_roundtrip_error_bound(shape):
+    x = _x(shape)
+    y = roundtrip(get_codec("int8"), x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # per-block symmetric quantization: error <= half a step = scale / 2,
+    # bounded globally by the worst block's scale
+    step = np.max(np.abs(x)) / 127.0
+    assert np.abs(y - x).max() <= step
+
+
+def test_int8_zero_blocks_decode_exactly_to_zero():
+    x = np.zeros((300,), np.float32)
+    enc = get_codec("int8").encode(x)
+    assert np.all(enc.scales == 0.0)
+    np.testing.assert_array_equal(get_codec("int8").decode(enc), x)
+
+
+def test_int8_pad_stays_off_the_wire():
+    # a 16-element array must not pay for a whole 256 block
+    enc = get_codec("int8").encode(np.ones((16,), np.float32))
+    assert enc.data.size == 16
+    assert enc.nbytes == 16 + 4  # codes + one f32 block scale
+
+
+# ---------------------------------------------------------------------------
+# nbytes ordering — the compression claim, per array
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(256,), (300, 7), (8, 32)])
+def test_nbytes_strictly_decrease(shape):
+    x = _x(shape)
+    sizes = {
+        name: get_codec(name).encode(x).nbytes
+        for name in ("none", "bf16", "int8")
+    }
+    assert sizes["none"] > sizes["bf16"] > sizes["int8"]
+    assert sizes["none"] == x.nbytes
+
+
+def test_encoded_nbytes_counts_scales():
+    enc = get_codec("int8").encode(_x((256,)))
+    assert isinstance(enc, Encoded)
+    assert enc.nbytes == enc.data.nbytes + enc.scales.nbytes
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+def test_error_feedback_sum_tracks_true_sum():
+    # a CONSTANT biased delta is the worst case for plain quantization:
+    # the per-step bias accumulates linearly, while error feedback keeps
+    # the accumulated error within one quantization step of the last
+    # encode, independent of the number of steps
+    codec = get_codec("int8")
+    ef = ErrorFeedback(codec)
+    d = (0.0013 * np.arange(1, 65, dtype=np.float32) / 64.0).astype(
+        np.float32
+    )
+    steps = 50
+    true_sum = steps * d.astype(np.float64)
+    ef_sum = np.zeros_like(true_sum)
+    plain_sum = np.zeros_like(true_sum)
+    for _ in range(steps):
+        ef_sum += codec.decode(ef.encode("k", d))
+        plain_sum += codec.decode(codec.encode(d))
+    err_ef = np.abs(ef_sum - true_sum).max()
+    err_plain = np.abs(plain_sum - true_sum).max()
+    one_step = np.abs(d).max() * 2.0 / 127.0  # generous per-encode bound
+    assert err_ef <= one_step
+    assert err_plain > 5 * err_ef  # the linear accumulation EF removes
+
+
+def test_error_feedback_streams_are_independent():
+    ef = ErrorFeedback(get_codec("int8"))
+    a = np.full((8,), 0.3, np.float32)
+    ef.encode("a", a)
+    ra = ef._resid["a"].copy()
+    ef.encode("b", -a)
+    np.testing.assert_array_equal(ef._resid["a"], ra)  # untouched
+
+
+def test_error_feedback_none_codec_is_stateless_passthrough():
+    ef = ErrorFeedback(get_codec("none"))
+    x = _x((16,))
+    np.testing.assert_array_equal(ef.codec.decode(ef.encode("k", x)), x)
+    assert not ef._resid
+
+
+def test_error_feedback_reset():
+    ef = ErrorFeedback(get_codec("int8"))
+    ef.encode("a", _x((8,)))
+    ef.encode("b", _x((8,)))
+    ef.reset("a")
+    assert "a" not in ef._resid and "b" in ef._resid
+    ef.reset()
+    assert not ef._resid
+
+
+# ---------------------------------------------------------------------------
+# frame versioning
+# ---------------------------------------------------------------------------
+def test_check_wire_version_accepts_current():
+    check_wire_version(WIRE_VERSION)
+
+
+def test_check_wire_version_rejects_legacy_framing():
+    # a legacy unversioned frame leads with the high byte of a 64-bit
+    # length — 0x00 for any sane message
+    with pytest.raises(TransportProtocolError, match="legacy unversioned"):
+        check_wire_version(0)
+
+
+def test_check_wire_version_rejects_future_version():
+    with pytest.raises(TransportProtocolError, match="version mismatch"):
+        check_wire_version(WIRE_VERSION + 1)
