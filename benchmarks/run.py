@@ -29,7 +29,13 @@ import time
 # everything else matching bench_*.py is a standalone sweep with a main()
 _INLINE = {"bench_kernels", "bench_roofline"}
 # sweeps that accept --tiny (forwarded when the driver invokes them)
-_TINY_OK = {"bench_fleet", "bench_regularizers", "bench_sigma", "bench_transport"}
+_TINY_OK = {
+    "bench_fleet",
+    "bench_obs",
+    "bench_regularizers",
+    "bench_sigma",
+    "bench_transport",
+}
 
 
 def _repo_root() -> str:

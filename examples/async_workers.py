@@ -9,26 +9,49 @@ Install the package once (``pip install -e .``) or export
 ``PYTHONPATH=src``, then:
 
     python examples/async_workers.py
+    python examples/async_workers.py --trace out.json   # span tracing on
+    python examples/async_workers.py --tiny             # CI smoke schedule
+
+With ``--trace`` the threaded and gossip runs execute under the ``obs``
+span tracer and the whole run is exported as Chrome-trace JSON — open
+``chrome://tracing`` (or https://ui.perfetto.dev) and load the file to
+see every worker thread's gate/snapshot/solve/commit timeline nested
+under its rounds, plus the driver's W-step/Omega-step alternation.
 """
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 
+from repro import obs
 from repro.core import AsyncOptions, DMTRLEstimator, MeshAxes
 from repro.core import convergence as cv
 from repro.data.synthetic import synthetic
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="enable span tracing and write a Chrome-trace JSON here",
+    )
+    ap.add_argument(
+        "--tiny", action="store_true",
+        help="short schedule (CI examples-smoke)",
+    )
+    args = ap.parse_args()
+
     n_dev = len(jax.devices())
     print(f"devices: {n_dev} (each = one worker group)")
     sp = synthetic(1, m=8, d=48, n_train_avg=120, n_test_avg=40, seed=0)
     delays = (1,) * (n_dev - 1) + (4,)  # last worker is a 4x straggler
 
     base = dict(
-        loss="hinge", lam=1e-4, outer_iters=2, rounds=8, local_iters=128, seed=0
+        loss="hinge", lam=1e-4, outer_iters=2,
+        rounds=3 if args.tiny else 8,
+        local_iters=32 if args.tiny else 128, seed=0,
     )
     mesh = jax.make_mesh((n_dev,), ("data",))
     ax = MeshAxes(data="data")
@@ -56,6 +79,11 @@ def main():
         f"  staleness: max {s['max_staleness']:.0f} commits, "
         f"mean {s['mean_staleness']:.2f}, max lag {s['max_lag']:.0f} rounds"
     )
+
+    # from here on the transports are REAL (worker threads): turn the span
+    # tracer on so the runs land in the Chrome trace when --trace is given
+    if args.trace:
+        obs.enable(clear=True)
 
     # same protocol, different substrate: a REAL in-host parameter server
     # (worker threads, lock-protected versioned state, nondeterministic
@@ -107,6 +135,22 @@ def main():
         f"edge staleness mean {sg['mean_edge_staleness']:.2f} "
         f"max {sg['max_edge_staleness']:.0f}"
     )
+
+    if args.trace:
+        n = obs.export_chrome(args.trace)
+        obs.disable()
+        breakdown = obs.phase_breakdown()
+        top = sorted(
+            breakdown.items(), key=lambda kv: -kv[1]["total_s"]
+        )[:6]
+        print(f"trace: {n} spans -> {os.path.abspath(args.trace)}")
+        print("  top phases by inclusive wall-clock:")
+        for name, row in top:
+            print(
+                f"    {name:16s} {row['count']:5d} x "
+                f"{row['mean_s'] * 1e3:8.2f} ms = {row['total_s']:.3f} s"
+            )
+        print("  open chrome://tracing (or ui.perfetto.dev) and load the file")
 
 
 if __name__ == "__main__":

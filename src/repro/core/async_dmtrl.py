@@ -78,6 +78,8 @@ from .transport import (  # re-exported for backward compatibility
     get_transport,
     make_async_tick,
 )
+from ..obs.metrics import publish_wire_stats
+from ..obs.trace import span
 
 Array = jax.Array
 
@@ -190,30 +192,45 @@ def fit_async(
         codec=getattr(cfg, "codec", "none"),
     )
     reg = omega_reg.resolve_regularizer(cfg, regularizer, m=raw.m)
-    spec = get_transport(cfg.transport)
-    transport = spec.factory()
-    transport.setup(
-        cfg, raw, mesh=mesh, axes=axes, reg=reg, init=init, track=track
-    )
-    key = jax.random.PRNGKey(cfg.seed)
-    # rho always sees the NEWEST Sigma, installed or pending (a pending
-    # install is a worker-visibility delay, not a safety-bound delay)
-    rho_sigma = transport.rho_sigma()
-    try:
-        for p in range(cfg.outer_iters):
-            rho = _rho_value(
-                cfg, rho_sigma, n_blocks_scale=float(transport.n_pods), reg=reg
+    # root span + sequential driver-phase spans: "setup" / per-outer
+    # "w_step" / "omega_step" / "result" tile "fit_async" almost exactly,
+    # which is what bench_obs's breakdown-sums-to-total check leans on
+    with span("fit_async", cat="driver", transport=cfg.transport):
+        with span("setup", cat="driver", transport=cfg.transport):
+            spec = get_transport(cfg.transport)
+            transport = spec.factory()
+            transport.setup(
+                cfg, raw, mesh=mesh, axes=axes, reg=reg, init=init, track=track
             )
-            key, outer_key = jax.random.split(key)
-            transport.run_w_step(p, rho, outer_key)
-            if reg.learns:
-                sigma_t, omega_t = reg.step(transport.w_true(), cfg.omega_jitter)
-                sig, om = transport.pad_sigma(sigma_t, omega_t)
-                # overlapped Omega-step: defer the install into the next
-                # W-step except at the end (the last Sigma must land now)
-                defer = cfg.omega_delay > 0 and p < cfg.outer_iters - 1
-                transport.install_sigma(sig, om, defer=defer)
-                rho_sigma = sig
-        return transport.result()
-    finally:
-        transport.close()
+        key = jax.random.PRNGKey(cfg.seed)
+        # rho always sees the NEWEST Sigma, installed or pending (a pending
+        # install is a worker-visibility delay, not a safety-bound delay)
+        rho_sigma = transport.rho_sigma()
+        try:
+            for p in range(cfg.outer_iters):
+                rho = _rho_value(
+                    cfg, rho_sigma, n_blocks_scale=float(transport.n_pods), reg=reg
+                )
+                key, outer_key = jax.random.split(key)
+                with span("w_step", cat="driver", outer=p):
+                    transport.run_w_step(p, rho, outer_key)
+                if reg.learns:
+                    with span("omega_step", cat="driver", outer=p):
+                        sigma_t, omega_t = reg.step(
+                            transport.w_true(), cfg.omega_jitter
+                        )
+                        sig, om = transport.pad_sigma(sigma_t, omega_t)
+                        # overlapped Omega-step: defer the install into the
+                        # next W-step except at the end (the last Sigma must
+                        # land now)
+                        defer = cfg.omega_delay > 0 and p < cfg.outer_iters - 1
+                        transport.install_sigma(sig, om, defer=defer)
+                        rho_sigma = sig
+            with span("result", cat="driver", transport=cfg.transport):
+                out = transport.result()
+                ws = getattr(transport, "wire_stats", None)
+                if ws is not None:
+                    publish_wire_stats(ws, transport=cfg.transport)
+            return out
+        finally:
+            transport.close()

@@ -34,6 +34,7 @@ from .distributed import (
 from .dmtrl import DMTRLConfig, WarmStart, fit as _fit_reference
 from .mtl_data import MTLData
 from .sigma_view import SigmaView, maybe_dense
+from ..obs.trace import span
 
 
 @dataclasses.dataclass
@@ -118,7 +119,10 @@ def _run_reference(
             "the reference engine runs single-process: mesh/axes/options "
             'are distributed-only (use engine="distributed" or "async")'
         )
-    res = _fit_reference(cfg, data, track=track, init=init, regularizer=regularizer)
+    with span("engine_run", cat="driver", engine="reference"):
+        res = _fit_reference(
+            cfg, data, track=track, init=init, regularizer=regularizer
+        )
     return EngineResult(
         W=np.asarray(res.W),
         alpha=np.asarray(res.alpha),
@@ -130,7 +134,9 @@ def _run_reference(
     )
 
 
-def _make_mesh_run(fit_fn: Callable) -> Callable[..., EngineResult]:
+def _make_mesh_run(
+    fit_fn: Callable, engine_name: str
+) -> Callable[..., EngineResult]:
     """One adapter for both mesh engines: resolve a default mesh, forward
     to the driver (which resolves axes itself), unpad, pack EngineResult."""
 
@@ -148,10 +154,11 @@ def _make_mesh_run(fit_fn: Callable) -> Callable[..., EngineResult]:
         if mesh is None:
             ax = axes or getattr(options, "axes", None) or MeshAxes()
             mesh = _default_mesh(ax)
-        W, sigma, state, hist = fit_fn(
-            cfg, data, mesh, axes, track=track,
-            options=options, init=init, regularizer=regularizer,
-        )
+        with span("engine_run", cat="driver", engine=engine_name):
+            W, sigma, state, hist = fit_fn(
+                cfg, data, mesh, axes, track=track,
+                options=options, init=init, regularizer=regularizer,
+            )
         alpha, omega = _unpad_state(state, data)
         sigma_view = None
         if isinstance(state.sigma, SigmaView):
@@ -164,8 +171,8 @@ def _make_mesh_run(fit_fn: Callable) -> Callable[..., EngineResult]:
     return run
 
 
-_run_distributed = _make_mesh_run(_fit_distributed)
-_run_async = _make_mesh_run(_fit_async)
+_run_distributed = _make_mesh_run(_fit_distributed, "distributed")
+_run_async = _make_mesh_run(_fit_async, "async")
 
 
 register_engine(

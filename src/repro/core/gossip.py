@@ -61,6 +61,7 @@ and is summarized by ``convergence.staleness_summary``.
 """
 from __future__ import annotations
 
+import logging
 import time
 from typing import List, Tuple, Union
 
@@ -77,6 +78,10 @@ from .transport import (
     register_transport,
 )
 from .wire import ErrorFeedback
+from ..obs.metrics import get_registry
+from ..obs.trace import span
+
+logger = logging.getLogger(__name__)
 
 __all__ = [
     "GossipTransport",
@@ -251,7 +256,21 @@ class GossipTransport(ThreadedTransport):
             topology if isinstance(topology, str) else "explicit"
         )
         self.wire_stats["spectral_gap"] = self.spectral_gap
-        self.wire_stats["n_exchanges"] = 0
+        logger.info(
+            "gossip transport: %d nodes, topology %s (%d edges), "
+            "spectral gap %.4f, codec %s",
+            self.G,
+            self.wire_stats["topology"],
+            len(self._edges),
+            self.spectral_gap,
+            self.codec.name,
+        )
+        get_registry().gauge(
+            "repro_gossip_spectral_gap",
+            "1 - |lambda_2| of the mixing matrix (consensus contraction "
+            "per exchange)",
+            labels=("topology",),
+        ).set(self.spectral_gap, topology=self.wire_stats["topology"])
 
     # -- consensus ----------------------------------------------------------
     def _consensus_w(self):
@@ -261,6 +280,15 @@ class GossipTransport(ThreadedTransport):
         """One synchronous gossip exchange (called under the lock at a
         round boundary): record per-edge staleness, ship each replica to
         its neighbors through the codec, contract with M."""
+        with span(
+            "mix",
+            cat="gossip",
+            n_edges=len(self._edges),
+            exchange=self.wire_stats["n_exchanges"],
+        ):
+            self._mix_locked(tick)
+
+    def _mix_locked(self, tick: float) -> None:
         for g, h in self._edges:
             self.hist["e_src"].append(g)
             self.hist["e_dst"].append(h)
@@ -296,9 +324,9 @@ class GossipTransport(ThreadedTransport):
 
     # -- protocol overrides (all under the server condition variable) -------
     def snapshot(self, worker):
-        with self.cond:
+        with span("snapshot", cat="transport", worker=worker), self.cond:
             self._check_abort()
-            self._maybe_install()
+            self._maybe_install(worker)
             rows = self._rows(worker)
             self._snap_version[worker] = self._boundary_version
             self._snap_lag[worker] = self.completed[worker] - min(
@@ -323,9 +351,9 @@ class GossipTransport(ThreadedTransport):
 
     def commit(self, worker, rnd, delta):
         dalpha, db = delta
-        with self.cond:
+        with span("commit", cat="transport", worker=worker, round=rnd), self.cond:
             self._check_abort()
-            self._maybe_install()
+            self._maybe_install(worker)
             cfg = self.cfg
             rows = self._rows(worker)
             # alpha rows are node-owned dual state, identical to the server
@@ -365,24 +393,25 @@ class GossipTransport(ThreadedTransport):
             return receipt
 
     def _install(self, sig, om):
-        self.sigma, self.omega = sig, om
-        # consensus reset: W is recomputed from the exact global dual
-        # state and broadcast, so all replicas agree and any accumulated
-        # quantization residual refers to dead state
-        self.W = self._w_from_alpha(self.alpha, self.sigma)
-        self.W_nodes = jnp.asarray(
-            jnp.broadcast_to(self.W, (self.G,) + self.W.shape)
-        )
-        self._commit_ef.reset()
-        self._mix_ef.reset()
-        self._boundary = (self.W, self.sigma)
-        self._boundary_nodes = self.W_nodes
-        self._boundary_version = self.commits_total
-        if isinstance(self.sigma, SigmaView):
-            sigma_raw = self.sigma.unpad(self.raw.m)
-        else:
-            sigma_raw = self.sigma[: self.raw.m, : self.raw.m]
-        self._notify_model(self.W[: self.raw.m, : self.raw.d], sigma_raw)
+        with span("install_sigma", cat="transport", transport=self.name):
+            self.sigma, self.omega = sig, om
+            # consensus reset: W is recomputed from the exact global dual
+            # state and broadcast, so all replicas agree and any accumulated
+            # quantization residual refers to dead state
+            self.W = self._w_from_alpha(self.alpha, self.sigma)
+            self.W_nodes = jnp.asarray(
+                jnp.broadcast_to(self.W, (self.G,) + self.W.shape)
+            )
+            self._commit_ef.reset()
+            self._mix_ef.reset()
+            self._boundary = (self.W, self.sigma)
+            self._boundary_nodes = self.W_nodes
+            self._boundary_version = self.commits_total
+            if isinstance(self.sigma, SigmaView):
+                sigma_raw = self.sigma.unpad(self.raw.m)
+            else:
+                sigma_raw = self.sigma[: self.raw.m, : self.raw.m]
+            self._notify_model(self.W[: self.raw.m, : self.raw.d], sigma_raw)
 
     # -- driver lifecycle ---------------------------------------------------
     def _begin_w_step(self, p):

@@ -128,6 +128,7 @@ from .wire import (
     check_wire_version,
     get_codec,
 )
+from ..obs.trace import span
 
 Array = jax.Array
 
@@ -136,6 +137,45 @@ logger = logging.getLogger(__name__)
 # sleep pacing of one simulated delay tick for the host transports (so the
 # async_delays straggler schedules remain meaningful under real clocks)
 PACE_SECONDS = 0.005
+
+# ---------------------------------------------------------------------------
+# unified wire_stats schema
+# ---------------------------------------------------------------------------
+# ONE key union across every transport, so dashboards, bench checks, and
+# the obs bridge (obs.metrics.publish_wire_stats) never KeyError on a
+# transport switch.  Gossip-only keys (topology / spectral_gap /
+# n_exchanges / *mix_bytes) are present everywhere with inert defaults;
+# star transports simply never move them.
+WIRE_STATS_SCHEMA: Dict[str, object] = {
+    "codec": "none",  # wire codec name (str label, not a counter)
+    "topology": "star",  # neighbor graph; "star" = parameter server
+    "spectral_gap": 0.0,  # mixing-matrix contraction rate (gossip)
+    "n_snapshots": 0,
+    "n_commits": 0,
+    "n_exchanges": 0,  # gossip edge exchanges
+    "snapshot_bytes": 0,  # bytes actually shipped per snapshot
+    "commit_bytes": 0,  # bytes actually shipped per delta_w
+    "mix_bytes": 0,  # gossip neighbor-exchange bytes
+    "raw_snapshot_bytes": 0,  # what the none codec would have sent
+    "raw_commit_bytes": 0,
+    "raw_mix_bytes": 0,
+}
+
+
+def new_wire_stats(**overrides) -> Dict[str, object]:
+    """A fresh ``wire_stats`` dict carrying the full unified schema.
+
+    ``overrides`` must stay inside the documented key union — a typo'd
+    counter name here would silently fork the schema, so it raises."""
+    unknown = set(overrides) - set(WIRE_STATS_SCHEMA)
+    if unknown:
+        raise ValueError(
+            f"unknown wire_stats key(s) {sorted(unknown)}; the schema is "
+            f"{sorted(WIRE_STATS_SCHEMA)}"
+        )
+    ws = dict(WIRE_STATS_SCHEMA)
+    ws.update(overrides)
+    return ws
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +471,9 @@ class Transport:
     def __init__(self):
         self._model_subscribers: List[Callable] = []
         self._model_version = 0
+        # worker whose gate/snapshot/commit triggered the install in
+        # flight (None for driver-initiated installs) — log context only
+        self._install_worker: Optional[int] = None
 
     # -- model snapshot subscription (serving hot-swap hook) ----------------
     def subscribe(self, callback: Callable) -> Callable:
@@ -486,11 +529,15 @@ class Transport:
                 cb(W, sigma, self._model_version)
             except Exception:
                 logger.exception(
-                    "transport %r: model subscriber %r raised at version "
-                    "%d; dropping it (installs continue)",
+                    "transport %r: model subscriber %r raised at snapshot "
+                    "version %d (install triggered by worker %s); dropping "
+                    "it (installs continue)",
                     self.name,
                     cb,
                     self._model_version,
+                    "driver"
+                    if self._install_worker is None
+                    else self._install_worker,
                 )
                 failed.append(cb)
         for cb in failed:
@@ -688,6 +735,9 @@ class SimulatedTransport(Transport):
         self.snap_lag = [0] * G
         self.commits_outer = 0
         self.p = 0
+        # no wire at all (in-mesh SPMD), but the unified schema still
+        # applies: every counter sits at its zero default
+        self.wire_stats = new_wire_stats(topology="complete")
 
     # -- protocol -----------------------------------------------------------
     def gate(self, worker, rnd):
@@ -718,7 +768,7 @@ class SimulatedTransport(Transport):
         the protocol complete so a generic driver can run the simulated
         member one worker at a time (tested for equivalence at tau=0).
         """
-        self._maybe_install()
+        self._maybe_install(worker)
         dalpha, db = delta
         rows = self._rows(worker)
         cfg = self.cfg
@@ -752,23 +802,28 @@ class SimulatedTransport(Transport):
             self._install(sigma, omega)
 
     def _install(self, sig, om):
-        sig, om = _densify_pair(sig, om)
-        st = dataclasses.replace(
-            self.state,
-            sigma=jax.device_put(sig, self._sr),
-            omega=jax.device_put(om, self._sr),
-        )
-        self.state = dataclasses.replace(
-            st, W=self._w_from_alpha(st.alpha, st.sigma)
-        )
-        self._notify_model(
-            self.state.W[: self.raw.m, : self.raw.d],
-            self.state.sigma[: self.raw.m, : self.raw.m],
-        )
+        with span("install_sigma", cat="transport", transport=self.name):
+            sig, om = _densify_pair(sig, om)
+            st = dataclasses.replace(
+                self.state,
+                sigma=jax.device_put(sig, self._sr),
+                omega=jax.device_put(om, self._sr),
+            )
+            self.state = dataclasses.replace(
+                st, W=self._w_from_alpha(st.alpha, st.sigma)
+            )
+            self._notify_model(
+                self.state.W[: self.raw.m, : self.raw.d],
+                self.state.sigma[: self.raw.m, : self.raw.m],
+            )
 
-    def _maybe_install(self):
+    def _maybe_install(self, worker=None):
         if self.pending is not None and self.commits_outer >= self.cfg.omega_delay:
-            self._install(*self.pending)
+            self._install_worker = worker
+            try:
+                self._install(*self.pending)
+            finally:
+                self._install_worker = None
             self.pending = None
 
     # -- driver lifecycle ---------------------------------------------------
@@ -1030,17 +1085,7 @@ class _HostServerTransport(Transport):
         self.codec: Codec = get_codec(getattr(cfg, "codec", "none"))
         self._commit_ef = ErrorFeedback(self.codec)
         self._alpha_cache: Dict[int, np.ndarray] = {}
-        self.wire_stats = {
-            "codec": self.codec.name,
-            "n_snapshots": 0,
-            "n_commits": 0,
-            "snapshot_bytes": 0,  # bytes actually shipped per snapshot
-            "commit_bytes": 0,  # bytes actually shipped per delta_w
-            "mix_bytes": 0,  # gossip neighbor-exchange bytes
-            "raw_snapshot_bytes": 0,  # what the none codec would have sent
-            "raw_commit_bytes": 0,
-            "raw_mix_bytes": 0,
-        }
+        self.wire_stats = new_wire_stats(codec=self.codec.name)
 
     # -- protocol (all under the server condition variable) -----------------
     def _rows(self, worker):
@@ -1054,7 +1099,7 @@ class _HostServerTransport(Transport):
 
     def gate(self, worker, rnd):
         """Block until the SSP gate admits ``worker`` to start ``rnd``."""
-        with self.cond:
+        with span("gate", cat="transport", worker=worker, round=rnd), self.cond:
             while True:
                 self._check_abort()
                 if self._shutdown:
@@ -1062,7 +1107,7 @@ class _HostServerTransport(Transport):
                         f"transport {self.name!r} shut down while worker "
                         f"{worker} was waiting at the gate"
                     )
-                self._maybe_install()
+                self._maybe_install(worker)
                 if rnd <= min(self.completed) + self.tau:
                     self.refused.discard(worker)
                     return True
@@ -1076,9 +1121,9 @@ class _HostServerTransport(Transport):
                 self.cond.wait(timeout=0.05)
 
     def snapshot(self, worker):
-        with self.cond:
+        with span("snapshot", cat="transport", worker=worker), self.cond:
             self._check_abort()
-            self._maybe_install()
+            self._maybe_install(worker)
             rows = self._rows(worker)
             # staleness is the age of the DATA served (the boundary freeze),
             # not of the snapshot call itself
@@ -1104,9 +1149,9 @@ class _HostServerTransport(Transport):
 
     def commit(self, worker, rnd, delta):
         dalpha, db = delta
-        with self.cond:
+        with span("commit", cat="transport", worker=worker, round=rnd), self.cond:
             self._check_abort()
-            self._maybe_install()
+            self._maybe_install(worker)
             cfg = self.cfg
             rows = self._rows(worker)
             # the Sigma-coupled server reduce for ONE worker's delta_b rows:
@@ -1153,25 +1198,30 @@ class _HostServerTransport(Transport):
                 self._install(sigma, omega)
 
     def _install(self, sig, om):
-        self.sigma, self.omega = sig, om
-        self.W = self._w_from_alpha(self.alpha, self.sigma)
-        # W was just recomputed from exact (full-precision) alpha, so any
-        # pending quantization residual no longer refers to live state
-        self._commit_ef.reset()
-        # the install must reach the NEXT snapshot, not wait for the next
-        # floor advance: refresh the served boundary (matches the simulated
-        # member, whose post-install starters read the live state)
-        self._boundary = (self.W, self.sigma)
-        self._boundary_version = self.commits_total
-        if isinstance(self.sigma, SigmaView):
-            sigma_raw = self.sigma.unpad(self.raw.m)
-        else:
-            sigma_raw = self.sigma[: self.raw.m, : self.raw.m]
-        self._notify_model(self.W[: self.raw.m, : self.raw.d], sigma_raw)
+        with span("install_sigma", cat="transport", transport=self.name):
+            self.sigma, self.omega = sig, om
+            self.W = self._w_from_alpha(self.alpha, self.sigma)
+            # W was just recomputed from exact (full-precision) alpha, so any
+            # pending quantization residual no longer refers to live state
+            self._commit_ef.reset()
+            # the install must reach the NEXT snapshot, not wait for the next
+            # floor advance: refresh the served boundary (matches the simulated
+            # member, whose post-install starters read the live state)
+            self._boundary = (self.W, self.sigma)
+            self._boundary_version = self.commits_total
+            if isinstance(self.sigma, SigmaView):
+                sigma_raw = self.sigma.unpad(self.raw.m)
+            else:
+                sigma_raw = self.sigma[: self.raw.m, : self.raw.m]
+            self._notify_model(self.W[: self.raw.m, : self.raw.d], sigma_raw)
 
-    def _maybe_install(self):
+    def _maybe_install(self, worker=None):
         if self.pending is not None and self.commits_outer >= self.cfg.omega_delay:
-            self._install(*self.pending)
+            self._install_worker = worker
+            try:
+                self._install(*self.pending)
+            finally:
+                self._install_worker = None
             self.pending = None
 
     def _fail(self, exc: BaseException):
@@ -1192,36 +1242,38 @@ class _HostServerTransport(Transport):
         Updates ``wire_stats`` under the server lock.
         """
         snap = self.snapshot(worker)
-        raw = payload_nbytes(snap)
-        payload: dict = {"version": snap.version}
-        nb = 0
-        for field in ("W_rows", "sigma_rows", "sigma_diag"):
-            a = getattr(snap, field)
-            if a is None:
-                payload[field] = None
-                continue
-            enc = self.codec.encode(np.asarray(a))
-            payload[field] = enc
-            nb += enc.nbytes
-        ship_alpha = self.codec.name == "none" or not have_alpha
-        if ship_alpha:
-            alpha = np.asarray(snap.alpha_rows)
-            payload["alpha_rows"] = alpha
-            nb += int(alpha.nbytes)
-        else:
-            payload["alpha_rows"] = None
-        with self.lock:
-            self.wire_stats["n_snapshots"] += 1
-            self.wire_stats["raw_snapshot_bytes"] += raw
-            self.wire_stats["snapshot_bytes"] += nb
-        return payload
+        with span("snapshot_encode", cat="transport", worker=worker):
+            raw = payload_nbytes(snap)
+            payload: dict = {"version": snap.version}
+            nb = 0
+            for field in ("W_rows", "sigma_rows", "sigma_diag"):
+                a = getattr(snap, field)
+                if a is None:
+                    payload[field] = None
+                    continue
+                enc = self.codec.encode(np.asarray(a))
+                payload[field] = enc
+                nb += enc.nbytes
+            ship_alpha = self.codec.name == "none" or not have_alpha
+            if ship_alpha:
+                alpha = np.asarray(snap.alpha_rows)
+                payload["alpha_rows"] = alpha
+                nb += int(alpha.nbytes)
+            else:
+                payload["alpha_rows"] = None
+            with self.lock:
+                self.wire_stats["n_snapshots"] += 1
+                self.wire_stats["raw_snapshot_bytes"] += raw
+                self.wire_stats["snapshot_bytes"] += nb
+            return payload
 
     def wire_snapshot(self, worker: int) -> Snapshot:
         """Snapshot as seen through the codec round-trip (the in-host
         mirror of what a remote worker would decode off the socket)."""
         have = self.codec.name != "none" and worker in self._alpha_cache
         payload = self._encode_snapshot(worker, have_alpha=have)
-        snap = decode_snapshot_payload(payload, self.codec)
+        with span("snapshot_decode", cat="transport", worker=worker):
+            snap = decode_snapshot_payload(payload, self.codec)
         if snap.alpha_rows is None:
             snap = dataclasses.replace(
                 snap, alpha_rows=self._alpha_cache[worker]
@@ -1244,8 +1296,9 @@ class _HostServerTransport(Transport):
                 self.wire_stats["raw_commit_bytes"] += raw
                 self.wire_stats["commit_bytes"] += raw
             return self.commit(worker, rnd, (dalpha, db))
-        enc = self._commit_ef.encode(("db", worker), np.asarray(db))
-        db_dec = jnp.asarray(self.codec.decode(enc))
+        with span("commit_encode", cat="transport", worker=worker):
+            enc = self._commit_ef.encode(("db", worker), np.asarray(db))
+            db_dec = jnp.asarray(self.codec.decode(enc))
         if worker in self._alpha_cache:
             # keep the worker-side alpha mirror exact: same f32 arithmetic
             # as the server's alpha.at[rows].add(eta * dalpha)
@@ -1346,22 +1399,24 @@ class ThreadedTransport(_HostServerTransport):
             try:
                 x, y, n, tids = blocks[g]
                 for r in range(self.R):
-                    self.gate(g, r)
-                    snap = self.wire_snapshot(g)
-                    sig = (
-                        snap.sigma_rows
-                        if snap.sigma_rows is not None
-                        else snap.sigma_diag
-                    )
-                    dalpha, db = solve(
-                        x, y, jnp.asarray(snap.alpha_rows),
-                        jnp.asarray(snap.W_rows), n,
-                        jnp.asarray(sig), tids, round_keys[r],
-                    )
-                    dalpha = jax.block_until_ready(dalpha)
-                    if self.pace:
-                        time.sleep(self.pace * self.delays[g])
-                    self.wire_commit(g, r, (dalpha, db))
+                    with span("round", cat="transport", worker=g, round=r):
+                        self.gate(g, r)
+                        snap = self.wire_snapshot(g)
+                        sig = (
+                            snap.sigma_rows
+                            if snap.sigma_rows is not None
+                            else snap.sigma_diag
+                        )
+                        with span("solve", cat="transport", worker=g, round=r):
+                            dalpha, db = solve(
+                                x, y, jnp.asarray(snap.alpha_rows),
+                                jnp.asarray(snap.W_rows), n,
+                                jnp.asarray(sig), tids, round_keys[r],
+                            )
+                            dalpha = jax.block_until_ready(dalpha)
+                        if self.pace:
+                            time.sleep(self.pace * self.delays[g])
+                        self.wire_commit(g, r, (dalpha, db))
             except BaseException as e:  # propagate into the driver
                 self._fail(e)
 

@@ -58,10 +58,15 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import hashlib
+import logging
 import threading
 from typing import Dict, List, Optional, Sequence
 
 from .metrics import ServingMetrics
+from ..obs.metrics import publish_serving_metrics
+from ..obs.trace import span
+
+logger = logging.getLogger(__name__)
 from .scheduler import (
     ContinuousBatchingScheduler,
     ModelSnapshot,
@@ -435,12 +440,24 @@ class FleetRouter:
             return self._fail_locked(self._handles[rid], error or "failed by operator")
 
     def _fail_locked(self, h: ReplicaHandle, error: str) -> int:
+        with span("failover", cat="serve", replica=h.id):
+            return self._fail_over(h, error)
+
+    def _fail_over(self, h: ReplicaHandle, error: str) -> int:
         if not h.up:
             return 0
         h.up = False
         h.last_error = error
         self.counters["failovers"] += 1
         stranded = h.scheduler.drain_queue()
+        logger.warning(
+            "replica %d failed at snapshot version %d (%s); failing over "
+            "%d stranded request(s)",
+            h.id,
+            h.scheduler.version,
+            error,
+            len(stranded),
+        )
         moved = 0
         for req in stranded:
             client = getattr(req, "_fleet_client", None)
@@ -490,6 +507,12 @@ class FleetRouter:
             h.last_error = None
             h.restarts += 1
             self.counters["restarts"] += 1
+            logger.info(
+                "replica %d restored at snapshot version %d (restart #%d)",
+                h.id,
+                h.scheduler.version,
+                h.restarts,
+            )
 
     # -- serving ------------------------------------------------------------
     def step(self) -> List[ServeRequest]:
@@ -499,21 +522,22 @@ class FleetRouter:
         over any replica whose engine raised, and return everything that
         completed.  Completions update their clients' monotonic-read
         tokens before the requests are handed back."""
-        with self._lock:
-            self._advance_roll_locked()
-            handles = [h for h in self._handles if h.up]
-        done: List[ServeRequest] = []
-        for h in handles:
-            try:
-                done.extend(h.scheduler.step())
-            except Exception as exc:  # replica crash: fail over, keep serving
-                with self._lock:
-                    self._fail_locked(h, repr(exc))
-        for r in done:
-            client = getattr(r, "_fleet_client", None)
-            if client is not None:
-                client.observe(r.snapshot_version)
-        return done
+        with span("fleet_step", cat="serve", replicas=self.n_up):
+            with self._lock:
+                self._advance_roll_locked()
+                handles = [h for h in self._handles if h.up]
+            done: List[ServeRequest] = []
+            for h in handles:
+                try:
+                    done.extend(h.scheduler.step())
+                except Exception as exc:  # replica crash: fail over, keep serving
+                    with self._lock:
+                        self._fail_locked(h, repr(exc))
+            for r in done:
+                client = getattr(r, "_fleet_client", None)
+                if client is not None:
+                    client.observe(r.snapshot_version)
+            return done
 
     def run_until_idle(self, max_steps: int = 1_000_000) -> int:
         """Step until every queue drains; returns requests completed."""
@@ -547,6 +571,16 @@ class FleetRouter:
         (``ServingMetrics.merge``) into one point-in-time rollup."""
         per = [h.scheduler.metrics for h in self._handles]
         return per[0].merge(*per[1:]) if len(per) > 1 else per[0]
+
+    def publish_metrics(self, registry=None) -> None:
+        """Bridge the fleet's ServingMetrics into the obs registry:
+        the merged rollup as ``replica="all"`` plus one labeled series
+        per replica — the machine-readable autoscaling signals."""
+        publish_serving_metrics(self.metrics(), replica="all", registry=registry)
+        for h in self._handles:
+            publish_serving_metrics(
+                h.scheduler.metrics, replica=str(h.id), registry=registry
+            )
 
     def summary(self) -> Dict[str, object]:
         """JSON-ready fleet record: router counters + merged replica

@@ -33,11 +33,15 @@ subscription) can push snapshots while another thread serves.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from typing import Any, Callable, List, Optional, Sequence
 
 from .metrics import ServingMetrics
+from ..obs.trace import span
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -456,7 +460,7 @@ class ContinuousBatchingScheduler:
         """
         if self._streaming:
             return self._step_streaming()
-        with self._lock:
+        with span("pack", cat="serve"), self._lock:
             now = self.clock()
             self._expire_locked(now)
             self._pickup_engine_snapshot_locked()
@@ -469,11 +473,19 @@ class ContinuousBatchingScheduler:
             snap = self._snapshot
             self.metrics.observe_queue_depth(len(self._queue))
         try:
-            self.engine.run_tile(tile, snap)
+            with span("run_tile", cat="serve", tile=len(tile)):
+                self.engine.run_tile(tile, snap)
         except BaseException:
             # never lose a packed tile: put the requests back at the head
             # of the queue (still "queued", timestamps intact) and let the
             # caller see the engine failure
+            logger.warning(
+                "run_tile failed on snapshot version %d; re-queuing %d "
+                "packed request(s) at the head",
+                snap.version,
+                len(tile),
+                exc_info=True,
+            )
             with self._lock:
                 self._queue[:0] = tile
             raise
@@ -515,7 +527,8 @@ class ContinuousBatchingScheduler:
                 # inject = per-request prefill + first sampled token:
                 # time-to-first-token is paid here, and the request is
                 # stamped with the snapshot it was ADMITTED under
-                self.engine.inject(take, snap)
+                with span("inject", cat="serve", n=len(take)):
+                    self.engine.inject(take, snap)
                 t1 = self.clock()
                 with self._lock:
                     for r in take:
@@ -525,7 +538,8 @@ class ContinuousBatchingScheduler:
                     self.metrics.on_tile(len(take), self.engine.batch)
             occupied = self.engine.active
             if occupied:
-                finished.extend(self.engine.decode_tick())
+                with span("decode_step", cat="serve", occupied=occupied):
+                    finished.extend(self.engine.decode_tick())
             with self._lock:
                 self.metrics.on_decode_step(occupied, self.engine.batch)
         except BaseException:
@@ -535,6 +549,14 @@ class ContinuousBatchingScheduler:
             evicted = self.engine.evict_active()
             ids = {id(r) for r in evicted}
             back = evicted + [r for r in take if id(r) not in ids]
+            logger.warning(
+                "streaming step failed on snapshot version %d; evicted %d "
+                "in-flight and re-queued %d request(s)",
+                snap.version,
+                len(evicted),
+                len(back),
+                exc_info=True,
+            )
             with self._lock:
                 for r in back:
                     r.status = "queued"
